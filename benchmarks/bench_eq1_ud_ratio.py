@@ -1,0 +1,80 @@
+"""Eq. 1 — the Reddit-comments case study.
+
+Two artifacts:
+  1. the paper's *ledger math* from its published constants
+     (15.43 TB / 366.68 GB = 42.067, $4.42/download, $424.32 vs $10.09);
+  2. an event-level reproduction: a 160.68 GB torrent, 96 downloads
+     arriving over ~9 months (Poisson), a slow university-mirror origin
+     (~1 MB/s — the paper's own 500 KB/s observation is the same tier) and
+     fast community peers (34 MB/s class), each seeding ~1 week after
+     completing. The tracker's aggregated ledger yields the simulated U/D.
+
+The mechanism the paper claims is that the *community*, not the origin,
+serves ~98% of bytes once a few seeds exist; the simulation reproduces
+that regime and the measured U/D feeds the Table-1 projection benchmark.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    MetaInfo, SwarmConfig, SwarmSim, accounting, poisson_arrivals,
+    reddit_case_study,
+)
+
+SIZE = 160.68e9
+PIECE = 640e6
+N_DOWNLOADS = 96
+ORIGIN_BPS = 0.5e6        # the paper's own university-mirror tier (500 KB/s)
+PEER_UP = 30e6
+PEER_DOWN = 45e6
+SEED_LINGER = 30 * 86400.0  # institutional seedboxes stay for weeks
+SPAN = 0.75 * 365 * 86400.0
+
+
+def run_simulation(seed: int = 0):
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="reddit2015")
+    cfg = SwarmConfig(choke_interval=3600.0, pipeline=12,
+                      per_peer_requests=2)  # month-scale sim, hourly rechoke
+    sim = SwarmSim(mi, cfg, seed=seed)
+    sim.add_origin(up_bps=ORIGIN_BPS)
+    rng = np.random.default_rng(seed)
+    sim.add_peers(
+        poisson_arrivals(N_DOWNLOADS, N_DOWNLOADS / SPAN, rng),
+        up_bps=PEER_UP, down_bps=PEER_DOWN, seed_linger=SEED_LINGER,
+    )
+    res = sim.run()
+    return mi, res
+
+
+def main(report):
+    ledger = reddit_case_study()
+    report("eq1/paper_ledger_ud", 0.0, f"{ledger['ud_ratio']:.3f}")
+    report("eq1/paper_cost_per_download", 0.0, f"${ledger['cost_per_download']:.2f}")
+    report("eq1/paper_http_bill", 0.0, f"${ledger['http_bill']:.2f}")
+    report("eq1/paper_at_bill", 0.0, f"${ledger['at_bill']:.2f}")
+    assert abs(ledger["ud_ratio"] - accounting.PAPER_UD_RATIO) < 0.05
+
+    t0 = time.perf_counter()
+    mi, res = run_simulation()
+    wall = (time.perf_counter() - t0) * 1e6
+    comp = res.completion_time
+    # steady-state speed: exclude the cold-start cohort (first 8 arrivals),
+    # matching how the paper measured a warm swarm
+    warm = sorted(res.finish_at.items(), key=lambda kv: kv[1])[8:]
+    speeds = [SIZE / comp[pid] for pid, _ in warm]
+    report("eq1/sim_completed", wall, f"{len(comp)}/{N_DOWNLOADS}")
+    report("eq1/sim_ud_ratio", wall, f"{res.ud_ratio:.2f}")
+    report("eq1/sim_origin_uploaded_GB", wall, f"{res.origin_uploaded/1e9:.1f}")
+    report("eq1/sim_total_downloaded_TB", wall, f"{res.total_downloaded/1e12:.2f}")
+    report("eq1/sim_warm_speed_MBps", wall, f"{np.mean(speeds)/1e6:.1f}")
+    assert len(comp) == N_DOWNLOADS, "every download must complete"
+    assert res.ud_ratio > 10.0, "community amplification regime not reached"
+    return res.ud_ratio, float(np.mean(speeds))
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

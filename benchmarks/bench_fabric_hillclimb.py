@@ -1,0 +1,94 @@
+"""§Perf HC3 — hillclimb the distribution fabric on the paper's own metric.
+
+Cell: 128-host, 2-pod cluster cold start of a 40 GB bundle (the
+`bench_cluster_coldstart` scenario). Metric: wall time until EVERY host
+holds the bundle (t_all) + origin egress. Iterations are knob/algorithm
+changes with napkin-math hypotheses; each is measured on the same seeds.
+
+Run standalone: PYTHONPATH=src python -m benchmarks.bench_fabric_hillclimb
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ClusterTopology, MetaInfo, SwarmConfig, SwarmSim
+
+SIZE = 40e9
+HOSTS = 128
+SEEDS = (0, 1)
+
+
+def run(piece: float, locality: bool, same_pod_frac: float,
+        unchoked: int, pipeline: int, seed: int):
+    topo = ClusterTopology(num_pods=2, hosts_per_pod=HOSTS // 2,
+                           host_up_bps=10e9, host_down_bps=10e9,
+                           origin_up_bps=12.5e9)
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(piece), name="hc3")
+    sim = SwarmSim(
+        mi,
+        SwarmConfig(pipeline=pipeline, choke_interval=1.0,
+                    max_unchoked=unchoked),
+        seed=seed,
+        topology=topo if locality else None,
+        same_pod_frac=same_pod_frac,
+    )
+    sim.add_origin(up_bps=topo.origin_up_bps)
+    sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
+                  up_bps=topo.host_up_bps, down_bps=topo.host_down_bps)
+    res = sim.run()
+    assert len(res.completion_time) == HOSTS
+    return max(res.finish_at.values()), res.origin_uploaded
+
+
+ITERATIONS = [
+    # (tag, hypothesis, kwargs)
+    ("i0_baseline",
+     "random peers, 512MB pieces, 4 unchoke slots, pipeline 12",
+     dict(piece=512e6, locality=False, same_pod_frac=1.0, unchoked=4, pipeline=12)),
+    ("i1_strict_locality",
+     "same-pod-first peer lists cut cross-pod bytes; expect origin/DCN load "
+     "down, completion flat-or-better",
+     dict(piece=512e6, locality=True, same_pod_frac=1.0, unchoked=4, pipeline=12)),
+    ("i2_mixed_locality",
+     "strict ranking herds everyone onto the same subset (hot spots) and "
+     "starves cross-pod piece diversity; 70/30 locality-weighted sampling "
+     "should keep the byte win and recover the tail",
+     dict(piece=512e6, locality=True, same_pod_frac=0.7, unchoked=4, pipeline=12)),
+    ("i3_smaller_pieces",
+     "t_all is lower-bounded by (piece/bw)x(pipeline serialization): 512MB "
+     "pieces at 10GB/s are 51ms units and rarest-first granularity is "
+     "coarse; 128MB pieces quadruple scheduling freedom — expect tail cut",
+     dict(piece=128e6, locality=True, same_pod_frac=0.7, unchoked=4, pipeline=12)),
+    ("i4_more_unchoke",
+     "10 GB/s uplinks split into 4 streams leave reciprocation convoys; 8 "
+     "slots + deeper pipeline increase flow parallelism at same capacity",
+     dict(piece=128e6, locality=True, same_pod_frac=0.7, unchoked=8, pipeline=16)),
+]
+
+
+def main(report):
+    results = {}
+    for tag, hyp, kw in ITERATIONS:
+        ts, og = [], []
+        t0 = time.perf_counter()
+        for seed in SEEDS:
+            t_all, origin = run(seed=seed, **kw)
+            ts.append(t_all)
+            og.append(origin)
+        wall = (time.perf_counter() - t0) * 1e6
+        results[tag] = (float(np.mean(ts)), float(np.mean(og)))
+        report(f"fabric_hc/{tag}", wall,
+               f"t_all={np.mean(ts):.2f}s origin={np.mean(og)/1e9:.1f}GB :: {hyp[:70]}")
+    base_t, base_o = results["i0_baseline"]
+    best = min(results.values(), key=lambda v: v[0])
+    report("fabric_hc/summary", 0.0,
+           f"t_all {base_t:.2f}s -> {best[0]:.2f}s "
+           f"({base_t/best[0]:.2f}x); origin {base_o/1e9:.0f}GB -> {best[1]/1e9:.0f}GB")
+    return results
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

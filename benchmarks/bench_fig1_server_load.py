@@ -1,0 +1,66 @@
+"""Fig. 1 — origin load vs swarm size: HTTP scales linearly, HTTP+P2P ~flat.
+
+Sweeps downloader counts; for each, runs the client-server baseline and the
+swarm on identical arrival processes and link capacities, and reports
+origin egress + mean per-client download time. The paper's qualitative
+claim — "while existing systems slow down with more users, the benefits of
+Academic Torrents grow" — becomes two monotonicity assertions.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    MetaInfo, SwarmConfig, SwarmSim, simulate_http, staggered_arrivals,
+)
+
+SIZE = 2e9
+PIECE = 16e6
+ORIGIN = 20e6          # 20 MB/s origin egress
+PEER_UP = 25e6
+PEER_DOWN = 50e6
+
+
+def run_point(n: int, seed: int = 0):
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="fig1")
+    arrivals = staggered_arrivals(n, interval=5.0)
+    http = simulate_http(mi, arrivals, ORIGIN, PEER_DOWN)
+    sim = SwarmSim(mi, SwarmConfig(), seed=seed)
+    sim.add_origin(up_bps=ORIGIN)
+    sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    swarm = sim.run()
+    return http, swarm
+
+
+def main(report):
+    prev_swarm_speed = 0.0
+    rows = {}
+    for n in (2, 8, 32):
+        t0 = time.perf_counter()
+        http, swarm = run_point(n)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows[n] = (http, swarm)
+        report(
+            f"fig1/n{n:02d}", wall,
+            f"http_origin={http.origin_uploaded/1e9:.1f}GB "
+            f"swarm_origin={swarm.origin_uploaded/1e9:.1f}GB "
+            f"http_t={http.mean_completion_time():.0f}s "
+            f"swarm_t={swarm.mean_completion_time():.0f}s",
+        )
+    # linear vs ~flat origin load
+    http_growth = rows[32][0].origin_uploaded / rows[2][0].origin_uploaded
+    swarm_growth = rows[32][1].origin_uploaded / rows[2][1].origin_uploaded
+    report("fig1/origin_growth_32x_vs_2x", 0.0,
+           f"http={http_growth:.1f}x swarm={swarm_growth:.1f}x")
+    assert http_growth > 15.0 and swarm_growth < 6.0
+    # HTTP slows down with users; the swarm does not
+    http_slowdown = rows[32][0].mean_completion_time() / rows[2][0].mean_completion_time()
+    swarm_slowdown = rows[32][1].mean_completion_time() / rows[2][1].mean_completion_time()
+    report("fig1/slowdown_32_vs_2", 0.0,
+           f"http={http_slowdown:.2f}x swarm={swarm_slowdown:.2f}x")
+    assert swarm_slowdown < http_slowdown
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

@@ -1,0 +1,70 @@
+"""Kernel microbench: correctness vs oracle + modeled TPU roofline per tile.
+
+CPU wall time of interpret mode is NOT TPU performance; what we report per
+kernel is (a) max |err| vs the jnp oracle, (b) the modeled arithmetic
+intensity and the roofline-implied TPU time for a production tile — the
+numbers used to pick BlockSpecs (see kernels/*/kernel.py docstrings).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.attention import attention_ref, flash_attention
+from repro.kernels.rglru import rglru_scan, rglru_scan_ref
+from repro.kernels.ssd import ssd_mixer, ssd_ref
+
+PEAK, HBM = 197e12, 819e9
+
+
+def main(report):
+    rng = np.random.default_rng(0)
+
+    # flash attention tile: b1 h1 q128 kv128 d128
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 128)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 1, 128)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 1, 128)), jnp.float32)
+    t0 = time.perf_counter()
+    out = flash_attention(q, k, v, causal=True)
+    wall = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(out - attention_ref(q, k, v, causal=True))))
+    flops = 4 * 128 * 128 * 128 * 2          # qk + pv per head pair
+    bytes_ = (3 * 128 * 128 + 128 * 128) * 2  # q,k,v in + o out (bf16)
+    report("kernels/flash_attention", wall,
+           f"err={err:.1e} AI={flops/bytes_:.0f}flop/B "
+           f"tpu_tile={max(flops/PEAK, bytes_/HBM)*1e9:.1f}ns")
+
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (1, 512, 256)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 512, 256)), jnp.float32)
+    h0 = jnp.zeros((1, 256), jnp.float32)
+    t0 = time.perf_counter()
+    outr = rglru_scan(a, x, h0)
+    wall = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(outr - rglru_scan_ref(a, x, h0))))
+    n = 512 * 256
+    report("kernels/rglru", wall,
+           f"err={err:.1e} AI={3*n/(3*n*4):.2f}flop/B "
+           f"tpu_tile={3*n*4/HBM*1e9:.0f}ns (bandwidth-bound)")
+
+    xs = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (1, 4, 256)), jnp.float32)
+    an = jnp.asarray(-rng.uniform(0.5, 2.0, (4,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(1, 256, 128)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(1, 256, 128)), jnp.float32)
+    t0 = time.perf_counter()
+    outs = ssd_mixer(xs, dt, an, B, C, chunk=64)
+    wall = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(outs - ssd_ref(xs, dt, an, B, C, 64))))
+    q_, p_, n_ = 64, 64, 128
+    flops = 2 * q_ * q_ * n_ + 2 * q_ * q_ * p_ + 4 * q_ * p_ * n_
+    bytes_ = (q_ * p_ + 2 * q_ * n_ + p_ * n_) * 4
+    report("kernels/ssd", wall,
+           f"err={err:.1e} AI={flops/bytes_:.0f}flop/B "
+           f"tpu_chunk={max(flops/PEAK, bytes_/HBM)*1e9:.0f}ns")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

@@ -1,0 +1,42 @@
+"""Data-pipeline throughput: swarm ingest + batcher tokens/sec (host-side)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import CorpusSpec, HostBatcher, ShardedCorpus, loader_from_corpus
+
+
+def main(report):
+    spec = CorpusSpec(num_shards=16, tokens_per_shard=1 << 16,
+                      piece_length=1 << 18)
+    corpus = ShardedCorpus(spec)
+
+    t0 = time.perf_counter()
+    loader = loader_from_corpus(corpus, num_hosts=8, seed=0)
+    rep = loader.ingest("partitioned")
+    dt = time.perf_counter() - t0
+    moved = rep.total_downloaded
+    report("pipeline/swarm_ingest", dt * 1e6,
+           f"{moved/1e6:.0f}MB in {dt:.2f}s = {moved/dt/1e6:.0f}MB/s "
+           f"ud={rep.ud_ratio:.2f} rounds={rep.rounds}")
+
+    shards = [corpus.shard_tokens(i) for i in range(16)]
+    b = HostBatcher(shards, batch_size=16, seq_len=1024)
+    it = iter(b)
+    next(it)
+    t0 = time.perf_counter()
+    n = 200
+    tok = 0
+    for _ in range(n):
+        batch = next(it)
+        tok += batch.tokens.size
+    dt = time.perf_counter() - t0
+    report("pipeline/batcher", dt / n * 1e6,
+           f"{tok/dt/1e6:.1f}M tokens/s host-side")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

@@ -1,0 +1,58 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json.
+
+For every (arch x shape x mesh) cell: the three per-device roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, the roofline-bound MFU,
+and whether the artifact fits 16 GB/chip HBM.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+HBM_BYTES = 16 * 2**30
+
+
+def load_cells(mesh: str | None = None):
+    cells = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        if mesh and d["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def main(report):
+    if not DRYRUN.exists():
+        report("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    n_ok = n_skip = n_err = 0
+    for d in load_cells():
+        key = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d.get("variant"):
+            key += f"/{d['variant']}"
+        if d["status"] == "skip":
+            n_skip += 1
+            report(key, 0.0, "skip (long_500k needs sub-quadratic)")
+            continue
+        if d["status"] != "ok":
+            n_err += 1
+            report(key, 0.0, f"ERROR {d.get('error','')[:80]}")
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        fits = d["memory"]["peak_estimate_bytes"] <= HBM_BYTES
+        report(
+            key, 0.0,
+            f"comp={r['t_compute_s']*1e3:.1f}ms mem={r['t_memory_s']*1e3:.1f}ms "
+            f"coll={r['t_collective_s']*1e3:.1f}ms bn={r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f} mfu_bound={r['mfu_bound']:.3f} "
+            f"peak={d['memory']['peak_estimate_bytes']/2**30:.1f}GiB fits={fits}",
+        )
+    report("roofline/summary", 0.0, f"ok={n_ok} skip={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

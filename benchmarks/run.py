@@ -1,0 +1,79 @@
+"""Benchmark harness — one function per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks import (  # noqa: E402
+    bench_cluster_coldstart,
+    bench_eq1_ud_ratio,
+    bench_fabric_hillclimb,
+    bench_fig1_server_load,
+    bench_kernels,
+    bench_pipeline,
+    bench_roofline,
+    bench_swarm_scaling,
+    bench_table1_costs,
+)
+
+SUITES = {
+    "eq1": bench_eq1_ud_ratio,
+    "table1": bench_table1_costs,
+    "fig1": bench_fig1_server_load,
+    "coldstart": bench_cluster_coldstart,
+    "scaling": bench_swarm_scaling,
+    "pipeline": bench_pipeline,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    # §Perf HC3 iteration suite — ~25 min of event simulation; run via
+    # --only fabric_hc (results recorded in EXPERIMENTS.md §Perf)
+    "fabric_hc": bench_fabric_hillclimb,
+}
+DEFAULT_SUITES = [k for k in SUITES if k != "fabric_hc"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = DEFAULT_SUITES if not args.only else args.only.split(",")
+
+    rows: list[str] = []
+
+    def report(name: str, us: float, derived: str) -> None:
+        line = f"{name},{us:.0f},{derived}"
+        rows.append(line)
+        print(line, flush=True)
+
+    print("name,us_per_call,derived")
+    measured_ud = None
+    failures = []
+    for key in chosen:
+        mod = SUITES[key]
+        t0 = time.perf_counter()
+        try:
+            if key == "eq1":
+                measured_ud, _ = mod.main(report)
+            elif key == "table1":
+                mod.main(report, measured_ud=measured_ud)
+            else:
+                mod.main(report)
+        except Exception as e:  # keep the harness running; record the failure
+            failures.append((key, repr(e)))
+            report(f"{key}/FAILED", (time.perf_counter() - t0) * 1e6, repr(e)[:120])
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: publish a dataset, swarm it to a fleet, train on it.
+
+The 60-second tour of the whole system:
+  1. build a synthetic sharded corpus; its manifest IS a torrent;
+  2. distribute it to 4 "hosts" through the verified byte-level swarm
+     (watch the origin upload ~1 copy while hosts get 4);
+  3. train a small LM on the swarm-ingested tokens for a few steps;
+  4. checkpoint it, and broadcast the checkpoint bundle through the swarm.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import shutil
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.core import LocalSwarm
+from repro.data import CorpusSpec, HostBatcher, ShardedCorpus, loader_from_corpus
+from repro.models import build_model
+from repro.train import Trainer, TrainerConfig, checkpoint_metainfo
+
+
+def main() -> None:
+    print("=== 1. publish a dataset (manifest == torrent) ===")
+    spec = CorpusSpec(num_shards=8, tokens_per_shard=1 << 14,
+                      piece_length=1 << 14, vocab_size=512)
+    corpus = ShardedCorpus(spec)
+    print(f"corpus: {spec.total_tokens} tokens in {spec.num_shards} shards, "
+          f"{corpus.manifest.num_pieces} pieces, "
+          f"infohash {corpus.manifest.info_hash_hex[:16]}…")
+
+    print("\n=== 2. swarm it to 4 hosts ===")
+    loader = loader_from_corpus(corpus, num_hosts=4, seed=0)
+    rep = loader.ingest("full_replica")
+    print(f"origin uploaded {rep.origin_uploaded/1e6:.1f} MB for "
+          f"{rep.total_downloaded/1e6:.1f} MB delivered "
+          f"(U/D amplification {rep.ud_ratio:.1f}x, Eq. 1)")
+
+    print("\n=== 3. train a small LM on host 0's swarm-ingested shards ===")
+    cfg = get_config("granite_3_2b").reduce(vocab_size=512)
+    bundle = build_model(cfg)
+    shards = [loader.host_shard_tokens(0, s) for s in range(spec.num_shards)]
+    batcher = HostBatcher(shards, batch_size=8, seq_len=64)
+    ckpt_dir = "/tmp/repro_quickstart_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    trainer = Trainer(bundle, TrainConfig(learning_rate=3e-3, warmup_steps=5,
+                                          total_steps=60),
+                      batcher, TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=30,
+                                             log_every=15))
+    report = trainer.run(60)
+    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+
+    print("\n=== 4. broadcast the checkpoint through the swarm ===")
+    mi, payload = checkpoint_metainfo(ckpt_dir, 60, piece_length=1 << 16)
+    swarm = LocalSwarm(mi, dict(mi.split_pieces(payload)),
+                       [f"host{i}" for i in range(4)], seed=0)
+    rounds = swarm.run()
+    print(f"checkpoint {mi.length/1e6:.1f} MB replicated to 4 hosts in "
+          f"{rounds} rounds; origin served "
+          f"{swarm.origin.ledger.uploaded/1e6:.1f} MB "
+          f"(U/D {swarm.ud_ratio:.1f}x)")
+    print("\nall four stages OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — swarm-distributed data/checkpoint fabric + multi-pod JAX training.
+
+Reproduction of *Academic Torrents: Scalable Data Distribution* (Lo & Cohen,
+2016) as a production-grade training/inference framework: the paper's P2P
+distribution system is the data/checkpoint plane (`repro.core`,
+`repro.data`), feeding a 10-architecture model zoo (`repro.models`,
+`repro.configs`) trained/served under pjit/shard_map on multi-pod meshes
+(`repro.launch`), with Pallas TPU kernels for the compute hot spots
+(`repro.kernels`).
+"""
+
+__version__ = "1.0.0"

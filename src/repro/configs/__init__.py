@@ -1,0 +1,10 @@
+"""repro.configs — assigned architectures x shapes (DESIGN.md §5)."""
+
+from .base import ModelConfig, ShapeConfig, TrainConfig
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, applicable
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "TrainConfig",
+    "ARCH_IDS", "all_configs", "get_config", "SHAPES", "applicable",
+]

@@ -1,0 +1,51 @@
+"""repro.core — the paper's contribution: P2P data-distribution fabric.
+
+Academic Torrents (Lo & Cohen, 2016) augments a central origin with a
+BitTorrent-style swarm. This package implements that system — metainfo piece
+tables, rarest-first selection, tit-for-tat choking, tracker U/D accounting
+(Eq. 1) — over a deterministic fluid network simulator (time domain) and a
+byte-accurate local engine (functional data plane), plus the TPU-cluster
+adaptations: locality-aware peer ranking and collective-assisted (ICI
+all-gather) replication.
+"""
+
+from .accounting import (
+    AT_SPEED_BPS,
+    CostModel,
+    HTTP_SPEED_BPS,
+    PAPER_UD_RATIO,
+    Projection,
+    TABLE1_DATASETS,
+    paper_table1,
+    project_row,
+    reddit_case_study,
+    ud_ratio,
+)
+from .bitfield import Bitfield, availability
+from .choking import Choker, ChokerConfig, RateWindow
+from .collective_fabric import (
+    ColdstartEstimate,
+    allgather_bundle,
+    broadcast_bundle,
+    bundle_to_bytes,
+    coldstart_time,
+    stripe_shards,
+)
+from .http_baseline import HttpResult, analytic_http, simulate_http
+from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
+from .netsim import FluidNetwork, Flow, Node
+from .peer import Ledger, PeerAgent
+from .swarm import (
+    LocalSwarm,
+    PeerSpec,
+    SwarmConfig,
+    SwarmResult,
+    SwarmSim,
+    flash_crowd,
+    poisson_arrivals,
+    staggered_arrivals,
+)
+from .topology import ClusterTopology, HostAddr
+from .tracker import PeerRecord, SwarmStats, Tracker
+
+__all__ = [k for k in dir() if not k.startswith("_")]

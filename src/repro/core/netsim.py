@@ -1,0 +1,248 @@
+"""Deterministic discrete-event network simulator with max-min fair sharing.
+
+The paper's Table 1 / Fig. 1 claims are statements about *bandwidth
+allocation*: a client-server origin fair-shares its egress across N
+downloads (per-client speed ~ C/N, origin bytes ~ N·size), while a swarm
+lets every downloader's uplink join the serving set. The right fidelity for
+reproducing those claims is a **fluid-flow model**: each active transfer
+gets the max-min fair rate subject to every node's up/down capacity
+(progressive filling), and the simulation advances from rate-change event to
+rate-change event. TCP-level dynamics are deliberately abstracted away
+(DESIGN.md §6) — the paper's own numbers are projections at this same level.
+
+Everything is deterministic: ties break on insertion order, randomness comes
+only from caller-provided seeds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class Node:
+    """A network endpoint with dedicated up/down capacity (bytes/sec)."""
+
+    name: str
+    up_bps: float
+    down_bps: float
+    index: int = -1  # assigned by the network
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class Flow:
+    """One in-flight transfer of ``size`` bytes from ``src`` to ``dst``."""
+
+    fid: int
+    src: Node
+    dst: Node
+    size: float
+    tag: object = None
+    on_complete: Optional[Callable[["Flow", float], None]] = None
+    on_abort: Optional[Callable[["Flow", float], None]] = None
+    remaining: float = 0.0
+    rate: float = 0.0
+    start_time: float = 0.0
+    end_time: float = -1.0
+    aborted: bool = False
+
+    def __post_init__(self) -> None:
+        self.remaining = float(self.size)
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 1e-9 and not self.aborted
+
+
+class FluidNetwork:
+    """Event-driven fluid network. See module docstring."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self.nodes: list[Node] = []
+        self.flows: dict[int, Flow] = {}
+        self._timers: list[tuple[float, int, Callable[[float], None]]] = []
+        self._seq = 0
+        self._fid = 0
+        self._rates_dirty = True
+        # telemetry
+        self.bytes_sent: dict[str, float] = {}
+        self.bytes_received: dict[str, float] = {}
+        self.events_processed = 0
+
+    # ------------------------------------------------------------- topology
+    def add_node(self, name: str, up_bps: float, down_bps: float) -> Node:
+        node = Node(name=name, up_bps=float(up_bps), down_bps=float(down_bps))
+        node.index = len(self.nodes)
+        self.nodes.append(node)
+        self.bytes_sent.setdefault(name, 0.0)
+        self.bytes_received.setdefault(name, 0.0)
+        return node
+
+    def fail_node(self, node: Node) -> None:
+        """Abort all flows touching ``node`` (peer churn / host failure)."""
+        node.failed = True
+        for flow in [f for f in self.flows.values() if f.src is node or f.dst is node]:
+            self.abort_flow(flow)
+
+    # ------------------------------------------------------------- flows/timers
+    def start_flow(
+        self,
+        src: Node,
+        dst: Node,
+        size: float,
+        tag: object = None,
+        on_complete: Optional[Callable[[Flow, float], None]] = None,
+        on_abort: Optional[Callable[[Flow, float], None]] = None,
+    ) -> Flow:
+        if src.failed or dst.failed:
+            raise RuntimeError("flow endpoints must be live")
+        if size <= 0:
+            raise ValueError("flow size must be positive")
+        self._fid += 1
+        flow = Flow(
+            fid=self._fid,
+            src=src,
+            dst=dst,
+            size=float(size),
+            tag=tag,
+            on_complete=on_complete,
+            on_abort=on_abort,
+            start_time=self.now,
+        )
+        self.flows[flow.fid] = flow
+        self._rates_dirty = True
+        return flow
+
+    def abort_flow(self, flow: Flow) -> None:
+        if flow.fid in self.flows:
+            del self.flows[flow.fid]
+            flow.aborted = True
+            flow.end_time = self.now
+            self._rates_dirty = True
+            if flow.on_abort is not None:
+                flow.on_abort(flow, self.now)
+
+    def schedule(self, at: float, callback: Callable[[float], None]) -> None:
+        if at < self.now - 1e-9:
+            raise ValueError(f"cannot schedule in the past ({at} < {self.now})")
+        self._seq += 1
+        heapq.heappush(self._timers, (float(at), self._seq, callback))
+
+    def call_later(self, delay: float, callback: Callable[[float], None]) -> None:
+        self.schedule(self.now + delay, callback)
+
+    # ------------------------------------------------------------- rate assignment
+    def _recompute_rates(self) -> None:
+        """Max-min fair allocation by progressive filling (vectorized).
+
+        All unfrozen flows grow at the same rate until some node side (an
+        uplink or a downlink) saturates; flows through a saturated side
+        freeze at their current rate; repeat.
+        """
+        flows = list(self.flows.values())
+        nf = len(flows)
+        if nf == 0:
+            self._rates_dirty = False
+            return
+        nn = len(self.nodes)
+        src = np.fromiter((f.src.index for f in flows), dtype=np.int64, count=nf)
+        dst = np.fromiter((f.dst.index for f in flows), dtype=np.int64, count=nf)
+        up_cap = np.fromiter((n.up_bps for n in self.nodes), dtype=np.float64, count=nn)
+        down_cap = np.fromiter((n.down_bps for n in self.nodes), dtype=np.float64, count=nn)
+        rate = np.zeros(nf)
+        frozen = np.zeros(nf, dtype=bool)
+        up_alloc = np.zeros(nn)
+        down_alloc = np.zeros(nn)
+
+        for _ in range(2 * nn + 2):  # each iteration saturates >=1 node side
+            active = ~frozen
+            if not active.any():
+                break
+            n_up = np.bincount(src[active], minlength=nn).astype(np.float64)
+            n_down = np.bincount(dst[active], minlength=nn).astype(np.float64)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                du = np.where(n_up > 0, (up_cap - up_alloc) / n_up, INF)
+                dd = np.where(n_down > 0, (down_cap - down_alloc) / n_down, INF)
+            delta = min(du.min(), dd.min())
+            if not math.isfinite(delta):
+                break
+            delta = max(delta, 0.0)
+            rate[active] += delta
+            up_alloc += n_up * delta
+            down_alloc += n_down * delta
+            sat_up = (du <= delta + 1e-12) & (n_up > 0)
+            sat_down = (dd <= delta + 1e-12) & (n_down > 0)
+            newly = active & (sat_up[src] | sat_down[dst])
+            if not newly.any():
+                break
+            frozen |= newly
+
+        for f, r in zip(flows, rate):
+            f.rate = float(r)
+        self._rates_dirty = False
+
+    # ------------------------------------------------------------- event loop
+    def _advance(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        for f in self.flows.values():
+            moved = f.rate * dt
+            f.remaining -= moved
+            self.bytes_sent[f.src.name] += moved
+            self.bytes_received[f.dst.name] += moved
+        self.now += dt
+
+    def _next_completion(self) -> float:
+        t = INF
+        for f in self.flows.values():
+            if f.rate > 0:
+                t = min(t, f.remaining / f.rate)
+        return t
+
+    def run(self, until: float = INF, max_events: int = 50_000_000) -> float:
+        """Run until no work remains or ``until`` is reached. Returns now."""
+        for _ in range(max_events):
+            if self._rates_dirty:
+                self._recompute_rates()
+            t_done = self._next_completion()
+            t_timer = self._timers[0][0] - self.now if self._timers else INF
+            dt = min(t_done, t_timer)
+            if not math.isfinite(dt):
+                if self.flows and not self._timers:
+                    raise RuntimeError(
+                        "deadlock: active flows but zero aggregate rate"
+                    )
+                return self.now  # idle
+            if self.now + dt > until:
+                self._advance(until - self.now)
+                return self.now
+            self._advance(dt)
+            self.events_processed += 1
+            # fire completions (tolerance for float accumulation)
+            finished = [f for f in self.flows.values() if f.remaining <= 1e-6 * max(f.size, 1.0)]
+            for f in finished:
+                f.remaining = 0.0
+                f.end_time = self.now
+                del self.flows[f.fid]
+                self._rates_dirty = True
+            for f in finished:
+                if f.on_complete is not None:
+                    f.on_complete(f, self.now)
+            # fire due timers
+            while self._timers and self._timers[0][0] <= self.now + 1e-9:
+                _, _, cb = heapq.heappop(self._timers)
+                cb(self.now)
+        raise RuntimeError("max_events exceeded — runaway simulation")
+
+    # ------------------------------------------------------------- telemetry
+    def total_bytes_moved(self) -> float:
+        return sum(self.bytes_sent.values())

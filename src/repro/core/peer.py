@@ -1,0 +1,236 @@
+"""Peer agent: per-host swarm participant.
+
+Each training host (and the origin/blob-store) runs one agent. The agent
+owns: its bitfield, its local availability view (sum of neighbor bitfields,
+the rarest-first input), its request pipeline, a tit-for-tat choker for the
+peers it serves, and a byte ledger (the numbers the tracker aggregates into
+Eq. 1). Control messages (Have/Interested/Unchoke) are zero-latency method
+calls — a datacenter control plane, see DESIGN.md §6 — while *payload*
+movement goes through the fluid netsim (time-domain) or a real byte store
+(functional mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .bitfield import Bitfield
+from .choking import Choker, ChokerConfig, RateWindow
+from .metainfo import MetaInfo
+from .netsim import Node
+
+
+@dataclasses.dataclass
+class Ledger:
+    uploaded: float = 0.0          # verified payload bytes served
+    downloaded: float = 0.0        # verified payload bytes received
+    wasted: float = 0.0            # bytes discarded (failed verification / dup)
+    pieces_served: int = 0
+    pieces_received: int = 0
+
+
+@dataclasses.dataclass
+class NeighborState:
+    bitfield: Bitfield
+    unchokes_me: bool = False      # remote allows me to download
+    outstanding: int = 0           # my in-flight requests to this neighbor
+
+
+class PeerAgent:
+    def __init__(
+        self,
+        peer_id: str,
+        metainfo: MetaInfo,
+        rng: np.random.Generator,
+        *,
+        is_origin: bool = False,
+        policy: str = "rarest_first",
+        pipeline: int = 8,
+        per_peer_requests: int = 2,
+        choker_cfg: ChokerConfig | None = None,
+        store: Optional[dict[int, bytes]] = None,
+    ):
+        self.peer_id = peer_id
+        self.metainfo = metainfo
+        self.rng = rng
+        self.is_origin = is_origin
+        self.policy = policy
+        self.pipeline = pipeline
+        self.per_peer_requests = per_peer_requests
+        self.bitfield = (
+            Bitfield.full(metainfo.num_pieces)
+            if is_origin
+            else Bitfield(metainfo.num_pieces)
+        )
+        # payload store: piece index -> bytes (None => size-only simulation)
+        self.store = store
+        self.neighbors: dict[str, NeighborState] = {}
+        self.availability = np.zeros(metainfo.num_pieces, dtype=np.int64)
+        self.choker = Choker(choker_cfg or ChokerConfig(), rng)
+        self.recv_window = RateWindow()
+        self.sent_window = RateWindow()
+        self.ledger = Ledger()
+        self.in_flight: dict[int, str] = {}       # piece -> source peer_id
+        self.endgame_extra: set[int] = set()      # pieces we duplicated in endgame
+        self.node: Node | None = None             # attached by the swarm driver
+        self.arrived_at = 0.0
+        self.completed_at: float | None = 0.0 if is_origin else None
+        self.departed = False
+
+    # ------------------------------------------------------------- predicates
+    @property
+    def complete(self) -> bool:
+        return self.bitfield.complete
+
+    @property
+    def is_seed(self) -> bool:
+        return self.is_origin or self.complete
+
+    def interested_in(self, other_id: str) -> bool:
+        nb = self.neighbors.get(other_id)
+        return nb is not None and self.bitfield.interested_in(nb.bitfield)
+
+    # ------------------------------------------------------------- membership
+    def connect(self, other_id: str, other_bitfield: Bitfield) -> None:
+        if other_id in self.neighbors or other_id == self.peer_id:
+            return
+        self.neighbors[other_id] = NeighborState(bitfield=other_bitfield.copy())
+        self.availability += other_bitfield.as_array()
+
+    def disconnect(self, other_id: str) -> None:
+        nb = self.neighbors.pop(other_id, None)
+        if nb is not None:
+            self.availability -= nb.bitfield.as_array()
+        self.choker.unchoked.discard(other_id)
+
+    def on_have(self, other_id: str, piece: int) -> None:
+        nb = self.neighbors.get(other_id)
+        if nb is not None and not nb.bitfield.has(piece):
+            nb.bitfield.set(piece)
+            self.availability[piece] += 1
+
+    # ------------------------------------------------------------- piece intake
+    def accept_piece(
+        self,
+        piece: int,
+        source_id: str,
+        data: Optional[bytes],
+        now: float,
+        corrupt: bool = False,
+    ) -> bool:
+        """Verify + commit a received piece. Returns False if rejected.
+
+        ``corrupt=True`` forces rejection for size-only simulations (no
+        payload to hash); with payload present, corruption is instead
+        injected into the bytes and *this* verification catches it.
+        """
+        size = self.metainfo.piece_size(piece)
+        self.in_flight.pop(piece, None)
+        self.endgame_extra.discard(piece)
+        nb = self.neighbors.get(source_id)
+        if nb is not None:
+            nb.outstanding = max(0, nb.outstanding - 1)
+        if self.bitfield.has(piece):
+            self.ledger.wasted += size  # endgame duplicate arrival
+            return False
+        if corrupt and data is None:
+            self.ledger.wasted += size
+            return False
+        if data is not None:
+            if not self.metainfo.verify_piece(piece, data):
+                self.ledger.wasted += size
+                return False
+            if self.store is not None:
+                self.store[piece] = data
+        self.bitfield.set(piece)
+        self.ledger.downloaded += size
+        self.ledger.pieces_received += 1
+        self.recv_window.add(source_id, size, now)
+        return True
+
+    def record_served(self, piece: int, dest_id: str, now: float) -> None:
+        size = self.metainfo.piece_size(piece)
+        self.ledger.uploaded += size
+        self.ledger.pieces_served += 1
+        self.sent_window.add(dest_id, size, now)
+
+    def read_piece(self, piece: int) -> Optional[bytes]:
+        if self.store is None:
+            return None
+        return self.store.get(piece)
+
+    # ------------------------------------------------------------- choking
+    def rechoke(self, interested_in_me: set[str], now: float) -> set[str]:
+        return self.choker.rechoke(
+            neighbors=sorted(self.neighbors),
+            interested=interested_in_me,
+            recv_rate=self.recv_window.snapshot(now),
+            is_seed=self.is_seed,
+            sent_rate=self.sent_window.snapshot(now),
+        )
+
+    # ------------------------------------------------------------- request planning
+    def plan_requests(self) -> list[tuple[str, int]]:
+        """Greedy fill of the request pipeline from unchoked neighbors.
+
+        Returns (source_id, piece) pairs to launch, honoring the pipeline
+        depth, the per-neighbor outstanding cap, and the selection policy.
+        Endgame: once every missing piece is in flight, duplicate the
+        stragglers to other holders (first-finisher wins, the duplicate is
+        wasted bytes — that's the cost of tail-latency insurance).
+        """
+        from . import piece_selection as ps
+
+        plans: list[tuple[str, int]] = []
+        if self.is_seed or self.departed:
+            return plans
+        budget = self.pipeline - len(self.in_flight) - len(plans)
+        sources = [
+            (pid, nb)
+            for pid, nb in sorted(self.neighbors.items())
+            if nb.unchokes_me and nb.outstanding < self.per_peer_requests
+        ]
+        self.rng.shuffle(sources)
+        in_flight = set(self.in_flight)
+        for pid, nb in sources:
+            if budget <= 0:
+                break
+            while budget > 0 and nb.outstanding < self.per_peer_requests:
+                piece = ps.select_piece(
+                    self.policy,
+                    self.bitfield,
+                    nb.bitfield,
+                    self.availability,
+                    in_flight,
+                    self.rng,
+                    pieces_held=self.bitfield.count(),
+                )
+                if piece is None:
+                    break
+                plans.append((pid, piece))
+                in_flight.add(piece)
+                nb.outstanding += 1
+                budget -= 1
+
+        # endgame: all missing pieces already in flight -> insure the tail
+        if budget > 0 and ps.in_endgame(self.bitfield, in_flight):
+            for pid, nb in sources:
+                if budget <= 0:
+                    break
+                cand = ps.endgame_candidates(
+                    self.bitfield, nb.bitfield,
+                    self.endgame_extra | {p for s, p in plans if s == pid},
+                )
+                for piece in cand.tolist():
+                    if budget <= 0 or nb.outstanding >= self.per_peer_requests:
+                        break
+                    if self.in_flight.get(piece) == pid:
+                        continue  # never duplicate to the same source
+                    plans.append((pid, int(piece)))
+                    self.endgame_extra.add(int(piece))
+                    nb.outstanding += 1
+                    budget -= 1
+        return plans

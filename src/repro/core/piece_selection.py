@@ -1,0 +1,131 @@
+"""Piece-selection policies.
+
+Rarest-first is what makes the paper's U/D economics work: by preferentially
+replicating the globally scarcest piece, the swarm maximizes source
+diversity, so the origin seeder only has to upload each piece ~once before
+the community can amplify it (Eq. 1's 42×). We also provide ``sequential``
+(streaming ingest for the training data pipeline, where shard order matters)
+and ``random_first`` (BitTorrent's bootstrap heuristic), plus **endgame
+mode** — duplicate requests for the final in-flight pieces, which is the
+fabric-level straggler mitigation (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .bitfield import Bitfield
+
+
+def candidate_pieces(
+    mine: Bitfield,
+    remote: Bitfield,
+    in_flight: set[int],
+) -> np.ndarray:
+    """Pieces ``remote`` can serve that we neither hold nor have requested."""
+    cand = remote.as_array() & ~mine.as_array()
+    if in_flight:
+        cand = cand.copy()
+        cand[np.fromiter(in_flight, dtype=np.int64)] = False
+    return np.flatnonzero(cand)
+
+
+def rarest_first(
+    mine: Bitfield,
+    remote: Bitfield,
+    availability: np.ndarray,
+    in_flight: set[int],
+    rng: np.random.Generator,
+) -> Optional[int]:
+    """Pick the candidate piece with minimal swarm availability.
+
+    Ties are broken uniformly at random (the BitTorrent behaviour) — without
+    random tie-breaks every leecher converges on the same piece and the
+    swarm serializes behind one uploader.
+    """
+    cand = candidate_pieces(mine, remote, in_flight)
+    if cand.size == 0:
+        return None
+    avail = availability[cand]
+    best = cand[avail == avail.min()]
+    return int(best[rng.integers(len(best))])
+
+
+def sequential(
+    mine: Bitfield,
+    remote: Bitfield,
+    availability: np.ndarray,
+    in_flight: set[int],
+    rng: np.random.Generator,
+) -> Optional[int]:
+    """Lowest-index candidate — streaming order for pipeline ingest."""
+    del availability, rng
+    cand = candidate_pieces(mine, remote, in_flight)
+    return int(cand[0]) if cand.size else None
+
+
+def random_first(
+    mine: Bitfield,
+    remote: Bitfield,
+    availability: np.ndarray,
+    in_flight: set[int],
+    rng: np.random.Generator,
+) -> Optional[int]:
+    """Uniform-random candidate (bootstrap: get *something* to trade fast)."""
+    del availability
+    cand = candidate_pieces(mine, remote, in_flight)
+    if cand.size == 0:
+        return None
+    return int(cand[rng.integers(cand.size)])
+
+
+POLICIES = {
+    "rarest_first": rarest_first,
+    "sequential": sequential,
+    "random_first": random_first,
+}
+
+
+def select_piece(
+    policy: str,
+    mine: Bitfield,
+    remote: Bitfield,
+    availability: np.ndarray,
+    in_flight: set[int],
+    rng: np.random.Generator,
+    pieces_held: int = 0,
+    random_bootstrap: int = 4,
+) -> Optional[int]:
+    """Dispatch with the standard bootstrap hybrid: the first few pieces are
+    chosen at random (fast trade currency), then the policy takes over."""
+    if policy == "rarest_first" and pieces_held < random_bootstrap:
+        got = random_first(mine, remote, availability, in_flight, rng)
+        if got is not None:
+            return got
+    return POLICIES[policy](mine, remote, availability, in_flight, rng)
+
+
+def endgame_candidates(
+    mine: Bitfield,
+    remote: Bitfield,
+    duplicated: set[int],
+) -> np.ndarray:
+    """In endgame, everything missing (even if in flight) is fair game except
+    pieces we've already duplicated to this degree."""
+    cand = remote.as_array() & ~mine.as_array()
+    if duplicated:
+        cand = cand.copy()
+        cand[np.fromiter(duplicated, dtype=np.int64)] = False
+    return np.flatnonzero(cand)
+
+
+def in_endgame(mine: Bitfield, in_flight: set[int], threshold: float = 1.0) -> bool:
+    """Endgame once every missing piece is already requested (classic rule),
+    or — with threshold<1 — once the missing set is small enough."""
+    missing = len(mine) - mine.count()
+    if missing == 0:
+        return False
+    covered = sum(1 for p in in_flight if not mine.has(p))
+    return covered >= missing * threshold

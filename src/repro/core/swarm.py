@@ -1,0 +1,514 @@
+"""Swarm drivers.
+
+Two engines share the same piece/choke/selection logic:
+
+* :class:`SwarmSim` — **time-domain**: peers exchange pieces over the fluid
+  netsim; produces completion times, origin load, and the tracker ledger
+  (Eq. 1 U/D). This is what reproduces Table 1 / Fig. 1 and the cluster
+  cold-start benchmarks.
+* :class:`LocalSwarm` — **byte-domain**: a round-based engine that actually
+  moves verified bytes between in-process stores. This is the functional
+  data plane used by ``repro.data.swarm_loader`` to ingest dataset shards
+  and by checkpoint broadcast; on a real fleet each agent would live on one
+  host, with the same code driving socket transports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from .choking import ChokerConfig
+from .metainfo import MetaInfo
+from .netsim import FluidNetwork, Flow
+from .peer import Ledger, PeerAgent
+from .topology import ClusterTopology
+from .tracker import SwarmStats, Tracker
+
+# --------------------------------------------------------------------------- config
+
+
+@dataclasses.dataclass
+class SwarmConfig:
+    policy: str = "rarest_first"
+    pipeline: int = 8
+    per_peer_requests: int = 2
+    max_neighbors: int = 40
+    choke_interval: float = 10.0
+    max_unchoked: int = 4
+    optimistic_slots: int = 1
+    corruption_prob: float = 0.0   # fault injection: pieces that fail verification
+    endgame: bool = True
+
+
+@dataclasses.dataclass
+class PeerSpec:
+    peer_id: str
+    arrive_at: float
+    up_bps: float
+    down_bps: float
+    seed_linger: Optional[float] = None  # None => seed forever; 0 => leave at completion
+
+
+@dataclasses.dataclass
+class SwarmResult:
+    sim_time: float
+    stats: SwarmStats
+    completion_time: dict[str, float]       # peer -> (complete - arrive) seconds
+    finish_at: dict[str, float]
+    ledgers: dict[str, Ledger]
+    origin_uploaded: float
+    total_downloaded: float
+    events: int
+
+    @property
+    def ud_ratio(self) -> float:
+        """Eq. 1: total community download / origin upload."""
+        if self.origin_uploaded <= 0:
+            return float("inf") if self.total_downloaded else 0.0
+        return self.total_downloaded / self.origin_uploaded
+
+    def mean_completion_time(self) -> float:
+        if not self.completion_time:
+            return 0.0
+        return float(np.mean(list(self.completion_time.values())))
+
+    def mean_download_speed(self, size_bytes: float) -> float:
+        t = self.mean_completion_time()
+        return size_bytes / t if t > 0 else float("inf")
+
+
+# --------------------------------------------------------------------------- arrivals
+
+
+def flash_crowd(n: int, at: float = 0.0, prefix: str = "peer") -> list[tuple[str, float]]:
+    return [(f"{prefix}{i:04d}", at) for i in range(n)]
+
+
+def staggered_arrivals(
+    n: int, interval: float, start: float = 0.0, prefix: str = "peer"
+) -> list[tuple[str, float]]:
+    return [(f"{prefix}{i:04d}", start + i * interval) for i in range(n)]
+
+
+def poisson_arrivals(
+    n: int, rate_per_sec: float, rng: np.random.Generator, prefix: str = "peer"
+) -> list[tuple[str, float]]:
+    gaps = rng.exponential(1.0 / rate_per_sec, size=n)
+    times = np.cumsum(gaps)
+    return [(f"{prefix}{i:04d}", float(times[i])) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- time-domain sim
+
+
+class SwarmSim:
+    """Event-driven swarm over the fluid network (see module docstring)."""
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        cfg: SwarmConfig | None = None,
+        seed: int = 0,
+        topology: Optional[ClusterTopology] = None,
+        origin_payload: Optional[dict[int, bytes]] = None,
+        same_pod_frac: float = 1.0,
+    ):
+        self.metainfo = metainfo
+        self.cfg = cfg or SwarmConfig()
+        self.rng = np.random.default_rng(seed)
+        self.net = FluidNetwork()
+        self.topology = topology
+        self.tracker = Tracker(
+            rng=np.random.default_rng(seed + 1), topology=topology,
+            same_pod_frac=same_pod_frac,
+        )
+        self.tracker.register(metainfo)
+        self.agents: dict[str, PeerAgent] = {}
+        self._origin_payload = origin_payload
+        self._tick_scheduled = False
+        self._pending_arrivals = 0
+
+    # ------------------------------------------------------------- membership
+    def _new_agent(self, peer_id: str, is_origin: bool) -> PeerAgent:
+        store = None
+        if self._origin_payload is not None:
+            store = dict(self._origin_payload) if is_origin else {}
+        agent = PeerAgent(
+            peer_id,
+            self.metainfo,
+            np.random.default_rng(self.rng.integers(2**63)),
+            is_origin=is_origin,
+            policy=self.cfg.policy,
+            pipeline=self.cfg.pipeline,
+            per_peer_requests=self.cfg.per_peer_requests,
+            choker_cfg=ChokerConfig(
+                max_unchoked=self.cfg.max_unchoked,
+                optimistic_slots=self.cfg.optimistic_slots,
+                interval=self.cfg.choke_interval,
+            ),
+            store=store,
+        )
+        self.agents[peer_id] = agent
+        return agent
+
+    def add_origin(
+        self, up_bps: float, name: str = "origin", down_bps: float = 1.0
+    ) -> PeerAgent:
+        agent = self._new_agent(name, is_origin=True)
+        agent.node = self.net.add_node(name, up_bps, down_bps)
+        self.tracker.announce(
+            self.metainfo, name, uploaded=0, downloaded=0,
+            event="started", now=self.net.now, is_origin=True,
+        )
+        return agent
+
+    def add_peer(self, spec: PeerSpec) -> None:
+        self._pending_arrivals += 1
+        self.net.schedule(spec.arrive_at, lambda now, s=spec: self._on_arrival(s, now))
+
+    def add_peers(self, arrivals: Iterable[tuple[str, float]],
+                  up_bps: float, down_bps: float,
+                  seed_linger: Optional[float] = None) -> None:
+        for pid, t in arrivals:
+            self.add_peer(PeerSpec(pid, t, up_bps, down_bps, seed_linger))
+
+    # ------------------------------------------------------------- event handlers
+    def _on_arrival(self, spec: PeerSpec, now: float) -> None:
+        self._pending_arrivals -= 1
+        agent = self._new_agent(spec.peer_id, is_origin=False)
+        agent.node = self.net.add_node(spec.peer_id, spec.up_bps, spec.down_bps)
+        agent.arrived_at = now
+        agent.seed_linger = spec.seed_linger  # type: ignore[attr-defined]
+        peer_list = self.tracker.announce(
+            self.metainfo, spec.peer_id, uploaded=0, downloaded=0,
+            event="started", now=now, want_peers=self.cfg.max_neighbors,
+        )
+        for other_id in peer_list:
+            other = self.agents.get(other_id)
+            if other is None or other.departed:
+                continue
+            if len(agent.neighbors) >= self.cfg.max_neighbors:
+                break
+            agent.connect(other_id, other.bitfield)
+            other.connect(agent.peer_id, agent.bitfield)
+        self._rechoke_all(now)
+        self._ensure_tick(now)
+        self._launch(agent, now)
+
+    def _ensure_tick(self, now: float) -> None:
+        if not self._tick_scheduled:
+            self._tick_scheduled = True
+            self.net.schedule(now + self.cfg.choke_interval, self._choke_tick)
+
+    def _choke_tick(self, now: float) -> None:
+        self._rechoke_all(now)
+        live_leech = any(
+            not a.is_seed and not a.departed for a in self.agents.values()
+        )
+        if live_leech or self._pending_arrivals > 0:
+            self.net.schedule(now + self.cfg.choke_interval, self._choke_tick)
+        else:
+            self._tick_scheduled = False
+
+    def _rechoke_all(self, now: float) -> None:
+        for agent in self.agents.values():
+            if agent.departed:
+                continue
+            interested = {
+                pid
+                for pid in agent.neighbors
+                if (nb := self.agents.get(pid)) is not None
+                and not nb.departed
+                and not nb.is_seed
+                and nb.interested_in(agent.peer_id)
+            }
+            unchoked = agent.rechoke(interested, now)
+            for pid in agent.neighbors:
+                other = self.agents.get(pid)
+                if other is None or other.departed:
+                    continue
+                state = other.neighbors.get(agent.peer_id)
+                if state is None:
+                    continue
+                newly = pid in unchoked and not state.unchokes_me
+                state.unchokes_me = pid in unchoked
+                if newly:
+                    self._launch(other, now)
+
+    def _launch(self, agent: PeerAgent, now: float) -> None:
+        if agent.departed or agent.node is None:
+            return
+        if not self.cfg.endgame:
+            agent.endgame_extra.clear()
+        for src_id, piece in agent.plan_requests():
+            src = self.agents[src_id]
+            if src.node is None or src.node.failed:
+                continue
+            agent.in_flight.setdefault(piece, src_id)
+            self.net.start_flow(
+                src.node,
+                agent.node,
+                self.metainfo.piece_size(piece),
+                tag=(src_id, agent.peer_id, piece),
+                on_complete=self._on_piece_done,
+                on_abort=self._on_piece_abort,
+            )
+
+    def _on_piece_done(self, flow: Flow, now: float) -> None:
+        src_id, dst_id, piece = flow.tag
+        src, dst = self.agents.get(src_id), self.agents.get(dst_id)
+        if dst is None or dst.departed:
+            return
+        data = src.read_piece(piece) if src is not None else None
+        corrupt = (
+            self.cfg.corruption_prob > 0
+            and self.rng.random() < self.cfg.corruption_prob
+        )
+        if corrupt and data is not None:
+            data = bytes([data[0] ^ 0xFF]) + data[1:]  # verification will catch it
+        accepted = dst.accept_piece(piece, src_id, data, now, corrupt=corrupt)
+        if src is not None and not src.departed:
+            src.record_served(piece, dst_id, now)
+            self._announce_counters(src, now)
+        if accepted:
+            # cancel endgame duplicates still in flight for this piece
+            for other_flow in list(self.net.flows.values()):
+                _, ofdst, ofpiece = other_flow.tag
+                if ofdst == dst_id and ofpiece == piece:
+                    self.net.abort_flow(other_flow)
+            have_targets = []
+            for pid in dst.neighbors:
+                other = self.agents.get(pid)
+                if other is not None and not other.departed:
+                    other.on_have(dst_id, piece)
+                    have_targets.append(other)
+            self._announce_counters(dst, now)
+            # a Have can unblock a stalled neighbor (new candidate piece)
+            for other in have_targets:
+                if not other.is_seed:
+                    self._launch(other, now)
+            if dst.complete and dst.completed_at is None:
+                dst.completed_at = now
+                self.tracker.announce(
+                    self.metainfo, dst_id,
+                    uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
+                    event="completed", now=now,
+                )
+                linger = getattr(dst, "seed_linger", None)
+                if linger is not None:
+                    self.net.schedule(
+                        now + linger, lambda t, a=dst: self._depart(a, t)
+                    )
+        self._launch(dst, now)
+
+    def _on_piece_abort(self, flow: Flow, now: float) -> None:
+        src_id, dst_id, piece = flow.tag
+        dst = self.agents.get(dst_id)
+        if dst is None or dst.departed:
+            return
+        if dst.in_flight.get(piece) == src_id:
+            del dst.in_flight[piece]
+        nb = dst.neighbors.get(src_id)
+        if nb is not None:
+            nb.outstanding = max(0, nb.outstanding - 1)
+        dst.endgame_extra.discard(piece)
+        self._launch(dst, now)
+
+    def _announce_counters(self, agent: PeerAgent, now: float) -> None:
+        self.tracker.announce(
+            self.metainfo, agent.peer_id,
+            uploaded=agent.ledger.uploaded, downloaded=agent.ledger.downloaded,
+            event="update", now=now, is_origin=agent.is_origin,
+        )
+
+    def _depart(self, agent: PeerAgent, now: float) -> None:
+        if agent.departed:
+            return
+        agent.departed = True
+        self.tracker.announce(
+            self.metainfo, agent.peer_id,
+            uploaded=agent.ledger.uploaded, downloaded=agent.ledger.downloaded,
+            event="stopped", now=now,
+        )
+        if agent.node is not None:
+            self.net.fail_node(agent.node)
+        for pid in list(agent.neighbors):
+            other = self.agents.get(pid)
+            if other is not None:
+                other.disconnect(agent.peer_id)
+            agent.disconnect(pid)
+
+    def fail_peer(self, peer_id: str) -> None:
+        """External fault injection: hard-kill a live peer (node failure)."""
+        agent = self.agents.get(peer_id)
+        if agent is not None and not agent.departed:
+            self._depart(agent, self.net.now)
+
+    # ------------------------------------------------------------- run
+    def run(self, until: float = float("inf")) -> SwarmResult:
+        self.net.run(until=until)
+        stats = self.tracker.scrape(self.metainfo)
+        comp, fin = {}, {}
+        for pid, a in self.agents.items():
+            if not a.is_origin and a.completed_at is not None:
+                comp[pid] = a.completed_at - a.arrived_at
+                fin[pid] = a.completed_at
+        return SwarmResult(
+            sim_time=self.net.now,
+            stats=stats,
+            completion_time=comp,
+            finish_at=fin,
+            ledgers={pid: a.ledger for pid, a in self.agents.items()},
+            origin_uploaded=stats.origin_uploaded,
+            total_downloaded=stats.total_downloaded,
+            events=self.net.events_processed,
+        )
+
+
+# --------------------------------------------------------------------------- byte-domain engine
+
+
+class LocalSwarm:
+    """Round-based functional swarm that moves *real, verified* bytes.
+
+    Every peer is mutually connected and unchoked; fairness is enforced by
+    an ``upload_slots`` budget per peer per round (the round is the unit of
+    "time"). Selection is rarest-first by default, so the emergent behaviour
+    matches :class:`SwarmSim`; rounds-to-completion is the scale-free
+    analogue of distribution time and is what the data-pipeline tests
+    assert on.
+    """
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        origin_store: dict[int, bytes],
+        peer_ids: Sequence[str],
+        seed: int = 0,
+        policy: str = "rarest_first",
+        upload_slots: int = 4,
+        origin_slots: int = 4,
+        needed: Optional[dict[str, np.ndarray]] = None,
+    ):
+        """``needed``: optional per-peer bool mask (num_pieces,) restricting
+        which pieces that peer must obtain (partitioned ingest — each data-
+        parallel host fetches only its assigned shards). Peers still serve
+        everything they hold, so the swarm amplification is unchanged."""
+        self.metainfo = metainfo
+        self.rng = np.random.default_rng(seed)
+        self.policy = policy
+        self.upload_slots = upload_slots
+        self.origin_slots = origin_slots
+        self.needed = needed or {}
+        self.origin = PeerAgent(
+            "origin", metainfo, np.random.default_rng(seed + 1),
+            is_origin=True, store=dict(origin_store),
+        )
+        self.peers: dict[str, PeerAgent] = {}
+        for i, pid in enumerate(peer_ids):
+            self.peers[pid] = PeerAgent(
+                pid, metainfo, np.random.default_rng(seed + 2 + i),
+                policy=policy, store={},
+            )
+        everyone = {**self.peers, "origin": self.origin}
+        for pid, agent in everyone.items():
+            for oid, other in everyone.items():
+                if pid != oid:
+                    agent.connect(oid, other.bitfield)
+        self.rounds = 0
+
+    def _agent(self, pid: str) -> PeerAgent:
+        return self.origin if pid == "origin" else self.peers[pid]
+
+    def _peer_done(self, pid: str) -> bool:
+        me = self.peers[pid]
+        mask = self.needed.get(pid)
+        if mask is None:
+            return me.complete
+        return bool((me.bitfield.as_array() | ~mask).all())
+
+    @property
+    def complete(self) -> bool:
+        return all(self._peer_done(pid) for pid in self.peers)
+
+    def _select(self, me: PeerAgent, nb_bitfield, mask) -> Optional[int]:
+        from . import piece_selection as ps
+
+        if mask is None:
+            return ps.select_piece(
+                self.policy, me.bitfield, nb_bitfield,
+                me.availability, set(), me.rng,
+                pieces_held=me.bitfield.count(),
+            )
+        cand = np.flatnonzero(nb_bitfield.as_array() & ~me.bitfield.as_array() & mask)
+        if cand.size == 0:
+            return None
+        if self.policy == "sequential":
+            return int(cand[0])
+        avail = me.availability[cand]
+        best = cand[avail == avail.min()]
+        return int(best[me.rng.integers(len(best))])
+
+    def step(self) -> int:
+        """One round; returns number of pieces moved."""
+        self.rounds += 1
+        budget = {pid: self.upload_slots for pid in self.peers}
+        budget["origin"] = self.origin_slots
+        moved = 0
+        order = sorted(self.peers)
+        self.rng.shuffle(order)
+
+        for pid in order:
+            me = self.peers[pid]
+            if self._peer_done(pid):
+                continue
+            mask = self.needed.get(pid)
+            for _ in range(me.pipeline):
+                sources = [
+                    (oid, nb) for oid, nb in sorted(me.neighbors.items())
+                    if budget.get(oid, 0) > 0
+                ]
+                self.rng.shuffle(sources)
+                got = None
+                for oid, nb in sources:
+                    piece = self._select(me, nb.bitfield, mask)
+                    if piece is None:
+                        continue
+                    src = self._agent(oid)
+                    data = src.read_piece(piece)
+                    if data is None:
+                        continue
+                    if me.accept_piece(piece, oid, data, float(self.rounds)):
+                        src.record_served(piece, pid, float(self.rounds))
+                        budget[oid] -= 1
+                        moved += 1
+                        got = piece
+                        for wid, w in {**self.peers, "origin": self.origin}.items():
+                            if wid != pid:
+                                w.on_have(pid, piece)
+                    break
+                if got is None:
+                    break
+        return moved
+
+    def run(self, max_rounds: int = 100_000) -> int:
+        while not self.complete:
+            if self.rounds >= max_rounds:
+                raise RuntimeError("LocalSwarm did not converge")
+            if self.step() == 0 and not self.complete:
+                raise RuntimeError("LocalSwarm stalled (no eligible transfer)")
+        return self.rounds
+
+    def ledgers(self) -> dict[str, Ledger]:
+        out = {pid: a.ledger for pid, a in self.peers.items()}
+        out["origin"] = self.origin.ledger
+        return out
+
+    @property
+    def ud_ratio(self) -> float:
+        up = self.origin.ledger.uploaded
+        down = sum(a.ledger.downloaded for a in self.peers.values())
+        return down / up if up > 0 else float("inf")

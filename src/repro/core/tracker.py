@@ -1,0 +1,127 @@
+"""Tracker: peer discovery + the swarm ledger behind Eq. 1.
+
+The tracker is where the paper's headline number lives: it aggregates every
+peer's announced upload/download counters, so ``ud_ratio()`` is computed the
+same way the paper computes 15.43 TB / 366.68 GB = 42.067. In the cluster
+adaptation the tracker is an in-process service (a real deployment would
+back it with the job scheduler's membership service); announce is a function
+call, not an HTTP long-poll (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .metainfo import MetaInfo
+from .topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class PeerRecord:
+    peer_id: str
+    uploaded: float = 0.0     # payload bytes this peer has served
+    downloaded: float = 0.0   # payload bytes this peer has received
+    complete: bool = False
+    left: bool = False
+    arrived_at: float = 0.0
+    completed_at: float = -1.0
+    is_origin: bool = False
+
+
+@dataclasses.dataclass
+class SwarmStats:
+    seeders: int
+    leechers: int
+    total_uploaded: float
+    total_downloaded: float
+    origin_uploaded: float
+    completed: int
+
+    @property
+    def ud_ratio(self) -> float:
+        """Eq. 1: community download amplification over origin upload."""
+        if self.origin_uploaded <= 0:
+            return float("inf") if self.total_downloaded > 0 else 0.0
+        return self.total_downloaded / self.origin_uploaded
+
+
+class Tracker:
+    """One tracker instance may serve many torrents (infohash-keyed)."""
+
+    def __init__(self, rng: np.random.Generator | None = None,
+                 topology: Optional[ClusterTopology] = None,
+                 same_pod_frac: float = 1.0):
+        self.rng = rng or np.random.default_rng(0)
+        self.topology = topology
+        self.same_pod_frac = same_pod_frac
+        self._swarms: dict[bytes, dict[str, PeerRecord]] = {}
+
+    # ------------------------------------------------------------- registration
+    def register(self, metainfo: MetaInfo) -> None:
+        self._swarms.setdefault(metainfo.info_hash, {})
+
+    def _swarm(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:
+        if metainfo.info_hash not in self._swarms:
+            raise KeyError(f"unknown torrent {metainfo.name}")
+        return self._swarms[metainfo.info_hash]
+
+    # ------------------------------------------------------------- announce
+    def announce(
+        self,
+        metainfo: MetaInfo,
+        peer_id: str,
+        *,
+        uploaded: float,
+        downloaded: float,
+        event: str = "update",   # started | update | completed | stopped
+        now: float = 0.0,
+        is_origin: bool = False,
+        want_peers: int = 40,
+    ) -> list[str]:
+        swarm = self._swarm(metainfo)
+        rec = swarm.get(peer_id)
+        if rec is None:
+            rec = PeerRecord(peer_id=peer_id, arrived_at=now, is_origin=is_origin)
+            swarm[peer_id] = rec
+        rec.uploaded = float(uploaded)
+        rec.downloaded = float(downloaded)
+        if event == "completed":
+            rec.complete = True
+            rec.completed_at = now
+        elif event == "stopped":
+            rec.left = True
+
+        candidates = [
+            pid
+            for pid, r in swarm.items()
+            if pid != peer_id and not r.left
+        ]
+        if self.topology is not None:
+            candidates = self.topology.rank_peers(
+                peer_id, candidates, rng=self.rng,
+                same_pod_frac=self.same_pod_frac,
+            )
+            return candidates[:want_peers]
+        if len(candidates) > want_peers:
+            idx = self.rng.choice(len(candidates), size=want_peers, replace=False)
+            candidates = [candidates[i] for i in sorted(idx)]
+        return candidates
+
+    # ------------------------------------------------------------- scrape
+    def scrape(self, metainfo: MetaInfo) -> SwarmStats:
+        swarm = self._swarm(metainfo)
+        live = [r for r in swarm.values() if not r.left]
+        return SwarmStats(
+            seeders=sum(1 for r in live if r.complete or r.is_origin),
+            leechers=sum(1 for r in live if not (r.complete or r.is_origin)),
+            total_uploaded=sum(r.uploaded for r in swarm.values()),
+            total_downloaded=sum(r.downloaded for r in swarm.values()),
+            origin_uploaded=sum(r.uploaded for r in swarm.values() if r.is_origin),
+            completed=sum(1 for r in swarm.values() if r.complete),
+        )
+
+    def records(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:
+        return dict(self._swarm(metainfo))

@@ -1,0 +1,54 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout (model code uses (B,S,H,D); the kernel wants (B,H,S,D)),
+sequence padding to block multiples, and GQA head mapping. ``interpret``
+defaults to True (CPU validation); a TPU deployment passes False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_kv", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,                 # (B, Sq, Hq, D)
+    k: jax.Array,                 # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, max(sq, 8))
+    bkv = min(block_kv, max(skv, 8))
+    pad_q = (-sq) % bq
+    pad_kv = (-skv) % bkv
+
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_kv=bkv,
+        sq_valid=sq, skv_valid=skv,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)[:, :sq]

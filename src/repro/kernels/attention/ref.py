@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (Sq, Skv) score matrix in fp32 — O(S^2) memory, only
+usable at test scale, but unambiguous. Supports causal, sliding window,
+GQA (Hq = G x Hkv), attention logit softcap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(
+    q: jax.Array,               # (B, Sq, Hq, D)
+    k: jax.Array,               # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,            # 0 => unbounded
+    q_offset: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d) / np.sqrt(d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    if softcap > 0:
+        s = softcap_fn(s, softcap)
+    q_idx = q_offset + jnp.arange(sq)
+    k_idx = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_idx[:, None] >= k_idx[None, :]
+    if window > 0:
+        mask &= q_idx[:, None] - k_idx[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def softcap_fn(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,4 @@
+from .ops import device_checksum, verify_replicas
+from .ref import checksum_ref
+
+__all__ = ["device_checksum", "checksum_ref", "verify_replicas"]

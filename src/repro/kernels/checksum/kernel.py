@@ -1,0 +1,66 @@
+"""On-device piece-verification checksum Pallas kernel.
+
+The data-integrity layer for device-resident bundles: after a checkpoint
+or dataset shard is broadcast over the fabric (swarm or ICI all-gather),
+each host verifies its device-resident copy WITHOUT a device->host copy of
+the payload. Fletcher-64-style dual running sums over int32 lanes —
+associative per block, so each grid step folds one VMEM tile into two
+scalar accumulators held in SMEM-like scratch. (SHA-256 stays on the host
+for wire-format compatibility with the tracker's piece table; this kernel
+covers the on-device replication fabric, where both endpoints share the
+algorithm — see DESIGN.md §6.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MOD = 65521  # largest prime < 2^16 (Adler-32's modulus)
+
+
+def _checksum_kernel(x_ref, o_ref, acc_ref, *, nblocks: int, bsz: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mod = jnp.uint32(MOD)
+    x = x_ref[...].astype(jnp.uint32)
+    s1 = jnp.sum(x % mod) % mod
+    # position-weighted sum makes the checksum order-sensitive
+    w = (jax.lax.broadcasted_iota(jnp.uint32, (bsz,), 0) + 1) % mod
+    s2 = jnp.sum((x % mod) * w % mod) % mod
+    prev1 = acc_ref[0]
+    prev2 = acc_ref[1]
+    # fold block: s2_total += s1_prev * bsz + s2_block  (Fletcher composition)
+    acc_ref[0] = (prev1 + s1) % mod
+    acc_ref[1] = (prev2 + (prev1 * jnp.uint32(bsz % MOD)) % mod + s2) % mod
+
+    @pl.when(i == nblocks - 1)
+    def _emit():
+        o_ref[0] = acc_ref[0]
+        o_ref[1] = acc_ref[1]
+
+
+def checksum_u32(x: jax.Array, *, block: int = 2048, interpret: bool = True):
+    """x: flat uint32/int32 vector (padded to block multiple by ops.py).
+    Returns (2,) uint32: (sum, weighted-sum) both mod 65521."""
+    n = x.shape[0]
+    assert n % block == 0
+    nb = n // block
+    kernel = functools.partial(_checksum_kernel, nblocks=nb, bsz=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((2,), jnp.uint32)],
+        interpret=interpret,
+    )(x.astype(jnp.uint32))

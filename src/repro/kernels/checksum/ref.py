@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the device checksum."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MOD = 65521
+
+
+def checksum_ref(x, block: int = 2048):
+    x = x.astype(jnp.uint32) % MOD
+    n = x.shape[0]
+    s1_total = jnp.uint32(0)
+    s2_total = jnp.uint32(0)
+    for start in range(0, n, block):
+        blk = x[start : start + block]
+        w = (jnp.arange(1, blk.shape[0] + 1, dtype=jnp.uint32)) % MOD
+        s1 = jnp.sum(blk) % MOD
+        s2 = jnp.sum(blk * w % MOD) % MOD
+        s2_total = (s2_total + s1_total * (block % MOD) % MOD + s2) % MOD
+        s1_total = (s1_total + s1) % MOD
+    return jnp.stack([s1_total, s2_total]).astype(jnp.uint32)

@@ -1,0 +1,66 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+Grid (batch, time_block) with time the fastest dim: the hidden state h
+(width,) lives in VMEM scratch and persists across sequential time blocks.
+Within a block the recurrence h_t = a_t*h + b_t runs as a `fori_loop` of
+width-wide VPU ops over VMEM-resident tiles — the HBM traffic is exactly
+one read of (a, b) and one write of h per element, which is the memory
+roofline for a recurrence (arithmetic intensity ~1 flop/byte: this kernel
+is bandwidth-bound by construction, matching the Griffin paper's analysis).
+
+Block shape (bt, width): width padded to lane multiples by ops.py; bt=256
+keeps the tile (3 x bt x width x 4B ~ 8 MB at width=2560) inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bt: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    def step(i, h):
+        h = a_ref[0, i] * h + b_ref[0, i]
+        o_ref[0, i] = h
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, bt, step, h_ref[...])
+
+
+def rglru_scan_bsw(
+    a: jax.Array,        # (B, S, W) fp32 decay in [0,1)
+    b: jax.Array,        # (B, S, W) fp32 increment
+    h0: jax.Array,       # (B, W) fp32 initial state
+    *,
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns h (B, S, W): the full state trajectory."""
+    bsz, s, w = a.shape
+    assert s % block_t == 0, (s, block_t)
+    nt = s // block_t
+
+    kernel = functools.partial(_rglru_kernel, bt=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, w), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, block_t, w), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, w), lambda i, t: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, w), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,32 @@
+"""jit'd wrapper: pads (S, W) to block/lane multiples, runs the kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_bsw
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rglru_scan(
+    a: jax.Array,            # (B, S, W) decay
+    b: jax.Array,            # (B, S, W) increment
+    h0: jax.Array | None = None,
+    *,
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    bt = min(block_t, s)
+    pad_t = (-s) % bt
+    pad_w = (-w) % 128                  # lane alignment
+    af = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pad_t), (0, pad_w)))
+    bf = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, pad_t), (0, pad_w)))
+    h0f = jnp.pad(h0.astype(jnp.float32), ((0, 0), (0, pad_w)))
+    out = rglru_scan_bsw(af, bf, h0f, block_t=bt, interpret=interpret)
+    return out[:, :s, :w].astype(a.dtype)

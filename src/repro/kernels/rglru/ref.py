@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel: associative scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t with h_{-1} = h0. Shapes (B,S,W)/(B,W)."""
+    a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b = jnp.concatenate([h0[:, None], b], axis=1)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h[:, 1:]

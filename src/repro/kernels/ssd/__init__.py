@@ -1,0 +1,4 @@
+from .ops import ssd_mixer
+from .ref import ssd_ref
+
+__all__ = ["ssd_mixer", "ssd_ref"]

@@ -1,0 +1,119 @@
+"""Mamba-2 SSD (chunked state-space duality) Pallas TPU kernel.
+
+Grid (batch, head, chunk) with chunk the fastest dim: the inter-chunk
+recurrent state (P, N) lives in VMEM scratch across sequential chunk steps
+(reset at chunk 0 per (b, h)). Each step runs the chunk's *dual quadratic
+form* on the MXU:
+
+    y_diag = ((C B^T) ⊙ L) (x·dt)        intra-chunk, (Q,Q) matmuls
+    y_off  = C h_prev ⊙ exp(acum)        contribution of carried state
+    h      = h_prev·exp(acum[-1]) + (B ⊙ decay)^T (x·dt)
+
+which is the paper's Algorithm-style chunked SSD: O(S·Q) FLOPs, O(1)
+state. Chunk Q=64..128 and P=N=64..128 keep every operand MXU-shaped; the
+tile working set (~Q·(P+2N)·4B + P·N·4B < 1 MB) streams through VMEM.
+
+B/C are single-group (G=1): their BlockSpecs broadcast one (Q,N) tile
+across all heads of the same (b, chunk).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,       # (1, 1, Q, P)  head inputs (pre-scaled by nothing; raw x)
+    dt_ref,      # (1, 1, Q)     positive step sizes for this head
+    a_ref,       # (1, 1)        per-head negative decay rate
+    b_ref,       # (1, Q, N)
+    c_ref,       # (1, Q, N)
+    o_ref,       # (1, 1, Q, P)
+    h_ref,       # scratch (P, N) fp32 — carried inter-chunk state
+    *,
+    q: int,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q,)
+    a_neg = a_ref[0, 0].astype(jnp.float32)        # scalar
+    bmat = b_ref[0].astype(jnp.float32)            # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    a = dt * a_neg                                  # (Q,) log-decay <= 0
+    acum = jnp.cumsum(a)                            # within-chunk
+    xdt = x * dt[:, None]
+
+    # intra-chunk quadratic dual
+    diff = acum[:, None] - acum[None, :]            # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * l_mat                                       # (Q, Q)
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (Q, P)
+
+    # carried-state contribution: C h_prev^T scaled by decay-from-chunk-start
+    h_prev = h_ref[...]                             # (P, N)
+    y += jnp.exp(acum)[:, None] * jax.lax.dot_general(
+        cmat, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # state update: h = h_prev * exp(acum[-1]) + sum_i decay_i * xdt_i ⊗ B_i
+    decay_states = jnp.exp(acum[-1] - acum)         # (Q,)
+    new_state = jax.lax.dot_general(
+        xdt * decay_states[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (P, N)
+    h_ref[...] = h_prev * jnp.exp(acum[-1]) + new_state
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_chunked_bhsp(
+    x: jax.Array,      # (B, H, S, P)
+    dt: jax.Array,     # (B, H, S)
+    a_neg: jax.Array,  # (B, H) negative per-head rates (broadcast from (H,))
+    bmat: jax.Array,   # (B, S, N)
+    cmat: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, q=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda i, j, c: (i, j, c)),
+            pl.BlockSpec((1, 1), lambda i, j, c: (i, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda i, j, c: (i, j, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_neg, bmat, cmat)

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the SSD kernel: padding + head broadcast of rates."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunked_bhsp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_mixer(
+    x: jax.Array,       # (B, H, S, P)
+    dt: jax.Array,      # (B, H, S)
+    a_neg: jax.Array,   # (H,)
+    bmat: jax.Array,    # (B, S, N)
+    cmat: jax.Array,    # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, p = x.shape
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    a_b = jnp.broadcast_to(a_neg[None], (b, h))
+    out = ssd_chunked_bhsp(x, dt, a_b, bmat, cmat, chunk=q, interpret=interpret)
+    return out[:, :, :s]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the SSD kernel: the models/ssd.py chunked form."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.ssd import ssd_chunked
+
+
+def ssd_ref(x_bhsp, dt_bh_s, a_neg_h, bmat, cmat, chunk):
+    """Same layout as the kernel: x (B,H,S,P), dt (B,H,S), a (H,)."""
+    x = x_bhsp.transpose(0, 2, 1, 3)        # (B,S,H,P)
+    dt = dt_bh_s.transpose(0, 2, 1)         # (B,S,H)
+    y, _ = ssd_chunked(x, dt, a_neg_h, bmat, cmat, chunk)
+    return y.transpose(0, 2, 1, 3)

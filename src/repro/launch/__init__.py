@@ -1,0 +1,14 @@
+"""repro.launch — meshes, partitioning, dry-run, drivers.
+
+NOTE: `dryrun` is intentionally NOT imported here — importing it sets
+XLA_FLAGS for 512 host devices, which must only happen in a dedicated
+process (`python -m repro.launch.dryrun`).
+"""
+
+from .mesh import batch_axes, dp_size, make_production_mesh, make_test_mesh
+from .partitioning import DEFAULT_RULES, Partitioner, batch_shardings, device_put_tree
+
+__all__ = [
+    "batch_axes", "dp_size", "make_production_mesh", "make_test_mesh",
+    "DEFAULT_RULES", "Partitioner", "batch_shardings", "device_put_tree",
+]

@@ -1,0 +1,195 @@
+"""HLO text parsing + roofline-term computation.
+
+`cost_analysis()` gives per-device FLOPs and HBM bytes but is silent on
+collectives, so collective bytes come from parsing the compiled HLO: we sum
+the *result* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the per-device program (async start/done
+pairs counted once). Hardware model: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (DESIGN.md hardware constants).
+
+The roofline terms we report are **per-device seconds per step**:
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = hbm_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+(cost_analysis was verified per-device on this jax build — a 64-way-sharded
+einsum reports 1/64 of the global FLOPs — so we do *not* divide by chip
+count again; the assignment's formula normalizes a global count, ours is
+already per-chip. Both conventions give identical rankings.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (v5e: 4 links/chip; 1-link model)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction result: "bf16[16,128]{1,0}" (layout optional)
+_ARRAY_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _array_bytes_bf16eq(type_str: str) -> int:
+    """Bytes with f32 arrays counted at 2 B/elem.
+
+    The CPU backend legalizes bf16 collectives to f32 (verified: StableHLO
+    shows bf16 all-to-alls that the partitioned CPU HLO runs as f32 tuples),
+    so raw result bytes overstate a bf16 program's TPU wire bytes by up to
+    2x. bf16eq assumes every f32 collective is such an artifact — a lower
+    bracket; `total` (raw) is the upper bracket. True fp32 reductions (loss
+    scalars, norm stats) are negligible at these sizes.
+    """
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes = _DTYPE_BYTES[dtype]
+        if dtype == "f32":
+            nbytes = 2
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes by collective kind, from result types."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    bf16eq = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        out[kind] += _array_bytes(type_str)
+        bf16eq += _array_bytes_bf16eq(type_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["total_bf16eq"] = bf16eq
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # per device
+    hbm_bytes: float               # per device
+    coll_bytes: float              # per device
+    model_flops: float             # useful 6ND (or 2ND) global
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips x HLO_FLOPs): remat/overcompute waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization *upper bound* at the roofline: useful
+        global FLOPs / (chips x peak x bound-time)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_for(
+    kind: str, total_params: int, active_params: int, tokens: int,
+    embed_params: int = 0,
+) -> float:
+    """Useful-FLOPs convention: train 6·N_active·D, prefill 2·N_active·D,
+    decode 2·N_active·B (tokens == new tokens). Embedding gathers excluded
+    via active count already including them (cheap either way)."""
+    n = active_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def summarize_memory(mem_stats) -> dict:
+    return {
+        "argument_bytes": int(mem_stats.argument_size_in_bytes),
+        "output_bytes": int(mem_stats.output_size_in_bytes),
+        "temp_bytes": int(mem_stats.temp_size_in_bytes),
+        "alias_bytes": int(mem_stats.alias_size_in_bytes),
+        "peak_estimate_bytes": int(
+            mem_stats.argument_size_in_bytes
+            + mem_stats.output_size_in_bytes
+            + mem_stats.temp_size_in_bytes
+            - mem_stats.alias_size_in_bytes
+        ),
+    }

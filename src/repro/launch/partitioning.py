@@ -1,0 +1,136 @@
+"""Logical-axis -> mesh-axis partitioner with divisibility fallback.
+
+Model code declares *logical* axes per parameter dim (`repro.models.layers`);
+this module turns them into `NamedSharding`s for a concrete mesh. The rule
+table below is the whole distribution policy:
+
+  * tensor parallelism over "model" (heads / ffn / experts / vocab / lru /
+    ssm channels);
+  * FSDP over "data" on the `embed` dim of 2D+ weights (ZeRO-3-style: the
+    gather-on-use is emitted by GSPMD / shard_map in_specs);
+  * batch over ("pod", "data");
+  * decode KV caches shard their *sequence* dim over "model" (there are
+    fewer KV heads than model shards at GQA ratios — sharding the ring
+    instead is the flash-decoding split-KV layout).
+
+If a dim isn't divisible by its candidate axis (e.g. seamless's 256206
+vocab on a 16-way model axis, or kv_heads=2 on model=16), the axis is
+dropped — replication is always the safe fallback. Every decision is
+queryable (`explain`) and asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered tuple of mesh axes to (jointly) shard over
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP dim
+    "mlp": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "head": (),
+    "experts": ("model",),
+    "experts_dp": ("data",),     # a2a MoE layout (cfg.moe_layout="a2a")
+    "lru": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "layers": (),
+    "kv_seq": ("model",),        # decode cache: split-KV over model axis
+    "seq": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioner:
+    mesh: jax.sharding.Mesh
+    rules: Any = None
+
+    def _rules(self) -> dict[str, tuple[str, ...]]:
+        return self.rules or DEFAULT_RULES
+
+    # ------------------------------------------------------------- core
+    def spec(self, shape: tuple[int, ...], axes: tuple[Optional[str], ...]) -> P:
+        """PartitionSpec for one array, honoring divisibility + uniqueness."""
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        parts: list = []
+        for dim, name in zip(shape, axes):
+            if name is None:
+                parts.append(None)
+                continue
+            cand = [
+                a for a in self._rules().get(name, ())
+                if a in self.mesh.shape and a not in used
+            ]
+            picked: list[str] = []
+            size = 1
+            for a in cand:
+                if dim % (size * self.mesh.shape[a]) == 0:
+                    picked.append(a)
+                    size *= self.mesh.shape[a]
+            used.update(picked)
+            if not picked:
+                parts.append(None)
+            elif len(picked) == 1:
+                parts.append(picked[0])
+            else:
+                parts.append(tuple(picked))
+        return P(*parts)
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    # ------------------------------------------------------------- trees
+    def tree_shardings(self, abstract_tree: Any, axes_tree: Any) -> Any:
+        """NamedSharding tree for (ShapeDtypeStruct tree, logical-axes tree)."""
+        return jax.tree.map(
+            lambda leaf, ax: self.sharding(tuple(leaf.shape), tuple(ax)),
+            abstract_tree,
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x
+            ),
+        )
+
+    def tree_abstract(self, abstract_tree: Any, axes_tree: Any) -> Any:
+        """Attach shardings onto ShapeDtypeStructs (dry-run inputs)."""
+        shardings = self.tree_shardings(abstract_tree, axes_tree)
+        return jax.tree.map(
+            lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh),
+            abstract_tree,
+            shardings,
+        )
+
+    def batch_spec(self, ndim: int, batch_dim: int = 0) -> P:
+        axes = [None] * ndim
+        axes[batch_dim] = "batch"
+        return self.spec(tuple([int(1e9)] * ndim), tuple(axes))  # always divisible
+
+    def explain(self, shape, axes) -> str:
+        return f"{shape} {axes} -> {self.spec(tuple(shape), tuple(axes))}"
+
+
+def batch_shardings(part: Partitioner, batch_abstract: dict) -> dict:
+    """Shardings for a batch dict: batch dim over ('pod','data').
+
+    positions arrays for mrope are (3, B, S) — batch dim 1."""
+    out = {}
+    for k, v in batch_abstract.items():
+        bdim = 1 if k == "positions" and v.ndim == 3 else 0
+        axes: list = [None] * v.ndim
+        axes[bdim] = "batch"
+        out[k] = part.sharding(tuple(v.shape), tuple(axes))
+    return out
+
+
+def device_put_tree(tree: Any, shardings: Any) -> Any:
+    return jax.tree.map(jax.device_put, tree, shardings)

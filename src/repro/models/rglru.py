@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing: linear branch -> short causal depthwise conv -> RG-LRU
+gated linear recurrence, multiplied by a GeLU gate branch, projected back.
+The recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(c * r_t * log(sigmoid(lambda)))        (c = 8)
+
+is associative, so the sequence form runs as `jax.lax.associative_scan`
+(O(log S) depth — the TPU-friendly formulation; the Pallas kernel in
+`repro.kernels.rglru` implements the blocked sequential form and matches
+this math). Decode carries (h, conv tail) as state — O(1) per token, which
+is why the hybrid arch runs the `long_500k` cell.
+
+Recurrence gates (r, i) are per-channel (diagonal) sigmoid gates on the
+conv output — RG-LRU's input-dependent gating at per-channel cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import EMBED, LRU, ParamSpec
+
+C_FACTOR = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    return {
+        "w_x": ParamSpec((d, w), (EMBED, LRU)),
+        "w_gate": ParamSpec((d, w), (EMBED, LRU)),
+        "w_out": ParamSpec((w, d), (LRU, EMBED)),
+        "conv": ParamSpec((cfg.conv_width, w), (None, LRU), init="small"),
+        "a_diag": ParamSpec((w,), (LRU,), init="ones"),
+        "a_bias": ParamSpec((w,), (LRU,), init="zeros"),
+        "i_diag": ParamSpec((w,), (LRU,), init="ones"),
+        "i_bias": ParamSpec((w,), (LRU,), init="zeros"),
+        "lam": ParamSpec((w,), (LRU,), init="ones", scale=4.0),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). Returns (y, new_tail)
+    where tail is the last W-1 inputs (decode carry)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1):] if width > 1 else tail
+    return y, new_tail
+
+
+def _gates(params: dict, u: jax.Array):
+    """Per-channel recurrence gates; returns (log_a, b_scale) fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["a_diag"].astype(jnp.float32)
+                       + params["a_bias"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * params["i_diag"].astype(jnp.float32)
+                       + params["i_bias"].astype(jnp.float32))
+    log_lam = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    log_a = C_FACTOR * r * log_lam            # <= 0
+    a_sq = jnp.exp(2.0 * log_a)
+    b_scale = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * i
+    return log_a, b_scale
+
+
+def rglru_sequence(params: dict, x: jax.Array, cfg: ModelConfig,
+                   h0: jax.Array | None = None,
+                   conv_tail: jax.Array | None = None):
+    """Full-sequence RG-LRU. x: (B,S,D). Returns (y, (h_last, conv_tail))."""
+    u = x @ params["w_x"]
+    gate = x @ params["w_gate"]
+    u, new_tail = causal_conv1d(u, params["conv"], conv_tail)
+    log_a, b_scale = _gates(params, u)
+    b = b_scale * u.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    y = (jax.nn.gelu(gate.astype(jnp.float32), approximate=True) * h)
+    out = y.astype(x.dtype) @ params["w_out"]
+    return out, (h[:, -1].astype(x.dtype), new_tail)
+
+
+def rglru_step(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One decode step. x: (B,1,D); cache {'h': (B,W), 'conv': (B,cw-1,W)}."""
+    u = x @ params["w_x"]
+    gate = x @ params["w_gate"]
+    u, new_tail = causal_conv1d(u, params["conv"], cache["conv"])
+    log_a, b_scale = _gates(params, u)
+    h = (
+        jnp.exp(log_a[:, 0]) * cache["h"].astype(jnp.float32)
+        + b_scale[:, 0] * u[:, 0].astype(jnp.float32)
+    )
+    y = jax.nn.gelu(gate[:, 0].astype(jnp.float32), approximate=True) * h
+    out = (y.astype(x.dtype) @ params["w_out"])[:, None]
+    return out, {"h": h.astype(x.dtype), "conv": new_tail}
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+The chunked algorithm from the paper (arXiv:2405.21060, §6): split the
+sequence into chunks of Q tokens; within a chunk the SSM is evaluated in
+its *quadratic* (attention-like) dual form on the MXU; across chunks a
+cheap recurrence carries the (H, P, N) state. Total cost O(S·Q) + O(S/Q)
+matmuls — sub-quadratic, constant-state decode, which is why mamba2 runs
+the `long_500k` cell.
+
+Single B/C group (G=1, RecurrentGemma-class sizes). The Pallas kernel in
+`repro.kernels.ssd` implements the same chunk schedule with VMEM-resident
+state; this jnp version is its oracle and the XLA execution path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import EMBED, ParamSpec, SSM_HEADS, SSM_INNER, SSM_STATE, rms_norm
+from .rglru import causal_conv1d
+
+
+def ssd_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h), (EMBED, SSM_INNER)),
+        "conv": ParamSpec((cfg.conv_width, conv_ch), (None, SSM_INNER), init="small"),
+        "a_log": ParamSpec((h,), (SSM_HEADS,), init="zeros"),
+        "dt_bias": ParamSpec((h,), (SSM_HEADS,), init="zeros"),
+        "d_skip": ParamSpec((h,), (SSM_HEADS,), init="ones"),
+        "norm_gamma": ParamSpec((di,), (SSM_INNER,), init="zeros"),
+        "out_proj": ParamSpec((di, d), (SSM_INNER, EMBED)),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    sum_{j < t <= i} a[..., t]; -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) inputs (already dt-scaled outside? no: raw)
+    dt: jax.Array,     # (B, S, H) positive step sizes
+    a_neg: jax.Array,  # (H,) negative per-head decay rates (=-exp(a_log))
+    bmat: jax.Array,   # (B, S, N)
+    cmat: jax.Array,   # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N) initial state
+):
+    """Returns (y (B,S,H,P), h_last (B,H,P,N)). fp32 internal."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+    a = dtf * a_neg.astype(jnp.float32)          # (B,NC,Q,H) log-decay <= 0
+    xdt = xf * dtf[..., None]
+
+    a_t = a.transpose(0, 1, 3, 2)                 # (B,NC,H,Q)
+    acum = jnp.cumsum(a_t, axis=-1)               # within-chunk cumulative
+
+    # intra-chunk dual (quadratic) form
+    l_mat = jnp.exp(_segsum(a_t))                 # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)[:, :, None] * l_mat
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # per-chunk input states
+    decay_states = jnp.exp(acum[..., -1:] - acum)  # (B,NC,H,Q)
+    states = jnp.einsum("bcqn,bchq,bcqhp->bchpn", bf, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(acum[..., -1])           # (B,NC,H)
+    init = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def body(carry, inp):
+        dec, st = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    h_last, h_prev = jax.lax.scan(
+        body, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)       # (B,NC,H,P,N)
+
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", cf, h_prev, jnp.exp(acum))
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, h_last
+
+
+def ssd_sequence(params: dict, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None):
+    """Full mamba2 block over a sequence. x: (B,S,D).
+    Returns (y, {'h': ..., 'conv': ...})."""
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_tail = causal_conv1d(
+        conv_in, params["conv"], None if state is None else state["conv"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dtp = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))
+    bsz, s, _ = x.shape
+    y, h_last = ssd_chunked(
+        xin.reshape(bsz, s, h, p), dtp, a_neg, bmat, cmat, cfg.ssm_chunk,
+        None if state is None else state["h"],
+    )
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xin.reshape(bsz, s, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_gamma"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"h": h_last.astype(x.dtype), "conv": conv_tail}
+
+
+def ssd_step(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One decode step. x: (B,1,D); cache {'h': (B,H,P,N), 'conv': ...}."""
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_tail = causal_conv1d(conv_in, params["conv"], cache["conv"])
+    conv_out = jax.nn.silu(conv_out)[:, 0]
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dtp = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                              # (B,H)
+    a = jnp.exp(dtp * -jnp.exp(params["a_log"].astype(jnp.float32)))  # (B,H)
+    xh = xin.reshape(-1, h, p).astype(jnp.float32)
+    dbx = dtp[..., None, None] * jnp.einsum("bn,bhp->bhpn", bmat.astype(jnp.float32), xh)
+    h_new = cache["h"].astype(jnp.float32) * a[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmat.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), params["norm_gamma"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"h": h_new.astype(x.dtype), "conv": conv_tail}
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "h": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype
+        ),
+        "conv": jnp.zeros(
+            (batch, cfg.conv_width - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype
+        ),
+    }

@@ -1,0 +1,454 @@
+"""Decoder (and encoder-decoder) stack.
+
+Layers are organized as ``group_count`` repetitions of ``cfg.block_pattern``
+(e.g. gemma2: ("local_attn","attn"); recurrentgemma: ("rec","rec","attn");
+mamba2: ("ssd",)) plus an unscanned tail for non-divisible depths. Each
+pattern position's parameters are **stacked along a leading 'layers' axis
+and the stack is driven by `jax.lax.scan`** — HLO size and compile time are
+depth-independent, which is what makes 48-layer × 512-device dry-runs
+tractable. ``cfg.remat="block"`` wraps the scan body in `jax.checkpoint`
+(activation recomputation per group).
+
+Caches mirror the structure: one stacked entry per pattern position
+(attn: K/V rings; rec/ssd: constant-size states), so `decode_step` is a
+scan over the same groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from .layers import (
+    EMBED, ParamSpec, constrain, constrain_bsd, embed_logits, embed_lookup,
+    embed_specs, gather_sp, mlp_apply, mlp_specs, rms_norm, rms_norm_spec,
+    softcap, stack_specs, BATCH_AXES, MODEL_AXIS,
+)
+from .moe import EPContext, moe_apply, moe_specs
+from .rglru import rglru_cache_init, rglru_sequence, rglru_specs, rglru_step
+from .ssd import ssd_cache_init, ssd_sequence, ssd_specs, ssd_step
+
+Params = Any
+Cache = Any
+
+
+# --------------------------------------------------------------------------- specs
+
+
+def _ffn_specs(cfg: ModelConfig) -> dict:
+    return moe_specs(cfg) if cfg.is_moe else mlp_specs(cfg.d_model, cfg.d_ff, cfg.act)
+
+
+def block_specs(cfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    d = cfg.d_model
+    if kind == "ssd":
+        return {"ln1": rms_norm_spec(d), "ssd": ssd_specs(cfg)}
+    if kind == "rec":
+        return {
+            "ln1": rms_norm_spec(d),
+            "rec": rglru_specs(cfg),
+            "ln2": rms_norm_spec(d),
+            "ffn": mlp_specs(d, cfg.d_ff, cfg.act),
+        }
+    specs = {
+        "ln1": rms_norm_spec(d),
+        "attn": attn.attn_specs(cfg),
+        "ln2": rms_norm_spec(d),
+        "ffn": _ffn_specs(cfg),
+    }
+    if cross:
+        specs["ln_cross"] = rms_norm_spec(d)
+        specs["cross"] = attn.attn_specs(cfg, cross=True)
+    return specs
+
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    cross = cfg.encoder_layers > 0
+    specs: dict = {
+        "embed": embed_specs(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "final_ln": rms_norm_spec(cfg.d_model),
+        "groups": {
+            str(i): stack_specs(block_specs(cfg, kind, cross), cfg.group_count)
+            for i, kind in enumerate(cfg.block_pattern)
+        },
+        "tail": {
+            str(i): block_specs(cfg, kind, cross)
+            for i, kind in enumerate(cfg.tail_pattern)
+        },
+    }
+    if cfg.encoder_layers > 0:
+        specs["encoder"] = {
+            "blocks": stack_specs(
+                block_specs(cfg, "attn", cross=False), cfg.encoder_layers
+            ),
+            "final_ln": rms_norm_spec(cfg.d_model),
+        }
+    return specs
+
+
+# --------------------------------------------------------------------------- remat policies
+
+
+def _remat_wrap(body, cfg: ModelConfig):
+    """Activation-recomputation policy for one scan group.
+
+    block: save only the group carry (min memory, 3 weight-gather passes);
+    dots:  save matmul outputs — backward never recomputes projections, so
+           FSDP weights gather 2x instead of 3x per step (§Perf HC2-i4),
+           at ~4x the saved-activation bytes of `block`;
+    none:  save everything (max memory, min traffic).
+    """
+    if cfg.remat == "block":
+        return jax.checkpoint(body)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return body
+
+
+# --------------------------------------------------------------------------- block apply (sequence)
+
+
+def _ffn_apply(params, x, cfg: ModelConfig, ep: EPContext):
+    if cfg.is_moe:
+        return moe_apply(params, x, cfg, ep)
+    return mlp_apply(params, x, cfg.act), {}
+
+
+def block_apply_seq(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    ep: EPContext,
+    *,
+    causal: bool = True,
+    memory: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Cache, dict]:
+    """One block over a full sequence. Returns (x, cache_entry, aux)."""
+    aux: dict = {}
+    # NOTE (§Perf HC2-i1, refuted): explicitly pinning an SP->full gather on
+    # every norm output (gather_sp) *raised* qwen3 train_4k collectives
+    # 173->299 GB/dev — GSPMD's per-consumer resharding placement (FFNs stay
+    # sequence-sharded; only the attention core gathers) beats the manual
+    # pin. Keep propagation free here.
+    if kind == "ssd":
+        h, state = ssd_sequence(params["ssd"], rms_norm(x, params["ln1"], cfg.norm_eps), cfg)
+        return constrain_bsd(x + h), state, aux
+    if kind == "rec":
+        h, (hl, tail) = rglru_sequence(
+            params["rec"], rms_norm(x, params["ln1"], cfg.norm_eps), cfg
+        )
+        x = x + h
+        x = x + mlp_apply(params["ffn"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg.act)
+        return constrain_bsd(x), {"h": hl, "conv": tail}, aux
+
+    local = kind == "local_attn"
+    h, (k, v) = attn.attention_sequence(
+        params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps), positions, cfg,
+        local=local, causal=causal,
+    )
+    x = x + h
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = attn.quantize_kv(k)
+        vq, vs = attn.quantize_kv(v)
+        cache: dict = {"self": {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}}
+    else:
+        cache = {"self": {"k": k, "v": v}}
+    if memory is not None and "cross" in params:
+        mem_k, mem_v = attn.project_kv(
+            params["cross"], memory, cfg, positions=None, rope=False
+        )
+        q = attn.project_q(
+            params["cross"], rms_norm(x, params["ln_cross"], cfg.norm_eps),
+            cfg, positions=None, rope=False,
+        )
+        ctx = attn.flash_attention(q, mem_k, mem_v, causal=False,
+                                   attn_softcap=cfg.attn_logit_softcap)
+        x = x + attn.o_proj(params["cross"], ctx)
+        cache["cross"] = {"k": mem_k, "v": mem_v}
+    h, ffn_aux = _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg, ep)
+    return constrain_bsd(x + h), cache, {**aux, **ffn_aux}
+
+
+# --------------------------------------------------------------------------- block apply (decode step)
+
+
+def block_apply_step(
+    params: dict,
+    x: jax.Array,               # (B, 1, D)
+    position: jax.Array,
+    cache: Cache,
+    cache_len: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    ep: EPContext,
+) -> tuple[jax.Array, Cache]:
+    if kind == "ssd":
+        h, state = ssd_step(params["ssd"], rms_norm(x, params["ln1"], cfg.norm_eps), cache, cfg)
+        return constrain_bsd(x + h), state
+    if kind == "rec":
+        h, state = rglru_step(
+            params["rec"], rms_norm(x, params["ln1"], cfg.norm_eps), cache, cfg
+        )
+        x = x + h
+        x = x + mlp_apply(params["ffn"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg.act)
+        return constrain_bsd(x), state
+
+    local = kind == "local_attn"
+    h, self_cache = attn.attention_step(
+        params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps), position,
+        cache["self"], cache_len, cfg, local=local,
+    )
+    x = x + h
+    new_cache: dict = {"self": self_cache}
+    if "cross" in cache and "cross" in params:
+        h, _ = attn.attention_step(
+            params["cross"], rms_norm(x, params["ln_cross"], cfg.norm_eps),
+            position, cache["cross"], cache_len, cfg, local=False, cross=True,
+        )
+        x = x + h
+        new_cache["cross"] = cache["cross"]
+    h, _ = _ffn_apply(params["ffn"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg, ep)
+    return constrain_bsd(x + h), new_cache
+
+
+# --------------------------------------------------------------------------- encoder
+
+
+def encoder_apply(params: dict, embeds: jax.Array, cfg: ModelConfig,
+                  ep: EPContext) -> jax.Array:
+    """Bidirectional encoder over stub-frontend embeddings (B, S, D)."""
+    positions = jnp.broadcast_to(
+        jnp.arange(embeds.shape[1])[None], embeds.shape[:2]
+    )
+
+    def body(x, layer_params):
+        x, _, _ = block_apply_seq(
+            layer_params, x, positions, cfg, "attn",
+            ep, causal=False,
+        )
+        return x, None
+
+    body = _remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, embeds, params["blocks"])
+    else:
+        x = embeds
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda p: p[i], params["blocks"]))
+    return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- full-sequence decoder
+
+
+def _sum_aux(acc: dict, new: dict) -> dict:
+    out = dict(acc)
+    for k2, v in new.items():
+        out[k2] = out.get(k2, 0.0) + v
+    return out
+
+
+def decoder_apply(
+    params: dict,
+    tokens: jax.Array,           # (B, S) int32
+    positions: jax.Array,        # (B, S) or (3, B, S)
+    cfg: ModelConfig,
+    ep: EPContext,
+    *,
+    memory: Optional[jax.Array] = None,
+    want_cache: bool = False,
+    embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict, Optional[Cache]]:
+    """Returns (logits (B,S,V), aux_losses, cache-or-None)."""
+    x = embeds if embeds is not None else embed_lookup(
+        params["embed"], tokens, cfg.d_model
+    )
+    x = constrain_bsd(x)
+    # scan carries must have a fixed structure: pre-declare MoE aux slots
+    aux: dict = (
+        {"lb": jnp.float32(0.0), "z": jnp.float32(0.0)} if cfg.is_moe else {}
+    )
+    caches: dict = {"groups": {}, "tail": {}}
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        entries = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, entry, a = block_apply_seq(
+                group_params[str(i)], x, positions, cfg, kind, ep, memory=memory
+            )
+            entries[str(i)] = entry
+            aux = _sum_aux(aux, a)
+        return (x, aux), entries
+
+    body = _remat_wrap(group_body, cfg)
+    if cfg.group_count > 0 and cfg.scan_layers:
+        (x, aux), group_caches = jax.lax.scan(
+            body, (x, aux), params["groups"]
+        )
+        caches["groups"] = group_caches
+    elif cfg.group_count > 0:
+        group_caches = []
+        for g in range(cfg.group_count):
+            sliced = jax.tree.map(lambda p: p[g], params["groups"])
+            (x, aux), entries = body((x, aux), sliced)
+            group_caches.append(entries)
+        caches["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *group_caches)
+
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, entry, a = block_apply_seq(
+            params["tail"][str(i)], x, positions, cfg, kind, ep, memory=memory
+        )
+        caches["tail"][str(i)] = entry
+        aux = _sum_aux(aux, a)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = constrain(
+        embed_logits(params["embed"], x), (BATCH_AXES, None, MODEL_AXIS)
+    )
+    if cfg.final_logit_softcap > 0:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, aux, (caches if want_cache else None)
+
+
+# --------------------------------------------------------------------------- decode step
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,            # (B, 1) int32
+    position: jax.Array,         # (B, 1) or (3, B, 1)
+    cache: Cache,
+    cache_len: jax.Array,        # valid rows incl. this token
+    cfg: ModelConfig,
+    ep: EPContext,
+) -> tuple[jax.Array, Cache]:
+    """One token through all layers. Returns (logits (B,1,V), new cache)."""
+    x = embed_lookup(params["embed"], token, cfg.d_model)
+
+    def group_body(x, inputs):
+        group_params, group_cache = inputs
+        new_entries = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, entry = block_apply_step(
+                group_params[str(i)], x, position, group_cache[str(i)],
+                cache_len, cfg, kind, ep,
+            )
+            new_entries[str(i)] = entry
+        return x, new_entries
+
+    new_cache: dict = {"groups": {}, "tail": {}}
+    if cfg.group_count > 0 and cfg.scan_layers:
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], cache["groups"])
+        )
+        new_cache["groups"] = new_groups
+    elif cfg.group_count > 0:
+        entries = []
+        for g in range(cfg.group_count):
+            sliced = jax.tree.map(lambda p: p[g], (params["groups"], cache["groups"]))
+            x, e = group_body(x, sliced)
+            entries.append(e)
+        new_cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *entries)
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, entry = block_apply_step(
+            params["tail"][str(i)], x, position, cache["tail"][str(i)],
+            cache_len, cfg, kind, ep,
+        )
+        new_cache["tail"][str(i)] = entry
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = constrain(
+        embed_logits(params["embed"], x), (BATCH_AXES, None, MODEL_AXIS)
+    )
+    if cfg.final_logit_softcap > 0:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- cache init / padding
+
+
+def _attn_cache_init(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                     cross_len: int = 0) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    int8 = cfg.kv_cache_dtype == "int8"
+    kv_dt = jnp.int8 if int8 else dtype
+    self_entry = {
+        "k": jnp.zeros((batch, capacity, hkv, hd), kv_dt),
+        "v": jnp.zeros((batch, capacity, hkv, hd), kv_dt),
+    }
+    if int8:
+        # per-(token, head) symmetric scales (see attention.quantize_kv):
+        # halves decode HBM traffic at ~0.4% extra cache bytes
+        self_entry["k_scale"] = jnp.zeros((batch, capacity, hkv, 1), jnp.bfloat16)
+        self_entry["v_scale"] = jnp.zeros((batch, capacity, hkv, 1), jnp.bfloat16)
+    entry = {"self": self_entry}
+    if cfg.encoder_layers > 0:
+        entry["cross"] = {
+            "k": jnp.zeros((batch, cross_len, hkv, hd), dtype),
+            "v": jnp.zeros((batch, cross_len, hkv, hd), dtype),
+        }
+    return entry
+
+
+def cache_init(cfg: ModelConfig, batch: int, capacity: int, dtype,
+               cross_len: int = 0) -> Cache:
+    """Empty cache pytree matching decode_step's expectations."""
+
+    def entry(kind: str) -> dict:
+        if kind == "ssd":
+            return ssd_cache_init(cfg, batch, dtype)
+        if kind == "rec":
+            return rglru_cache_init(cfg, batch, dtype)
+        return _attn_cache_init(cfg, batch, capacity, dtype, cross_len)
+
+    def stacked(kind: str) -> dict:
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.group_count, *a.shape)
+            ).copy() if cfg.group_count else a[None][:0],
+            entry(kind),
+        )
+
+    return {
+        "groups": {str(i): stacked(k) for i, k in enumerate(cfg.block_pattern)},
+        "tail": {str(i): entry(k) for i, k in enumerate(cfg.tail_pattern)},
+    }
+
+
+def pad_cache_to(cache: Cache, cfg: ModelConfig, capacity: int) -> Cache:
+    """Grow prefill K/V entries (length S) to ``capacity`` rows."""
+
+    def pad(path_kinds, c):
+        def fix(entry):
+            if not (isinstance(entry, dict) and "self" in entry):
+                return entry
+            out = dict(entry)
+            kv = entry["self"]
+            seq_axis = kv["k"].ndim - 3
+            pad_n = capacity - kv["k"].shape[seq_axis]
+            if pad_n > 0:
+                cfgpad = [(0, 0)] * kv["k"].ndim
+                cfgpad[seq_axis] = (0, pad_n)
+                out["self"] = {
+                    name: jnp.pad(arr, cfgpad) for name, arr in kv.items()
+                }
+            return out
+
+        return {key: fix(val) for key, val in c.items()}
+
+    return {
+        "groups": pad(cfg.block_pattern, cache["groups"]),
+        "tail": pad(cfg.tail_pattern, cache["tail"]),
+    }

@@ -1,0 +1,5 @@
+"""repro.serve — batched prefill/decode serving."""
+
+from .engine import ServeConfig, ServeEngine
+
+__all__ = ["ServeConfig", "ServeEngine"]

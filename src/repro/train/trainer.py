@@ -1,0 +1,135 @@
+"""Training loop: step -> metrics -> periodic checkpoint -> resume.
+
+The loop is deliberately boring — all the interesting machinery lives in
+the pieces it composes: swarm-ingested data (`repro.data`), jit'd
+train_step (compiled once), checkpoint/restart (`checkpoint.py`), failure
+injection + straggler watch (`fault_tolerance.py`). On preemption it
+checkpoints inside the grace period; on crash the supervisor restarts it
+and it resumes from the latest durable step, replaying nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..data.pipeline import Batch, DataState, HostBatcher
+from ..models.model import ModelBundle
+from . import checkpoint as ckpt
+from .fault_tolerance import FailurePlan, Preemption, StragglerDetector
+from .train_step import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_last: int = 3
+
+
+@dataclasses.dataclass
+class TrainReport:
+    final_step: int
+    losses: list[float]
+    restarts: int = 0
+    stragglers: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        tcfg: TrainConfig,
+        batcher: HostBatcher,
+        trainer_cfg: TrainerConfig = TrainerConfig(),
+        mesh: Optional[jax.sharding.Mesh] = None,
+        pod_axis: Optional[str] = None,
+        failure_plan: Optional[FailurePlan] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.bundle = bundle
+        self.tcfg = tcfg
+        self.batcher = batcher
+        self.cfg = trainer_cfg
+        self.failure_plan = failure_plan or FailurePlan()
+        self.straggler = StragglerDetector()
+        self.log = log_fn
+        self.train_step = jax.jit(
+            make_train_step(bundle, tcfg, mesh=mesh, pod_axis=pod_axis),
+            donate_argnums=(0,),
+        )
+
+    # ------------------------------------------------------------- state io
+    def _save(self, state: TrainState, step: int) -> None:
+        ckpt.save_checkpoint(
+            self.cfg.ckpt_dir, step,
+            {"params": state.params, "opt": state.opt},
+            extra={"data": self.batcher.state.to_dict(), "step": step},
+        )
+        self._gc_checkpoints()
+
+    def _gc_checkpoints(self) -> None:
+        base = Path(self.cfg.ckpt_dir)
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in base.iterdir()
+            if p.is_dir() and p.name.startswith("step_")
+        )
+        for s in steps[: -self.cfg.keep_last]:
+            import shutil
+
+            shutil.rmtree(base / f"step_{s:08d}")
+
+    def _restore_or_init(self, key: jax.Array) -> tuple[TrainState, int]:
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return init_train_state(self.bundle, self.tcfg, key), 0
+        state = init_train_state(self.bundle, self.tcfg, key)
+        like = {"params": state.params, "opt": state.opt}
+        restored, extra = ckpt.load_checkpoint(self.cfg.ckpt_dir, like, step=last)
+        self.batcher.state = DataState.from_dict(extra["data"])
+        self.log(f"[trainer] resumed from step {last}")
+        return TrainState(restored["params"], restored["opt"]), last
+
+    # ------------------------------------------------------------- loop
+    def run(self, num_steps: int, key: Optional[jax.Array] = None) -> TrainReport:
+        key = key if key is not None else jax.random.key(self.tcfg.seed)
+        state, start = self._restore_or_init(key)
+        losses: list[float] = []
+        it: Iterator[Batch] = self.batcher.iter_from(self.batcher.state)
+        step = start
+        while step < num_steps:
+            batch = next(it)
+            t0 = time.perf_counter()
+            try:
+                self.failure_plan.check(step)
+            except Preemption:
+                # grace period: persist, then let the supervisor reschedule
+                self._save(state, step)
+                raise
+            state, metrics = self.train_step(
+                state, {"tokens": batch.tokens, "targets": batch.targets}
+            )
+            step += 1
+            dt = time.perf_counter() - t0
+            if self.straggler.observe(dt):
+                self.log(f"[trainer] straggler step {step}: {dt:.3f}s")
+            if step % self.cfg.log_every == 0 or step == num_steps:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                self.log(
+                    f"[trainer] step {step:5d} loss {loss:.4f} "
+                    f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                )
+            if step % self.cfg.ckpt_every == 0 or step == num_steps:
+                self._save(state, step)
+        return TrainReport(
+            final_step=step, losses=losses, stragglers=self.straggler.flagged
+        )

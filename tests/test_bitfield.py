@@ -1,0 +1,27 @@
+import numpy as np
+
+from repro.core import Bitfield, availability
+
+
+def test_basic_ops():
+    bf = Bitfield(10)
+    assert bf.empty and not bf.complete
+    bf.set(3); bf.set(7)
+    assert bf.has(3) and 3 in bf and bf.count() == 2
+    assert list(bf.missing()) == [0, 1, 2, 4, 5, 6, 8, 9]
+    full = Bitfield.full(10)
+    assert full.complete
+    assert list(bf.missing_from(full)) == list(bf.missing())
+
+
+def test_interest():
+    a = Bitfield.from_indices(8, [0, 1])
+    b = Bitfield.from_indices(8, [1, 2])
+    assert a.interested_in(b)           # b has 2, a lacks it
+    assert list(a.missing_from(b)) == [2]
+    assert not a.interested_in(Bitfield(8))
+
+
+def test_availability():
+    bfs = [Bitfield.from_indices(4, [0]), Bitfield.from_indices(4, [0, 1])]
+    assert availability(bfs, 4).tolist() == [2, 1, 0, 0]

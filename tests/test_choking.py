@@ -1,0 +1,41 @@
+import numpy as np
+
+from repro.core import Choker, ChokerConfig, RateWindow
+
+
+def test_reciprocation_top_uploaders():
+    ch = Choker(ChokerConfig(max_unchoked=2, optimistic_slots=0), np.random.default_rng(0))
+    rates = {"a": 100.0, "b": 50.0, "c": 10.0, "d": 5.0}
+    un = ch.rechoke(["a", "b", "c", "d"], {"a", "b", "c", "d"}, rates, is_seed=False)
+    assert un == {"a", "b"}
+
+
+def test_optimistic_explores_choked():
+    ch = Choker(ChokerConfig(max_unchoked=1, optimistic_slots=1, optimistic_every=1),
+                np.random.default_rng(0))
+    rates = {"a": 100.0, "b": 0.0, "c": 0.0}
+    seen = set()
+    for _ in range(30):
+        un = ch.rechoke(["a", "b", "c"], {"a", "b", "c"}, rates, is_seed=False)
+        assert "a" in un
+        seen |= un - {"a"}
+    assert seen == {"b", "c"}  # rotation eventually tries everyone
+
+
+def test_seed_mode_uses_sent_rate():
+    ch = Choker(ChokerConfig(max_unchoked=1, optimistic_slots=0), np.random.default_rng(0))
+    un = ch.rechoke(["a", "b"], {"a", "b"}, {}, is_seed=True,
+                    sent_rate={"a": 1.0, "b": 99.0})
+    assert un == {"b"}
+
+
+def test_uninterested_never_unchoked():
+    ch = Choker(ChokerConfig(), np.random.default_rng(0))
+    un = ch.rechoke(["a", "b"], {"b"}, {"a": 100.0, "b": 1.0}, is_seed=False)
+    assert "a" not in un
+
+
+def test_rate_window_decays():
+    w = RateWindow(halflife=10.0)
+    w.add("p", 100.0, now=0.0)
+    assert w.rate("p", now=10.0) == 50.0

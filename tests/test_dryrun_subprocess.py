@@ -1,0 +1,33 @@
+"""Dry-run machinery on a small multi-pod mesh (subprocess: needs its own
+XLA_FLAGS device count, which must not leak into this test process)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_reduced_dryrun_multipod_mesh(tmp_path):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "granite_3_2b", "--shape", "train_4k",
+        "--mesh", "test", "--reduced", "--out", str(tmp_path),
+    ]
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in ("XLA_FLAGS", "PYTHONPATH")})
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                          env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads((tmp_path / "granite_3_2b__train_4k__test.json").read_text())
+    assert out["status"] == "ok"
+    assert out["roofline"]["t_compute_s"] > 0
+    assert out["memory"]["peak_estimate_bytes"] > 0
+    assert out["collectives"]["total"] > 0  # the pod axis actually shards

@@ -1,0 +1,49 @@
+"""HLO parser + roofline-term unit tests."""
+
+import pytest
+
+from repro.launch import hlo_analysis as hlo
+
+
+SAMPLE = """
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(%x), replica_groups={}
+  %ar.1 = (f32[1024]{0}, f32[512]{0}) all-reduce(%a, %b), channel_id=1
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a-start = bf16[8,128]{1,0} all-to-all-start(%z)
+  %cp-start = u8[100]{0} collective-permute-start(%w)
+  %not_a_collective = f32[9999]{0} add(%p, %q)
+"""
+
+
+def test_collective_byte_parse():
+    out = hlo.collective_bytes(SAMPLE)
+    assert out["all-gather"] == 16 * 4096 * 2048 * 2
+    assert out["all-reduce"] == (1024 + 512) * 4
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert out["all-to-all"] == 8 * 128 * 2
+    assert out["collective-permute"] == 100
+    assert out["count"] == 5
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+    # bf16eq: f32 entries halve
+    f32_bytes = (1024 + 512) * 4 + 64 * 32 * 4
+    assert out["total_bf16eq"] == out["total"] - f32_bytes // 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = hlo.Roofline(flops=1.97e14, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 3,
+                     model_flops=1.97e14 * 256 * 0.5, chips=256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(3.0)
+    assert r.bottleneck == "collective"
+    assert r.t_bound == pytest.approx(3.0)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.mfu_bound == pytest.approx(0.5 / 3.0)
+
+
+def test_model_flops_conventions():
+    assert hlo.model_flops_for("train", 10, 8, 100) == 6 * 8 * 100
+    assert hlo.model_flops_for("prefill", 10, 8, 100) == 2 * 8 * 100
+    assert hlo.model_flops_for("decode", 10, 8, 128) == 2 * 8 * 128

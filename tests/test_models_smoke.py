@@ -1,0 +1,65 @@
+"""Per-arch reduced-config smoke: forward + one train step, shapes + finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py and EXPERIMENTS.md §Dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import TrainConfig
+from repro.models import build_model
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def make_batch(cfg, rng, b=2, s=32):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.encoder_layers:
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(b, 16, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduce()
+    bundle = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, rng)
+
+    logits = bundle.forward_fn(bundle.init(jax.random.key(0)), batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+    state = init_train_state(bundle, tcfg, jax.random.key(0))
+    step = jax.jit(make_train_step(bundle, tcfg))
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) == pytest.approx(np.log(cfg.vocab_size), rel=0.35)
+    assert int(state2.opt.step) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["arctic_480b", "dbrx_132b", "recurrentgemma_2b",
+                                  "gemma2_2b", "mamba2_1_3b", "seamless_m4t_medium"])
+def test_param_count_matches_published(arch):
+    expected = {
+        "arctic_480b": 477e9, "dbrx_132b": 132e9, "recurrentgemma_2b": 2.7e9,
+        "gemma2_2b": 2.6e9, "mamba2_1_3b": 1.3e9, "seamless_m4t_medium": 0.6e9,
+    }[arch]
+    total, active = get_config(arch).param_count()
+    assert total == pytest.approx(expected, rel=0.06)
+    assert active <= total

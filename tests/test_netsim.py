@@ -1,0 +1,75 @@
+"""Fluid network: fairness, conservation, events, failure."""
+
+import pytest
+
+from repro.core import FluidNetwork
+
+
+def test_single_flow_time():
+    net = FluidNetwork()
+    a = net.add_node("a", up_bps=100.0, down_bps=1e9)
+    b = net.add_node("b", up_bps=1.0, down_bps=50.0)
+    done = []
+    net.start_flow(a, b, 500.0, on_complete=lambda f, t: done.append(t))
+    net.run()
+    assert done == [pytest.approx(10.0)]  # bottleneck = 50 B/s down
+
+
+def test_fair_share_two_flows():
+    net = FluidNetwork()
+    src = net.add_node("s", up_bps=100.0, down_bps=1.0)
+    d1 = net.add_node("d1", 1.0, 1000.0)
+    d2 = net.add_node("d2", 1.0, 1000.0)
+    times = {}
+    net.start_flow(src, d1, 100.0, on_complete=lambda f, t: times.setdefault("d1", t))
+    net.start_flow(src, d2, 200.0, on_complete=lambda f, t: times.setdefault("d2", t))
+    net.run()
+    # equal 50/50 until d1 finishes at t=2, then d2 gets 100 B/s
+    assert times["d1"] == pytest.approx(2.0)
+    assert times["d2"] == pytest.approx(3.0)
+
+
+def test_max_min_respects_down_capacity():
+    net = FluidNetwork()
+    s1 = net.add_node("s1", 100.0, 1.0)
+    s2 = net.add_node("s2", 100.0, 1.0)
+    d = net.add_node("d", 1.0, 120.0)
+    t = {}
+    net.start_flow(s1, d, 60.0, on_complete=lambda f, tt: t.setdefault("1", tt))
+    net.start_flow(s2, d, 60.0, on_complete=lambda f, tt: t.setdefault("2", tt))
+    net.run()
+    assert t["1"] == pytest.approx(1.0)  # 60 B/s each (sum capped at 120)
+
+
+def test_conservation():
+    net = FluidNetwork()
+    a = net.add_node("a", 10.0, 10.0)
+    b = net.add_node("b", 10.0, 10.0)
+    net.start_flow(a, b, 100.0)
+    net.start_flow(b, a, 40.0)
+    net.run()
+    assert sum(net.bytes_sent.values()) == pytest.approx(
+        sum(net.bytes_received.values())
+    )
+    assert net.bytes_sent["a"] == pytest.approx(100.0)
+
+
+def test_timers_and_failure():
+    net = FluidNetwork()
+    a = net.add_node("a", 10.0, 10.0)
+    b = net.add_node("b", 10.0, 10.0)
+    aborted = []
+    net.start_flow(a, b, 1000.0, on_abort=lambda f, t: aborted.append(t))
+    net.schedule(5.0, lambda t: net.fail_node(b))
+    net.run()
+    assert aborted == [pytest.approx(5.0)]
+    assert net.now == pytest.approx(5.0)
+
+
+def test_deadlock_detection():
+    net = FluidNetwork()
+    a = net.add_node("a", 0.0, 0.0)   # zero capacity
+    b = net.add_node("b", 0.0, 0.0)
+    net.start_flow(a, b, 10.0)
+    with pytest.raises(RuntimeError, match="deadlock"):
+        net.run()

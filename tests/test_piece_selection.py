@@ -1,0 +1,48 @@
+import numpy as np
+import pytest
+
+from repro.core import Bitfield
+from repro.core import piece_selection as ps
+
+
+def test_rarest_first_picks_min_availability():
+    mine = Bitfield.from_indices(6, [0])
+    remote = Bitfield.full(6)
+    avail = np.array([5, 3, 1, 1, 9, 2])
+    rng = np.random.default_rng(0)
+    picks = {
+        ps.rarest_first(mine, remote, avail, set(), rng) for _ in range(50)
+    }
+    assert picks <= {2, 3}  # the two rarest needed pieces
+    assert picks == {2, 3}  # random tie-break explores both
+
+
+def test_never_picks_held_or_inflight():
+    mine = Bitfield.from_indices(4, [0, 1])
+    remote = Bitfield.full(4)
+    avail = np.ones(4)
+    rng = np.random.default_rng(0)
+    got = ps.rarest_first(mine, remote, avail, {2}, rng)
+    assert got == 3
+
+
+def test_sequential_and_random():
+    mine = Bitfield(5)
+    remote = Bitfield.from_indices(5, [1, 3, 4])
+    avail = np.ones(5)
+    rng = np.random.default_rng(0)
+    assert ps.sequential(mine, remote, avail, set(), rng) == 1
+    assert ps.random_first(mine, remote, avail, set(), rng) in {1, 3, 4}
+
+
+def test_exhausted_returns_none():
+    mine = Bitfield.full(3)
+    remote = Bitfield.full(3)
+    assert ps.rarest_first(mine, remote, np.ones(3), set(), np.random.default_rng(0)) is None
+
+
+def test_endgame_detection():
+    mine = Bitfield.from_indices(4, [0, 1])
+    assert not ps.in_endgame(mine, set())
+    assert ps.in_endgame(mine, {2, 3})
+    assert not ps.in_endgame(Bitfield.full(4), {0})

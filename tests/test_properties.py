@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import Bitfield, FluidNetwork, LocalSwarm, MetaInfo
+from repro.core import piece_selection as ps
+
+COMMON = dict(deadline=None, suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(data=st.binary(min_size=1, max_size=4096),
+       piece_length=st.integers(16, 512))
+@settings(max_examples=40, **COMMON)
+def test_metainfo_roundtrip_any_payload(data, piece_length):
+    mi = MetaInfo.from_bytes(data, piece_length)
+    pieces = dict(mi.split_pieces(data))
+    assert sum(len(p) for p in pieces.values()) == len(data)
+    assert all(mi.verify_piece(i, p) for i, p in pieces.items())
+    from repro.core import assemble
+    assert assemble(mi, pieces) == data
+
+
+@given(data=st.binary(min_size=32, max_size=2048),
+       flip=st.integers(0, 10_000))
+@settings(max_examples=40, **COMMON)
+def test_any_single_bitflip_detected(data, flip):
+    mi = MetaInfo.from_bytes(data, 128)
+    idx = flip % len(data)
+    corrupted = bytearray(data)
+    corrupted[idx] ^= 1 << (flip % 8) or 1
+    if bytes(corrupted) == data:
+        corrupted[idx] ^= 0xFF
+    piece = idx // 128
+    s, e = mi.piece_span(piece)
+    assert not mi.verify_piece(piece, bytes(corrupted[s:e]))
+
+
+@given(n=st.integers(1, 64),
+       mine=st.sets(st.integers(0, 63)),
+       remote=st.sets(st.integers(0, 63)),
+       inflight=st.sets(st.integers(0, 63)),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=60, **COMMON)
+def test_selection_never_redundant(n, mine, remote, inflight, seed):
+    mine = {i for i in mine if i < n}
+    remote = {i for i in remote if i < n}
+    inflight = {i for i in inflight if i < n}
+    bf_m = Bitfield.from_indices(n, mine)
+    bf_r = Bitfield.from_indices(n, remote)
+    avail = np.ones(n, np.int64)
+    rng = np.random.default_rng(seed)
+    for policy in ("rarest_first", "sequential", "random_first"):
+        got = ps.POLICIES[policy](bf_m, bf_r, avail, inflight, rng)
+        if got is not None:
+            assert got in remote and got not in mine and got not in inflight
+        else:
+            assert not (remote - mine - inflight)
+
+
+@given(caps=st.lists(st.tuples(st.floats(1.0, 100.0), st.floats(1.0, 100.0)),
+                     min_size=2, max_size=6),
+       sizes=st.lists(st.floats(1.0, 1000.0), min_size=1, max_size=8),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, **COMMON)
+def test_netsim_conservation_and_capacity(caps, sizes, seed):
+    net = FluidNetwork()
+    nodes = [net.add_node(f"n{i}", up, down) for i, (up, down) in enumerate(caps)]
+    rng = np.random.default_rng(seed)
+    for s in sizes:
+        a, b = rng.choice(len(nodes), 2, replace=False)
+        net.start_flow(nodes[a], nodes[b], float(s))
+    net._recompute_rates()
+    # allocations never exceed capacities
+    up_alloc = {n.name: 0.0 for n in nodes}
+    down_alloc = {n.name: 0.0 for n in nodes}
+    for f in net.flows.values():
+        up_alloc[f.src.name] += f.rate
+        down_alloc[f.dst.name] += f.rate
+    for n in nodes:
+        assert up_alloc[n.name] <= n.up_bps * (1 + 1e-9)
+        assert down_alloc[n.name] <= n.down_bps * (1 + 1e-9)
+    net.run()
+    assert abs(sum(net.bytes_sent.values()) - sum(net.bytes_received.values())) < 1e-6
+    assert sum(net.bytes_sent.values()) == __import__("pytest").approx(sum(sizes))
+
+
+@given(n_pieces=st.integers(2, 24), n_peers=st.integers(2, 5),
+       seed=st.integers(0, 100))
+@settings(max_examples=15, **COMMON)
+def test_local_swarm_always_converges_verified(n_pieces, n_peers, seed):
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, n_pieces * 64, np.uint8).tobytes()
+    mi = MetaInfo.from_bytes(payload, 64)
+    sw = LocalSwarm(mi, dict(mi.split_pieces(payload)),
+                    [f"h{i}" for i in range(n_peers)], seed=seed)
+    sw.run()
+    up = sum(l.uploaded for l in sw.ledgers().values())
+    down = sum(l.downloaded for l in sw.ledgers().values())
+    assert up == down  # byte conservation at piece granularity
+    for p in sw.peers.values():
+        assert p.bitfield.complete
+        for i, data in p.store.items():
+            assert mi.verify_piece(i, data)

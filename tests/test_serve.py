@@ -1,0 +1,57 @@
+"""Serving engine: greedy determinism, continuous batching, temperature."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("granite_3_2b").reduce()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    return ServeEngine(bundle, params, ServeConfig(max_new_tokens=6))
+
+
+def test_greedy_deterministic(engine):
+    prompts = np.ones((2, 8), np.int32) * 5
+    a = engine.generate(prompts)
+    b = engine.generate(prompts)
+    assert a.shape == (2, 6)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32 and (a >= 0).all()
+
+
+def test_batch_order_invariance(engine):
+    """Each slot decodes independently: swapping batch rows swaps outputs."""
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 100, (2, 8)).astype(np.int32)
+    out = engine.generate(prompts)
+    flipped = engine.generate(prompts[::-1])
+    np.testing.assert_array_equal(out, flipped[::-1])
+
+
+def test_serve_queue_slots(engine):
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(0, 100, (8,)).astype(np.int32) for _ in range(5)]
+    outs = engine.serve_queue(reqs, slots=2, max_new_tokens=4)
+    assert len(outs) == 5 and all(o.shape == (4,) for o in outs)
+    # queue result == direct result for the same prompt
+    direct = engine.generate(reqs[3][None], max_new_tokens=4)[0]
+    np.testing.assert_array_equal(outs[3], direct)
+
+
+def test_temperature_sampling_varies():
+    cfg = get_config("granite_3_2b").reduce()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    e1 = ServeEngine(bundle, params, ServeConfig(max_new_tokens=8,
+                                                 temperature=1.5, seed=1))
+    e2 = ServeEngine(bundle, params, ServeConfig(max_new_tokens=8,
+                                                 temperature=1.5, seed=2))
+    p = np.ones((1, 6), np.int32)
+    assert not np.array_equal(e1.generate(p), e2.generate(p))

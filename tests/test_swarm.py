@@ -1,0 +1,101 @@
+"""SwarmSim end-to-end behaviour: completion, conservation, verification,
+churn, endgame straggler insurance, Fig-1 scaling shape."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MetaInfo, SwarmConfig, SwarmSim, flash_crowd, simulate_http,
+    staggered_arrivals,
+)
+
+
+def make_payload(n_bytes=1 << 15, piece=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, n_bytes, dtype=np.uint8).tobytes()
+    mi = MetaInfo.from_bytes(payload, piece, name="t")
+    return mi, payload
+
+
+def run_small(n_peers=6, corruption=0.0, seed=0, linger=None):
+    mi, payload = make_payload()
+    sim = SwarmSim(
+        mi, SwarmConfig(corruption_prob=corruption), seed=seed,
+        origin_payload=dict(mi.split_pieces(payload)),
+    )
+    sim.add_origin(up_bps=2e5)
+    sim.add_peers(flash_crowd(n_peers), up_bps=4e5, down_bps=8e5,
+                  seed_linger=linger)
+    return mi, payload, sim, sim.run()
+
+
+def test_all_peers_complete_and_verified():
+    mi, payload, sim, res = run_small()
+    assert len(res.completion_time) == 6
+    from repro.core import assemble
+    for pid in list(res.completion_time):
+        assert assemble(mi, sim.agents[pid].store) == payload
+
+
+def test_ledger_conservation():
+    _, _, sim, res = run_small()
+    up = sum(l.uploaded for l in res.ledgers.values())
+    down = sum(l.downloaded for l in res.ledgers.values())
+    wasted = sum(l.wasted for l in res.ledgers.values())
+    assert up == pytest.approx(down + wasted)
+    assert res.stats.total_downloaded == pytest.approx(down)
+
+
+def test_corrupted_pieces_rejected_but_swarm_completes():
+    mi, payload, sim, res = run_small(corruption=0.15, seed=1)
+    assert len(res.completion_time) == 6
+    assert sum(l.wasted for l in res.ledgers.values()) > 0
+    from repro.core import assemble
+    assert assemble(mi, sim.agents["peer0000"].store) == payload
+
+
+def test_peer_failure_mid_download():
+    mi, payload = make_payload()
+    sim = SwarmSim(mi, SwarmConfig(), seed=0,
+                   origin_payload=dict(mi.split_pieces(payload)))
+    sim.add_origin(up_bps=2e5)
+    sim.add_peers(flash_crowd(5), up_bps=4e5, down_bps=8e5)
+    sim.net.schedule(0.05, lambda t: sim.fail_peer("peer0002"))
+    res = sim.run()
+    done = set(res.completion_time)
+    assert "peer0002" not in done
+    assert done == {f"peer{i:04d}" for i in range(5)} - {"peer0002"}
+
+
+def test_seed_linger_departure():
+    _, _, sim, res = run_small(linger=5.0)
+    assert len(res.completion_time) == 6
+    assert all(a.departed for a in sim.agents.values() if not a.is_origin)
+
+
+def test_origin_load_sublinear_vs_http():
+    """Fig 1: with a swarm, origin bytes grow far slower than N x size."""
+    mi = MetaInfo.from_sizes_only(int(1e8), int(1e6), name="f")
+    loads = {}
+    for n in (4, 16):
+        sim = SwarmSim(mi, SwarmConfig(), seed=0)
+        sim.add_origin(up_bps=2e6)
+        sim.add_peers(staggered_arrivals(n, interval=10.0), up_bps=8e6,
+                      down_bps=16e6)
+        res = sim.run()
+        loads[n] = res.origin_uploaded
+    http_ratio = 16 / 4
+    swarm_ratio = loads[16] / loads[4]
+    assert swarm_ratio < http_ratio / 1.6
+    assert loads[16] < 16 * mi.length / 2  # way below client-server
+
+
+def test_ud_ratio_grows_with_community():
+    mi = MetaInfo.from_sizes_only(int(5e7), int(1e6), name="u")
+    sim = SwarmSim(mi, SwarmConfig(), seed=0)
+    sim.add_origin(up_bps=1e6)
+    sim.add_peers(staggered_arrivals(12, interval=30.0), up_bps=16e6,
+                  down_bps=32e6, seed_linger=600.0)
+    res = sim.run()
+    assert res.ud_ratio > 2.0
+    assert res.stats.completed == 12

@@ -1,0 +1,59 @@
+"""Eq. 1 + Table 1: the paper's published numbers, reproduced exactly."""
+
+import pytest
+
+from repro.core import (
+    CostModel, MetaInfo, PAPER_UD_RATIO, Tracker, paper_table1,
+    project_row, reddit_case_study, ud_ratio,
+)
+from repro.core.accounting import GB, TB
+
+
+def test_eq1_reddit_ledger():
+    cs = reddit_case_study()
+    assert cs["ud_ratio"] == pytest.approx(42.067, rel=2e-3)     # Eq. 1
+    assert cs["cost_per_download"] == pytest.approx(4.42, abs=0.01)
+    assert cs["http_bill"] == pytest.approx(424.32, rel=1e-3)
+    assert cs["at_bill"] == pytest.approx(10.09, abs=0.01)
+
+
+def test_table1_rows_match_paper():
+    rows = {r.name: r for r in paper_table1()}
+    # upload columns (100 downloads)
+    assert rows["whale"].http_upload_bytes == pytest.approx(873.0 * GB)
+    assert rows["whale"].at_upload_bytes == pytest.approx(20.68 * GB, rel=0.01)
+    assert rows["diabetes"].http_upload_bytes == pytest.approx(8.22 * TB)
+    assert rows["diabetes"].at_upload_bytes == pytest.approx(0.20 * TB, rel=0.03)
+    assert rows["imagenet"].at_upload_bytes == pytest.approx(0.37 * TB, rel=0.02)
+    # cost savings
+    assert rows["whale"].cost_savings == pytest.approx(23.36, rel=0.01)
+    assert rows["diabetes"].cost_savings == pytest.approx(220.68, rel=0.01)
+    assert rows["imagenet"].cost_savings == pytest.approx(422.29, rel=0.01)
+    # download times (hours; the paper's "m" column is a typo for hours)
+    assert rows["whale"].http_hours == pytest.approx(4.85, rel=0.01)
+    assert rows["whale"].at_hours == pytest.approx(0.07, abs=0.005)
+    assert rows["diabetes"].http_hours == pytest.approx(45.66, rel=0.01)
+    assert rows["diabetes"].at_hours == pytest.approx(0.67, abs=0.01)
+    assert rows["imagenet"].http_hours == pytest.approx(87.39, rel=0.01)
+    assert rows["imagenet"].at_hours == pytest.approx(1.28, abs=0.01)
+
+
+def test_tracker_announce_scrape():
+    mi = MetaInfo.from_bytes(b"z" * 4096, 1024)
+    tr = Tracker()
+    tr.register(mi)
+    tr.announce(mi, "origin", uploaded=0, downloaded=0, event="started",
+                is_origin=True)
+    peers = tr.announce(mi, "p1", uploaded=0, downloaded=0, event="started")
+    assert peers == ["origin"]
+    tr.announce(mi, "p1", uploaded=100.0, downloaded=4096.0, event="completed")
+    tr.announce(mi, "origin", uploaded=3996.0, downloaded=0, event="update",
+                is_origin=True)
+    st = tr.scrape(mi)
+    assert st.seeders == 2 and st.leechers == 0 and st.completed == 1
+    assert st.ud_ratio == pytest.approx(4096.0 / 3996.0)
+
+
+def test_ud_ratio_edge_cases():
+    assert ud_ratio(0.0, 0.0) == 0.0
+    assert ud_ratio(10.0, 0.0) == float("inf")
