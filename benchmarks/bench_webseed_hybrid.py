@@ -1,0 +1,105 @@
+"""Web-seed hybrid origin — swarm-fraction sweep (Fig. 1 crossover).
+
+Sweeps the fraction of the piece space routed through the swarm from 0
+(pure HTTP — must match ``simulate_http`` to float tolerance) to 1 (pure
+swarm — ~1 copy of origin egress; with a peer-protocol origin it must
+match ``SwarmSim`` exactly), across flash-crowd, staggered, and Poisson
+arrivals. The assertions are the paper's hybrid story: origin egress falls
+monotonically toward one copy as the swarm takes over, while downloads get
+*faster*, not slower.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    MetaInfo, OriginPolicy, SwarmConfig, SwarmSim, WebSeedSwarmSim,
+    flash_crowd, poisson_arrivals, simulate_http, staggered_arrivals,
+)
+
+SIZE = 1e9
+PIECE = 16e6
+N = 16
+ORIGIN = 20e6
+PEER_UP = 25e6
+PEER_DOWN = 50e6
+FRACTIONS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def run_point(mi: MetaInfo, arrivals, fraction: float, seed: int = 3,
+              **policy_kw):
+    sim = WebSeedSwarmSim(
+        mi,
+        OriginPolicy(swarm_fraction=fraction, origin_up_bps=ORIGIN,
+                     **policy_kw),
+        SwarmConfig(), seed=seed,
+    )
+    sim.add_web_origin()
+    sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    return sim.run()
+
+
+def main(report):
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="webseed")
+    kinds = {
+        "flash": flash_crowd(N),
+        "stagger": staggered_arrivals(N, interval=30.0),
+        "poisson": poisson_arrivals(N, 0.2, np.random.default_rng(7)),
+    }
+    for label, arrivals in kinds.items():
+        http = simulate_http(mi, arrivals, ORIGIN, PEER_DOWN)
+        copies = {}
+        times = {}
+        for f in FRACTIONS:
+            t0 = time.perf_counter()
+            res = run_point(mi, arrivals, f)
+            wall = (time.perf_counter() - t0) * 1e6
+            copies[f] = res.origin_uploaded / mi.length
+            times[f] = res.mean_completion_time()
+            report(
+                f"webseed/{label}/f{f:.2f}", wall,
+                f"origin={copies[f]:.2f}copies "
+                f"http={res.origin_http_uploaded / mi.length:.2f}copies "
+                f"t={times[f]:.0f}s ud={res.ud_ratio:.1f}",
+            )
+            if f == 0.0:
+                # pure-HTTP endpoint: per-client completion times must match
+                # the client-server baseline to float tolerance
+                a = np.array([http.completion_time[p] for p, _ in arrivals])
+                b = np.array([res.completion_time[p] for p, _ in arrivals])
+                assert np.allclose(a, b, rtol=1e-6), (label, a, b)
+                assert copies[f] == N
+        # origin egress falls monotonically toward ~1 copy
+        seq = [copies[f] for f in FRACTIONS]
+        assert all(x >= y - 1e-9 for x, y in zip(seq, seq[1:])), (label, seq)
+        assert seq[-1] < 2.0, (label, seq)
+        # and the hybrid never slows clients down vs pure HTTP
+        assert times[1.0] <= times[0.0] + 1e-6, (label, times)
+        report(
+            f"webseed/{label}/crossover", 0.0,
+            f"copies {seq[0]:.1f}->{seq[-1]:.2f} "
+            f"t {times[0.0]:.0f}s->{times[1.0]:.0f}s",
+        )
+
+    # pure-swarm endpoint: with a peer-protocol origin the hybrid at
+    # fraction 1 IS SwarmSim — identical egress and completion times
+    arrivals = kinds["stagger"]
+    ref = SwarmSim(mi, SwarmConfig(), seed=3)
+    ref.add_origin(up_bps=ORIGIN)
+    ref.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    rres = ref.run()
+    hres = run_point(mi, arrivals, 1.0, serve_peer_protocol=True)
+    a = np.array([rres.completion_time[p] for p, _ in arrivals])
+    b = np.array([hres.completion_time[p] for p, _ in arrivals])
+    assert np.allclose(a, b, rtol=1e-9)
+    assert abs(hres.origin_uploaded - rres.origin_uploaded) < 1.0
+    report("webseed/pure_swarm_equiv", 0.0,
+           f"origin={hres.origin_uploaded / mi.length:.2f}copies "
+           f"max_dt={float(np.abs(a - b).max()):.2e}s")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     bench_roofline,
     bench_swarm_scaling,
     bench_table1_costs,
+    bench_webseed_hybrid,
 )
 
 SUITES = {
@@ -31,6 +32,7 @@ SUITES = {
     "fig1": bench_fig1_server_load,
     "coldstart": bench_cluster_coldstart,
     "scaling": bench_swarm_scaling,
+    "webseed": bench_webseed_hybrid,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

@@ -47,5 +47,11 @@ from .swarm import (
 )
 from .topology import ClusterTopology, HostAddr
 from .tracker import PeerRecord, SwarmStats, Tracker
+from .webseed import (
+    OriginPolicy,
+    WebSeedOrigin,
+    WebSeedSwarmSim,
+    swarm_routed_mask,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -28,6 +28,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .topology import ClusterTopology
+from ..jax_compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,7 +104,7 @@ def allgather_bundle(striped: jax.Array, mesh: jax.sharding.Mesh, axis: str) -> 
     def gather(x):
         return jax.lax.all_gather(x, axis, axis=0, tiled=True)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         gather,
         mesh=mesh,
         in_specs=P(axis, None),

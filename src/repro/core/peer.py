@@ -67,6 +67,9 @@ class PeerAgent:
         )
         # payload store: piece index -> bytes (None => size-only simulation)
         self.store = store
+        # web-seed routing: when set, the *peer* path only pursues pieces with
+        # want_mask True — the rest arrive via HTTP range requests (webseed.py)
+        self.want_mask: Optional[np.ndarray] = None
         self.neighbors: dict[str, NeighborState] = {}
         self.availability = np.zeros(metainfo.num_pieces, dtype=np.int64)
         self.choker = Choker(choker_cfg or ChokerConfig(), rng)
@@ -91,7 +94,22 @@ class PeerAgent:
 
     def interested_in(self, other_id: str) -> bool:
         nb = self.neighbors.get(other_id)
-        return nb is not None and self.bitfield.interested_in(nb.bitfield)
+        if nb is None:
+            return False
+        if self.want_mask is None:
+            return self.bitfield.interested_in(nb.bitfield)
+        return bool(
+            (nb.bitfield.as_array() & ~self.bitfield.as_array() & self.want_mask).any()
+        )
+
+    def _peer_path_bitfield(self) -> Bitfield:
+        """Bitfield used for *peer* request planning: pieces outside
+        ``want_mask`` are treated as held, so selection skips them."""
+        if self.want_mask is None:
+            return self.bitfield
+        return Bitfield(
+            len(self.bitfield), self.bitfield.as_array() | ~self.want_mask
+        )
 
     # ------------------------------------------------------------- membership
     def connect(self, other_id: str, other_bitfield: Bitfield) -> None:
@@ -187,6 +205,7 @@ class PeerAgent:
         plans: list[tuple[str, int]] = []
         if self.is_seed or self.departed:
             return plans
+        mine = self._peer_path_bitfield()
         budget = self.pipeline - len(self.in_flight) - len(plans)
         sources = [
             (pid, nb)
@@ -201,7 +220,7 @@ class PeerAgent:
             while budget > 0 and nb.outstanding < self.per_peer_requests:
                 piece = ps.select_piece(
                     self.policy,
-                    self.bitfield,
+                    mine,
                     nb.bitfield,
                     self.availability,
                     in_flight,
@@ -216,12 +235,12 @@ class PeerAgent:
                 budget -= 1
 
         # endgame: all missing pieces already in flight -> insure the tail
-        if budget > 0 and ps.in_endgame(self.bitfield, in_flight):
+        if budget > 0 and ps.in_endgame(mine, in_flight):
             for pid, nb in sources:
                 if budget <= 0:
                     break
                 cand = ps.endgame_candidates(
-                    self.bitfield, nb.bitfield,
+                    mine, nb.bitfield,
                     self.endgame_extra | {p for s, p in plans if s == pid},
                 )
                 for piece in cand.tolist():

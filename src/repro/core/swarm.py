@@ -59,9 +59,14 @@ class SwarmResult:
     completion_time: dict[str, float]       # peer -> (complete - arrive) seconds
     finish_at: dict[str, float]
     ledgers: dict[str, Ledger]
-    origin_uploaded: float
+    origin_uploaded: float                  # total origin egress (peer + HTTP)
     total_downloaded: float
     events: int
+    origin_http_uploaded: float = 0.0       # web-seed HTTP share of the above
+
+    @property
+    def origin_peer_uploaded(self) -> float:
+        return self.origin_uploaded - self.origin_http_uploaded
 
     @property
     def ud_ratio(self) -> float:
@@ -274,35 +279,42 @@ class SwarmSim:
             src.record_served(piece, dst_id, now)
             self._announce_counters(src, now)
         if accepted:
-            # cancel endgame duplicates still in flight for this piece
-            for other_flow in list(self.net.flows.values()):
-                _, ofdst, ofpiece = other_flow.tag
-                if ofdst == dst_id and ofpiece == piece:
-                    self.net.abort_flow(other_flow)
-            have_targets = []
-            for pid in dst.neighbors:
-                other = self.agents.get(pid)
-                if other is not None and not other.departed:
-                    other.on_have(dst_id, piece)
-                    have_targets.append(other)
-            self._announce_counters(dst, now)
-            # a Have can unblock a stalled neighbor (new candidate piece)
-            for other in have_targets:
-                if not other.is_seed:
-                    self._launch(other, now)
-            if dst.complete and dst.completed_at is None:
-                dst.completed_at = now
-                self.tracker.announce(
-                    self.metainfo, dst_id,
-                    uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
-                    event="completed", now=now,
-                )
-                linger = getattr(dst, "seed_linger", None)
-                if linger is not None:
-                    self.net.schedule(
-                        now + linger, lambda t, a=dst: self._depart(a, t)
-                    )
+            self._on_piece_accepted(dst, piece, now)
         self._launch(dst, now)
+
+    def _on_piece_accepted(self, dst: PeerAgent, piece: int, now: float) -> None:
+        """Post-verification bookkeeping shared by the peer path and the
+        web-seed HTTP path: cancel duplicates, broadcast Have, handle
+        completion + seed-linger departure."""
+        dst_id = dst.peer_id
+        # cancel endgame duplicates still in flight for this piece
+        for other_flow in list(self.net.flows.values()):
+            _, ofdst, ofpiece = other_flow.tag
+            if ofdst == dst_id and ofpiece == piece:
+                self.net.abort_flow(other_flow)
+        have_targets = []
+        for pid in dst.neighbors:
+            other = self.agents.get(pid)
+            if other is not None and not other.departed:
+                other.on_have(dst_id, piece)
+                have_targets.append(other)
+        self._announce_counters(dst, now)
+        # a Have can unblock a stalled neighbor (new candidate piece)
+        for other in have_targets:
+            if not other.is_seed:
+                self._launch(other, now)
+        if dst.complete and dst.completed_at is None:
+            dst.completed_at = now
+            self.tracker.announce(
+                self.metainfo, dst_id,
+                uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
+                event="completed", now=now,
+            )
+            linger = getattr(dst, "seed_linger", None)
+            if linger is not None:
+                self.net.schedule(
+                    now + linger, lambda t, a=dst: self._depart(a, t)
+                )
 
     def _on_piece_abort(self, flow: Flow, now: float) -> None:
         src_id, dst_id, piece = flow.tag
@@ -365,6 +377,7 @@ class SwarmSim:
             origin_uploaded=stats.origin_uploaded,
             total_downloaded=stats.total_downloaded,
             events=self.net.events_processed,
+            origin_http_uploaded=stats.origin_http_uploaded,
         )
 
 
@@ -392,11 +405,18 @@ class LocalSwarm:
         upload_slots: int = 4,
         origin_slots: int = 4,
         needed: Optional[dict[str, np.ndarray]] = None,
+        webseed=None,
     ):
         """``needed``: optional per-peer bool mask (num_pieces,) restricting
         which pieces that peer must obtain (partitioned ingest — each data-
         parallel host fetches only its assigned shards). Peers still serve
-        everything they hold, so the swarm amplification is unchanged."""
+        everything they hold, so the swarm amplification is unchanged.
+
+        ``webseed``: optional :class:`repro.core.webseed.OriginPolicy`. When
+        set, the origin is a bare HTTP byte-range server (it joins the peer
+        mesh only if ``serve_peer_protocol``); peers fall back to verified
+        range reads for pieces no peer holds — which is what lets a swarm
+        cold-start from an origin with zero seeded peers."""
         self.metainfo = metainfo
         self.rng = np.random.default_rng(seed)
         self.policy = policy
@@ -407,13 +427,28 @@ class LocalSwarm:
             "origin", metainfo, np.random.default_rng(seed + 1),
             is_origin=True, store=dict(origin_store),
         )
+        self.webseed = webseed
+        self.web_origin = None
+        self._swarm_routed: Optional[np.ndarray] = None
+        if webseed is not None:
+            from .webseed import WebSeedOrigin, swarm_routed_mask
+
+            self.web_origin = WebSeedOrigin(
+                metainfo, store=self.origin.store, policy=webseed
+            )
+            self._swarm_routed = swarm_routed_mask(
+                metainfo, webseed.swarm_fraction
+            )
         self.peers: dict[str, PeerAgent] = {}
         for i, pid in enumerate(peer_ids):
             self.peers[pid] = PeerAgent(
                 pid, metainfo, np.random.default_rng(seed + 2 + i),
                 policy=policy, store={},
             )
-        everyone = {**self.peers, "origin": self.origin}
+        origin_in_mesh = webseed is None or webseed.serve_peer_protocol
+        everyone = dict(self.peers)
+        if origin_in_mesh:
+            everyone["origin"] = self.origin
         for pid, agent in everyone.items():
             for oid, other in everyone.items():
                 if pid != oid:
@@ -452,11 +487,44 @@ class LocalSwarm:
         best = cand[avail == avail.min()]
         return int(best[me.rng.integers(len(best))])
 
+    def _select_http(self, me: PeerAgent, mask) -> Optional[int]:
+        """Next piece to range-request from the web-seed origin: HTTP-routed
+        pieces, plus — under swarm-first fallback — pieces no connected peer
+        holds (availability 0). Lowest index first; the immediate Have
+        propagation inside a round self-staggers concurrent clients."""
+        cand = ~me.bitfield.as_array()
+        if mask is not None:
+            cand = cand & mask
+        if self.webseed.mode != "http_first":
+            eligible = ~self._swarm_routed
+            if self.webseed.http_fallback:
+                eligible = eligible | (me.availability == 0)
+            cand = cand & eligible
+        idx = np.flatnonzero(cand)
+        return int(idx[0]) if idx.size else None
+
+    def _http_fetch(self, me: PeerAgent, pid: str) -> Optional[int]:
+        """One verified range read from the origin; returns the piece on
+        success, None when nothing is eligible or the range failed
+        verification (re-fetched on a later attempt)."""
+        piece = self._select_http(me, self.needed.get(pid))
+        if piece is None:
+            return None
+        data = self.web_origin.read_piece(piece)
+        self.origin.record_served(piece, pid, float(self.rounds))
+        if not me.accept_piece(piece, "origin::http", data, float(self.rounds)):
+            return None
+        for wid, w in {**self.peers, "origin": self.origin}.items():
+            if wid != pid:
+                w.on_have(pid, piece)
+        return piece
+
     def step(self) -> int:
         """One round; returns number of pieces moved."""
         self.rounds += 1
         budget = {pid: self.upload_slots for pid in self.peers}
         budget["origin"] = self.origin_slots
+        http_budget = self.webseed.max_concurrent if self.webseed else 0
         moved = 0
         order = sorted(self.peers)
         self.rng.shuffle(order)
@@ -466,6 +534,12 @@ class LocalSwarm:
             if self._peer_done(pid):
                 continue
             mask = self.needed.get(pid)
+            peer_mask = mask
+            if self._swarm_routed is not None:
+                peer_mask = (
+                    self._swarm_routed if mask is None
+                    else mask & self._swarm_routed
+                )
             for _ in range(me.pipeline):
                 sources = [
                     (oid, nb) for oid, nb in sorted(me.neighbors.items())
@@ -474,7 +548,7 @@ class LocalSwarm:
                 self.rng.shuffle(sources)
                 got = None
                 for oid, nb in sources:
-                    piece = self._select(me, nb.bitfield, mask)
+                    piece = self._select(me, nb.bitfield, peer_mask)
                     if piece is None:
                         continue
                     src = self._agent(oid)
@@ -490,6 +564,11 @@ class LocalSwarm:
                             if wid != pid:
                                 w.on_have(pid, piece)
                     break
+                if got is None and self.web_origin is not None and http_budget > 0:
+                    got = self._http_fetch(me, pid)
+                    if got is not None:
+                        http_budget -= 1
+                        moved += 1
                 if got is None:
                     break
         return moved
@@ -506,6 +585,11 @@ class LocalSwarm:
         out = {pid: a.ledger for pid, a in self.peers.items()}
         out["origin"] = self.origin.ledger
         return out
+
+    @property
+    def http_uploaded(self) -> float:
+        """Origin bytes served over HTTP ranges (0 without a web seed)."""
+        return self.web_origin.http_uploaded if self.web_origin else 0.0
 
     @property
     def ud_ratio(self) -> float:

@@ -22,13 +22,16 @@ from .topology import ClusterTopology
 @dataclasses.dataclass
 class PeerRecord:
     peer_id: str
-    uploaded: float = 0.0     # payload bytes this peer has served
-    downloaded: float = 0.0   # payload bytes this peer has received
+    uploaded: float = 0.0        # payload bytes served via the peer protocol
+    downloaded: float = 0.0      # payload bytes this peer has received
     complete: bool = False
     left: bool = False
     arrived_at: float = 0.0
     completed_at: float = -1.0
     is_origin: bool = False
+    is_web_seed: bool = False    # origin exposes an HTTP byte-range endpoint
+    peer_protocol: bool = True   # False => never handed out in peer lists
+    http_uploaded: float = 0.0   # payload bytes served via HTTP range requests
 
 
 @dataclasses.dataclass
@@ -37,8 +40,14 @@ class SwarmStats:
     leechers: int
     total_uploaded: float
     total_downloaded: float
-    origin_uploaded: float
+    origin_uploaded: float       # total origin egress: peer protocol + HTTP
     completed: int
+    origin_http_uploaded: float = 0.0
+
+    @property
+    def origin_peer_uploaded(self) -> float:
+        """Origin egress served through the swarm peer protocol only."""
+        return self.origin_uploaded - self.origin_http_uploaded
 
     @property
     def ud_ratio(self) -> float:
@@ -79,15 +88,23 @@ class Tracker:
         event: str = "update",   # started | update | completed | stopped
         now: float = 0.0,
         is_origin: bool = False,
+        is_web_seed: bool = False,
+        peer_protocol: bool = True,
+        http_uploaded: Optional[float] = None,
         want_peers: int = 40,
     ) -> list[str]:
         swarm = self._swarm(metainfo)
         rec = swarm.get(peer_id)
         if rec is None:
-            rec = PeerRecord(peer_id=peer_id, arrived_at=now, is_origin=is_origin)
+            rec = PeerRecord(
+                peer_id=peer_id, arrived_at=now, is_origin=is_origin,
+                is_web_seed=is_web_seed, peer_protocol=peer_protocol,
+            )
             swarm[peer_id] = rec
         rec.uploaded = float(uploaded)
         rec.downloaded = float(downloaded)
+        if http_uploaded is not None:
+            rec.http_uploaded = float(http_uploaded)
         if event == "completed":
             rec.complete = True
             rec.completed_at = now
@@ -97,7 +114,7 @@ class Tracker:
         candidates = [
             pid
             for pid, r in swarm.items()
-            if pid != peer_id and not r.left
+            if pid != peer_id and not r.left and r.peer_protocol
         ]
         if self.topology is not None:
             candidates = self.topology.rank_peers(
@@ -117,10 +134,18 @@ class Tracker:
         return SwarmStats(
             seeders=sum(1 for r in live if r.complete or r.is_origin),
             leechers=sum(1 for r in live if not (r.complete or r.is_origin)),
-            total_uploaded=sum(r.uploaded for r in swarm.values()),
+            total_uploaded=sum(
+                r.uploaded + r.http_uploaded for r in swarm.values()
+            ),
             total_downloaded=sum(r.downloaded for r in swarm.values()),
-            origin_uploaded=sum(r.uploaded for r in swarm.values() if r.is_origin),
+            origin_uploaded=sum(
+                r.uploaded + r.http_uploaded
+                for r in swarm.values() if r.is_origin
+            ),
             completed=sum(1 for r in swarm.values() if r.complete),
+            origin_http_uploaded=sum(
+                r.http_uploaded for r in swarm.values() if r.is_origin
+            ),
         )
 
     def records(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:

@@ -1,0 +1,391 @@
+"""Web-seed hybrid origin: an HTTP server augmented with a swarm (BEP-19).
+
+This is the paper's headline mechanism made explicit: "by augmenting an
+existing HTTP server with a peer-to-peer swarm, requests get re-routed to
+get data from downloaders". The origin stays a plain byte-range HTTP
+server; leechers decide, *per piece request*, whether to hit the origin or
+a peer, and every HTTP-delivered piece immediately becomes swarm inventory
+(a Have broadcast), so the community amplifies each origin byte the same
+way a classic seed would — without the origin ever speaking the peer
+protocol unless asked to.
+
+Components:
+
+* :class:`OriginPolicy` — all the routing/serving knobs (below).
+* :class:`WebSeedOrigin` — the HTTP front-end over a piece store: verified
+  byte-range reads, admission control, an HTTP-egress ledger, and a
+  ``corrupt_once`` fault-injection hook (serve a bad range once, then heal)
+  for exercising the client-side verify + re-fetch path.
+* :func:`swarm_routed_mask` — deterministic per-piece route assignment.
+  Each piece hashes to a uniform score in [0, 1); pieces with score <
+  ``swarm_fraction`` are swarm-routed. The sets are *nested* across
+  fractions, so origin egress falls monotonically as the fraction grows
+  (the Fig. 1 hybrid crossover), and the endpoints are exact: fraction 0
+  is pure HTTP, fraction 1 is pure swarm.
+* :class:`WebSeedSwarmSim` — the time-domain engine: HTTP range flows and
+  peer flows share the origin node's uplink in the fluid netsim, and the
+  tracker ledger splits origin HTTP egress from peer egress
+  (``SwarmStats.origin_http_uploaded`` / ``origin_peer_uploaded``).
+
+The byte-domain integration lives in :class:`repro.core.swarm.LocalSwarm`
+(``webseed=`` argument): real verified range reads with HTTP fallback when
+no peer holds a piece, which is what lets ``repro.data.swarm_loader``
+cold-start ingest from a bare origin with zero seeded peers.
+
+``OriginPolicy`` knobs:
+
+======================  =====================================================
+``mode``                ``"swarm_first"``: swarm-routed pieces go to peers;
+                        the origin is only hit for HTTP-routed pieces and —
+                        when ``http_fallback`` — for pieces *no connected
+                        peer holds* (cold start, churn holes).
+                        ``"http_first"``: every missing piece is eligible
+                        for an HTTP range request the moment the client has
+                        a free slot; the swarm opportunistically re-routes
+                        whatever peers can already serve (origin offload).
+``swarm_fraction``      Fraction of the piece space routed through the
+                        swarm (0 = pure HTTP baseline, 1 = pure swarm).
+``origin_up_bps``       Bandwidth cap on origin egress (the HTTP server's
+                        uplink; shared with peer-protocol serving when
+                        ``serve_peer_protocol``).
+``max_concurrent``      Admission control: simultaneous range requests the
+                        origin will serve; excess requests are rejected.
+``backoff``             Seconds a rejected client waits before retrying.
+``http_pipeline``       Concurrent range requests per client (1 = serial
+                        range streaming, matching the HTTP baseline).
+``http_fallback``       Allow swarm-routed pieces to fall back to the
+                        origin when no connected peer holds them.
+``serve_peer_protocol`` The origin host *also* joins the swarm as a seed
+                        (one box, two serving paths, one uplink). With
+                        ``swarm_fraction=1`` this reproduces ``SwarmSim``
+                        exactly.
+======================  =====================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .metainfo import MetaInfo
+from .netsim import Flow
+from .peer import PeerAgent
+from .swarm import SwarmConfig, SwarmSim
+from .topology import ClusterTopology
+
+# --------------------------------------------------------------------------- policy
+
+
+@dataclasses.dataclass
+class OriginPolicy:
+    """Origin serving + request re-routing policy (see module docstring)."""
+
+    mode: str = "swarm_first"          # "swarm_first" | "http_first"
+    swarm_fraction: float = 1.0
+    origin_up_bps: float = 50e6
+    max_concurrent: int = 256
+    backoff: float = 2.0
+    http_pipeline: int = 1
+    http_fallback: bool = True
+    serve_peer_protocol: bool = False
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("swarm_first", "http_first"):
+            raise ValueError(f"unknown origin policy mode {self.mode!r}")
+        if not 0.0 <= self.swarm_fraction <= 1.0:
+            raise ValueError("swarm_fraction must be in [0, 1]")
+        if self.max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        if self.http_pipeline < 1:
+            raise ValueError("http_pipeline must be >= 1")
+
+
+def swarm_routed_mask(metainfo: MetaInfo, fraction: float) -> np.ndarray:
+    """Per-piece route assignment: True => swarm path, False => HTTP path.
+
+    Derived from each piece's content hash, so the assignment is stable
+    across runs and *nested* across fractions (the swarm set at f1 is a
+    subset of the set at f2 > f1) — which makes origin egress monotone in
+    ``fraction`` by construction.
+    """
+    n = metainfo.num_pieces
+    if fraction >= 1.0:
+        return np.ones(n, dtype=bool)
+    if fraction <= 0.0:
+        return np.zeros(n, dtype=bool)
+    scores = np.fromiter(
+        (int.from_bytes(h[:8], "big") / 2.0**64 for h in metainfo.piece_hashes),
+        dtype=np.float64, count=n,
+    )
+    return scores < fraction
+
+
+# --------------------------------------------------------------------------- origin
+
+
+class WebSeedOrigin:
+    """HTTP byte-range front-end over an origin piece store.
+
+    Serves raw ranges out of the content-addressed piece store (clients
+    verify; the origin is trusted for bytes, not for integrity), enforces
+    the admission cap, and keeps the HTTP-egress ledger the tracker splits
+    out of Eq. 1. ``store=None`` supports size-only simulation (bytes are
+    accounted, none materialize).
+    """
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        store: Optional[dict[int, bytes]] = None,
+        policy: Optional[OriginPolicy] = None,
+        name: str = "origin",
+    ):
+        self.metainfo = metainfo
+        self.store = store
+        self.policy = policy or OriginPolicy()
+        self.name = name
+        # ledger / telemetry
+        self.http_uploaded = 0.0
+        self.requests = 0
+        self.rejected = 0
+        self.active = 0
+        self.peak_active = 0
+        # fault injection: serve a corrupted range ONCE for these pieces,
+        # then heal — exercises client verify + re-fetch
+        self.corrupt_once: set[int] = set()
+
+    # ------------------------------------------------------------- admission
+    def try_admit(self) -> bool:
+        """Admit one range request, or reject (client backs off)."""
+        self.requests += 1
+        if self.active >= self.policy.max_concurrent:
+            self.rejected += 1
+            return False
+        self.active += 1
+        self.peak_active = max(self.peak_active, self.active)
+        return True
+
+    def release(self) -> None:
+        self.active = max(0, self.active - 1)
+
+    # ------------------------------------------------------------- range reads
+    def read_range(self, start: int, end: int) -> Optional[bytes]:
+        """Raw bytes [start, end) assembled from the piece store, or None
+        when the store is size-only or a covering piece is absent."""
+        if self.store is None:
+            return None
+        if not 0 <= start <= end <= self.metainfo.length:
+            raise ValueError(f"range [{start}, {end}) out of bounds")
+        plen = self.metainfo.piece_length
+        out = []
+        for piece in range(start // plen, -(-end // plen) if end else 0):
+            data = self.store.get(piece)
+            if data is None:
+                return None
+            p0, _ = self.metainfo.piece_span(piece)
+            out.append(data[max(start - p0, 0):end - p0])
+        return b"".join(out)
+
+    def read_piece(self, piece: int) -> Optional[bytes]:
+        """One piece via a range request, with egress accounting and the
+        corrupt-once fault hook applied."""
+        size = self.metainfo.piece_size(piece)
+        self.http_uploaded += size  # bytes cross the wire even if rejected later
+        data = self.read_range(*self.metainfo.piece_span(piece))
+        if data is not None and piece in self.corrupt_once:
+            self.corrupt_once.discard(piece)
+            data = bytes([data[0] ^ 0xFF]) + data[1:]
+        return data
+
+
+# --------------------------------------------------------------------------- time-domain engine
+
+
+class WebSeedSwarmSim(SwarmSim):
+    """Time-domain hybrid: HTTP origin + swarm over one fluid network.
+
+    Call :meth:`add_web_origin` instead of ``add_origin``; everything else
+    (``add_peers``, ``run``) is inherited. Per piece request the routing
+    mask + policy mode decide origin-vs-peer; HTTP range flows contend with
+    peer flows for the same origin uplink.
+    """
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        policy: Optional[OriginPolicy] = None,
+        cfg: Optional[SwarmConfig] = None,
+        seed: int = 0,
+        topology: Optional[ClusterTopology] = None,
+        origin_payload: Optional[dict[int, bytes]] = None,
+        same_pod_frac: float = 1.0,
+    ):
+        super().__init__(
+            metainfo, cfg, seed, topology=topology,
+            origin_payload=origin_payload, same_pod_frac=same_pod_frac,
+        )
+        self.policy = policy or OriginPolicy()
+        self._swarm_routed = swarm_routed_mask(
+            metainfo, self.policy.swarm_fraction
+        )
+        self.web_origin: Optional[WebSeedOrigin] = None
+        self.origin_id: Optional[str] = None
+        self._http_src: Optional[str] = None     # sentinel source id for flows
+        self._http_outstanding: dict[str, int] = {}
+        self._retry_scheduled: set[str] = set()
+
+    # ------------------------------------------------------------- membership
+    def _new_agent(self, peer_id: str, is_origin: bool) -> PeerAgent:
+        agent = super()._new_agent(peer_id, is_origin)
+        if not is_origin:
+            agent.want_mask = self._swarm_routed
+        return agent
+
+    def add_web_origin(
+        self, name: str = "origin", down_bps: float = 1.0
+    ) -> PeerAgent:
+        """Attach the hybrid origin: one netsim node whose uplink serves
+        HTTP range flows and (optionally) peer-protocol flows."""
+        pol = self.policy
+        agent = self._new_agent(name, is_origin=True)
+        agent.node = self.net.add_node(name, pol.origin_up_bps, down_bps)
+        self.origin_id = name
+        self._http_src = f"{name}::http"
+        self.web_origin = WebSeedOrigin(
+            self.metainfo, store=agent.store, policy=pol, name=name
+        )
+        self.tracker.announce(
+            self.metainfo, name, uploaded=0, downloaded=0,
+            event="started", now=self.net.now, is_origin=True,
+            is_web_seed=True, peer_protocol=pol.serve_peer_protocol,
+        )
+        return agent
+
+    # ------------------------------------------------------------- scheduling
+    def _launch(self, agent: PeerAgent, now: float) -> None:
+        super()._launch(agent, now)  # peer path (mask-constrained)
+        if self.web_origin is not None:
+            self._launch_http(agent, now)
+
+    def _next_http_piece(self, agent: PeerAgent) -> Optional[int]:
+        """Pick the next piece this client should range-request, or None.
+
+        In swarm_first mode, HTTP-routed pieces stream in index order and
+        swarm-routed pieces are only HTTP-eligible as *fallback* — when no
+        connected peer holds them — picked at random so a cold flash crowd
+        pulls disjoint ranges it can then trade. In http_first mode every
+        missing piece is eligible and the pick is random: identical clients
+        requesting identical sequential ranges would hold identical piece
+        prefixes forever, and nothing could ever be re-routed to a peer.
+        """
+        pol = self.policy
+        missing = ~agent.bitfield.as_array()
+        cand = missing.copy() if pol.mode == "http_first" \
+            else missing & ~self._swarm_routed
+        fallback = np.zeros_like(cand)
+        if pol.mode == "swarm_first" and pol.http_fallback:
+            fallback = missing & self._swarm_routed & (agent.availability == 0)
+        eligible = cand | fallback
+        if agent.in_flight:
+            idx = np.fromiter(agent.in_flight, dtype=np.int64)
+            eligible[idx] = False
+            cand[idx] = False
+            fallback[idx] = False
+        if not eligible.any():
+            return None
+        routed = np.flatnonzero(cand)
+        if routed.size:
+            if pol.mode == "http_first":
+                return int(routed[agent.rng.integers(routed.size)])
+            return int(routed[0])
+        cold = np.flatnonzero(fallback)
+        return int(cold[agent.rng.integers(cold.size)])
+
+    def _launch_http(self, agent: PeerAgent, now: float) -> None:
+        pol = self.policy
+        if (
+            agent.departed or agent.node is None or agent.is_seed
+            or agent.peer_id == self.origin_id
+        ):
+            return
+        origin = self.agents[self.origin_id]
+        if origin.node is None or origin.node.failed:
+            return
+        while self._http_outstanding.get(agent.peer_id, 0) < pol.http_pipeline:
+            piece = self._next_http_piece(agent)
+            if piece is None:
+                return
+            if not self.web_origin.try_admit():
+                self._schedule_retry(agent, now)
+                return
+            agent.in_flight[piece] = self._http_src
+            self._http_outstanding[agent.peer_id] = (
+                self._http_outstanding.get(agent.peer_id, 0) + 1
+            )
+            self.net.start_flow(
+                origin.node,
+                agent.node,
+                self.metainfo.piece_size(piece),
+                tag=(self._http_src, agent.peer_id, piece),
+                on_complete=self._on_http_done,
+                on_abort=self._on_http_abort,
+            )
+
+    def _schedule_retry(self, agent: PeerAgent, now: float) -> None:
+        pid = agent.peer_id
+        if pid in self._retry_scheduled:
+            return
+        self._retry_scheduled.add(pid)
+
+        def _retry(t: float, a: PeerAgent = agent) -> None:
+            self._retry_scheduled.discard(a.peer_id)
+            if not a.departed:
+                self._launch_http(a, t)
+
+        self.net.schedule(now + self.policy.backoff, _retry)
+
+    # ------------------------------------------------------------- HTTP events
+    def _on_http_done(self, flow: Flow, now: float) -> None:
+        src_tag, dst_id, piece = flow.tag
+        self.web_origin.release()
+        self._http_outstanding[dst_id] = max(
+            0, self._http_outstanding.get(dst_id, 0) - 1
+        )
+        dst = self.agents.get(dst_id)
+        if dst is None or dst.departed:
+            return
+        data = self.web_origin.read_piece(piece)
+        corrupt = (
+            self.cfg.corruption_prob > 0
+            and self.rng.random() < self.cfg.corruption_prob
+        )
+        if corrupt and data is not None:
+            data = bytes([data[0] ^ 0xFF]) + data[1:]
+        accepted = dst.accept_piece(piece, src_tag, data, now, corrupt=corrupt)
+        origin = self.agents.get(self.origin_id)
+        self.tracker.announce(
+            self.metainfo, self.origin_id,
+            uploaded=origin.ledger.uploaded if origin else 0.0,
+            downloaded=0.0, event="update", now=now, is_origin=True,
+            http_uploaded=self.web_origin.http_uploaded,
+        )
+        if accepted:
+            self._on_piece_accepted(dst, piece, now)
+        # rejected (corrupt range) pieces are back in the missing set; the
+        # relaunch below re-fetches them
+        self._launch(dst, now)
+
+    def _on_http_abort(self, flow: Flow, now: float) -> None:
+        src_tag, dst_id, piece = flow.tag
+        self.web_origin.release()
+        self._http_outstanding[dst_id] = max(
+            0, self._http_outstanding.get(dst_id, 0) - 1
+        )
+        dst = self.agents.get(dst_id)
+        if dst is None or dst.departed:
+            return
+        if dst.in_flight.get(piece) == src_tag:
+            del dst.in_flight[piece]
+        self._launch(dst, now)

@@ -28,6 +28,7 @@ import numpy as np
 
 from ..core.metainfo import MetaInfo
 from ..core.swarm import LocalSwarm
+from ..core.webseed import OriginPolicy
 from .dataset import ShardedCorpus, bytes_to_shard, pieces_for_shard, shard_file_entries
 from .shardstore import ShardStore
 
@@ -38,6 +39,7 @@ class IngestReport:
     origin_uploaded: float
     total_downloaded: float
     per_host_pieces: dict[str, int]
+    origin_http_uploaded: float = 0.0   # web-seed range-read share of egress
 
     @property
     def ud_ratio(self) -> float:
@@ -64,11 +66,17 @@ class SwarmShardLoader:
         origin_pieces: dict[int, bytes],
         host_stores: Sequence[ShardStore],
         seed: int = 0,
+        webseed: Optional[OriginPolicy] = None,
     ):
+        """``webseed``: serve the origin as a bare HTTP byte-range server
+        (see :mod:`repro.core.webseed`) — cold-start ingest then begins
+        from an un-seeded origin: the first copy of each piece enters the
+        swarm via a verified range read, after which hosts amplify it."""
         self.manifest = manifest
         self.origin_pieces = origin_pieces
         self.host_stores = list(host_stores)
         self.seed = seed
+        self.webseed = webseed
         self.host_ids = [f"host{i:04d}" for i in range(len(host_stores))]
         self.last_report: Optional[IngestReport] = None
 
@@ -112,6 +120,7 @@ class SwarmShardLoader:
             seed=self.seed + epoch,
             policy=policy,
             needed=self._needed_masks(assignment),
+            webseed=self.webseed,
         )
         # resumability: pre-seed swarm bitfields from what stores already hold
         for hid, store in zip(self.host_ids, self.host_stores):
@@ -140,6 +149,7 @@ class SwarmShardLoader:
             per_host_pieces={
                 hid: swarm.peers[hid].bitfield.count() for hid in self.host_ids
             },
+            origin_http_uploaded=swarm.http_uploaded,
         )
         return self.last_report
 
@@ -176,6 +186,7 @@ class SwarmShardLoader:
         swarm = LocalSwarm(
             self.manifest, self.origin_pieces, self.host_ids,
             seed=self.seed + 7919 * epoch, policy="sequential",
+            webseed=self.webseed,
         )
         for hid, store in zip(self.host_ids, self.host_stores):
             agent = swarm.peers[hid]
@@ -220,17 +231,20 @@ class SwarmShardLoader:
             per_host_pieces={
                 hid: swarm.peers[hid].bitfield.count() for hid in self.host_ids
             },
+            origin_http_uploaded=swarm.http_uploaded,
         )
 
 
 def loader_from_corpus(
     corpus: ShardedCorpus, num_hosts: int, seed: int = 0,
     directories: Optional[Sequence[str]] = None,
+    webseed: Optional[OriginPolicy] = None,
 ) -> SwarmShardLoader:
     stores = [
         ShardStore(directories[i] if directories else None)
         for i in range(num_hosts)
     ]
     return SwarmShardLoader(
-        corpus.manifest, corpus.origin_pieces(), stores, seed=seed
+        corpus.manifest, corpus.origin_pieces(), stores, seed=seed,
+        webseed=webseed,
     )

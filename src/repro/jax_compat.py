@@ -1,0 +1,102 @@
+"""Compatibility shims for jax >= 0.5 APIs when running on jax 0.4.x.
+
+The codebase targets the current jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``, two-argument
+``AbstractMesh``); the pinned container image ships jax 0.4.37, where those
+live elsewhere or do not exist. Every shim resolves the new API first and
+falls back to the 0.4.x equivalent, so behaviour is identical on new jax.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+class _AxisTypeFallback(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on jax 0.4.x, where every mesh
+    axis is implicitly Auto and ``jax.make_mesh`` takes no ``axis_types``."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeFallback)
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` or None when the ambient-mesh
+    tracking does not exist (0.4.x) — callers already treat None as
+    "no mesh context" and fall back to unconstrained layouts."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return fn() if fn is not None else None
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axis_names) -> jax.sharding.AbstractMesh:
+    """Device-free mesh: new jax takes (sizes, names); 0.4.x takes one
+    tuple of (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, shape)))
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict: 0.4.x returns a
+    one-element list of per-program dicts, newer jax the dict itself."""
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return c
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context manager; on 0.4.x a concrete ``Mesh`` is
+    itself the context manager that installs the ambient resource env."""
+    fn = getattr(jax, "set_mesh", None)
+    return fn(mesh) if fn is not None else mesh
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[set] = None,
+    check_vma: bool = True,
+):
+    """``jax.shard_map`` signature on both jax lines.
+
+    On 0.4.x this maps to ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep=check_vma`` and ``auto`` = the complement of ``axis_names``
+    (both APIs default to fully-manual over the mesh).
+    """
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kwargs = dict(
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return new(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as old_shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return old_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )

@@ -14,18 +14,21 @@ from __future__ import annotations
 
 import jax
 
-AxisType = jax.sharding.AxisType
+from ..jax_compat import AxisType, make_mesh as _mesh
+
+__all__ = ["AxisType", "make_production_mesh", "make_test_mesh",
+           "batch_axes", "dp_size"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (works with 1 real device when shape=(1,1))."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

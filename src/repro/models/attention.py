@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..jax_compat import get_abstract_mesh, shard_map
 from .layers import (
     EMBED, HEADDIM, KVHEADS, QHEADS,
     ParamSpec, apply_rope, constrain_bshd, qk_norm, softcap,
@@ -363,7 +364,7 @@ def _cache_is_int8(cache: dict) -> bool:
 def _split_kv_available(cache_k: jax.Array) -> bool:
     """True when the ambient mesh has a 'model' axis that divides the cache
     sequence dim — the split-KV decode layout (flash-decoding on the mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or "model" not in mesh.shape:
         return False
     n = mesh.shape["model"]
@@ -390,7 +391,7 @@ def decode_step_split_kv(
     the flash-decoding split-KV schedule expressed on the mesh. Batch stays
     auto-sharded over ('pod','data') (partial-manual shard_map).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     n = mesh.shape["model"]
     smax = cache["k"].shape[1]
     s_loc = smax // n
@@ -449,7 +450,7 @@ def decode_step_split_kv(
         ks = jnp.zeros((cache["k"].shape[0], smax, cache["k"].shape[2], 1),
                        jnp.bfloat16)
         vs = ks
-    out, kc, vc, ks, vs = jax.shard_map(
+    out, kc, vc, ks, vs = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(), P(), cache_spec, cache_spec, cache_spec,

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..jax_compat import AxisType, get_abstract_mesh
+
 # logical axis vocabulary (see launch/partitioning.py for the mesh rules)
 LAYERS, EMBED, MLP, VOCAB = "layers", "embed", "mlp", "vocab"
 QHEADS, KVHEADS, HEADDIM = "q_heads", "kv_heads", "head"
@@ -101,13 +103,13 @@ def constrain(x: jax.Array, names: tuple) -> jax.Array:
     Megatron-style layout (batch over ('pod','data'), d_model replicated,
     heads/ffn over 'model') explicit.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.shape:
         return x
     # inside a partial-manual shard_map (e.g. the int8 cross-pod step is
     # manual over 'pod'), Manual axes must not appear in constraints
-    types = dict(zip(mesh.axis_names, mesh.axis_types))
-    manual = jax.sharding.AxisType.Manual
+    types = dict(zip(mesh.axis_names, getattr(mesh, "axis_types", ())))
+    manual = AxisType.Manual
 
     def usable(a: str) -> bool:
         return a in mesh.shape and types.get(a) != manual
@@ -136,12 +138,12 @@ def constrain_bsd(x: jax.Array) -> jax.Array:
     inserts at the layout switch. Decode (S=1) and CPU tests fall back to
     batch-only sharding automatically.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     seq_axis = None
     if mesh is not None and "model" in mesh.shape:
-        types = dict(zip(mesh.axis_names, mesh.axis_types))
+        types = dict(zip(mesh.axis_names, getattr(mesh, "axis_types", ())))
         if (x.shape[1] > 1 and x.shape[1] % mesh.shape["model"] == 0
-                and types.get("model") != jax.sharding.AxisType.Manual):
+                and types.get("model") != AxisType.Manual):
             seq_axis = MODEL_AXIS
     return constrain(x, (BATCH_AXES, seq_axis, None))
 
