@@ -1,0 +1,208 @@
+"""Mirror fabric + pod caches — hierarchical multi-origin sweep.
+
+Three claims, swept over flash-crowd / staggered / Poisson arrivals:
+
+  (a) **mirrors**: with M mirrors of divergent bandwidth, aggregate origin
+      egress still falls monotonically toward ~1 copy *total* as the
+      swarm-routed fraction grows — mirrors split the bill, they don't
+      multiply it — and every mirror actually shares load.
+  (b) **pod caches**: enabling locality ranking and then the pod-cache
+      tier drives cross-pod (spine) bytes monotonically down toward ~1
+      copy *per pod*, the same collapse PR 1 produced for origin egress.
+  (c) **failure**: a mirror dying mid-sweep (range flows and cache fills
+      in flight) costs zero corrupt pieces — clients and caches re-fetch,
+      verified, from the next ranked mirror.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    ClusterTopology, MetaInfo, MirrorSpec, OriginPolicy, SwarmConfig,
+    WebSeedSwarmSim, flash_crowd, poisson_arrivals, staggered_arrivals,
+)
+
+SIZE = 512e6
+PIECE = 8e6
+PEER_UP, PEER_DOWN = 25e6, 50e6
+TOTAL_ORIGIN = 20e6               # aggregate mirror uplink, split across M
+PODS, HOSTS_PER_POD = 2, 8
+
+
+def arrival_kinds(n):
+    return {
+        "flash": flash_crowd(n),
+        "stagger": staggered_arrivals(n, interval=20.0),
+        "poisson": poisson_arrivals(n, 0.25, np.random.default_rng(7)),
+    }
+
+
+def mirror_specs(m, total_bps=TOTAL_ORIGIN):
+    """M mirrors with divergent bandwidth summing to ``total_bps``."""
+    shares = np.arange(1, m + 1, dtype=float)
+    shares /= shares.sum()
+    return [
+        MirrorSpec(f"origin{i}", up_bps=float(total_bps * s), weight=float(s))
+        for i, s in enumerate(shares)
+    ]
+
+
+# --------------------------------------------------------------- (a) mirrors
+
+
+def sweep_mirrors(report):
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="mirrors")
+    n = 16
+    for label, arrivals in arrival_kinds(n).items():
+        for m in (1, 2, 3):
+            copies = {}
+            for frac in (0.0, 0.5, 1.0):
+                t0 = time.perf_counter()
+                sim = WebSeedSwarmSim(
+                    mi,
+                    OriginPolicy(swarm_fraction=frac,
+                                 origin_up_bps=TOTAL_ORIGIN,
+                                 selection="least_loaded"),
+                    SwarmConfig(), seed=3,
+                )
+                sim.add_mirrors(mirror_specs(m))
+                sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+                res = sim.run()
+                wall = (time.perf_counter() - t0) * 1e6
+                copies[frac] = res.origin_uploaded / mi.length
+                served = [
+                    o.http_uploaded / mi.length
+                    for o in sim.origin_set.origins.values()
+                ]
+                report(
+                    f"mirror_fabric/{label}/m{m}/f{frac:.1f}", wall,
+                    f"origin={copies[frac]:.2f}copies "
+                    f"per_mirror={'/'.join(f'{s:.2f}' for s in served)} "
+                    f"t={res.mean_completion_time():.0f}s",
+                )
+                assert len(res.completion_time) == n, (label, m, frac)
+                if m > 1 and frac < 1.0:
+                    # every mirror pulls its weight (origin offload splits)
+                    assert all(s > 0 for s in served), (label, m, frac, served)
+            # (a): aggregate egress monotone in fraction, ~1 copy at f=1
+            seq = [copies[f] for f in (0.0, 0.5, 1.0)]
+            assert seq[0] == n, (label, m, seq)
+            assert all(x >= y - 1e-9 for x, y in zip(seq, seq[1:])), (label, m, seq)
+            assert seq[-1] < 2.0, (label, m, seq)
+            report(
+                f"mirror_fabric/{label}/m{m}/crossover", 0.0,
+                f"copies {seq[0]:.1f}->{seq[-1]:.2f}",
+            )
+
+
+# --------------------------------------------------------------- (b) caches
+
+
+def cluster_sim(mi, arrivals, stage, seed=5):
+    """One delivery-network stage: 'global' (locality-blind swarm),
+    'locality' (tracker pod ranking), 'cache' (pod-cache tier)."""
+    topo = ClusterTopology(
+        num_pods=PODS, hosts_per_pod=HOSTS_PER_POD, host_up_bps=PEER_UP,
+        host_down_bps=PEER_DOWN, spine_bps=float("inf"),
+    )
+    same_pod_frac = {"global": 0.5, "locality": 0.95, "cache": 1.0}[stage]
+    sim = WebSeedSwarmSim(
+        mi,
+        OriginPolicy(swarm_fraction=1.0, origin_up_bps=TOTAL_ORIGIN),
+        SwarmConfig(max_neighbors=HOSTS_PER_POD - 1),
+        seed=seed, topology=topo, same_pod_frac=same_pod_frac,
+    )
+    sim.add_mirrors(mirror_specs(2))
+    if stage == "cache":
+        sim.add_pod_caches(up_bps=100e6)
+    hosts = [(h.name, t) for h, (_, t) in zip(topo.hosts(), arrivals)]
+    sim.add_peers(hosts, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    return sim
+
+
+def sweep_caches(report):
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="caches")
+    n = PODS * HOSTS_PER_POD
+    for label, arrivals in arrival_kinds(n).items():
+        per_pod = {}
+        for stage in ("global", "locality", "cache"):
+            t0 = time.perf_counter()
+            sim = cluster_sim(mi, arrivals, stage)
+            res = sim.run()
+            wall = (time.perf_counter() - t0) * 1e6
+            per_pod[stage] = res.cross_pod_bytes / mi.length / PODS
+            report(
+                f"mirror_fabric/{label}/{stage}", wall,
+                f"cross_pod={per_pod[stage]:.2f}copies/pod "
+                f"origin={res.origin_uploaded / mi.length:.2f}copies "
+                f"cache={res.pod_cache_uploaded / mi.length:.2f}copies "
+                f"t={res.mean_completion_time():.0f}s",
+            )
+            assert len(res.completion_time) == n, (label, stage)
+        # (b): cross-pod bytes fall monotonically toward ~1 copy per pod
+        seq = [per_pod[s] for s in ("global", "locality", "cache")]
+        assert all(x >= y - 1e-9 for x, y in zip(seq, seq[1:])), (label, seq)
+        assert seq[-1] < 1.5, (label, seq)
+        report(
+            f"mirror_fabric/{label}/collapse", 0.0,
+            f"cross_pod/pod {seq[0]:.2f}->{seq[1]:.2f}->{seq[2]:.2f}",
+        )
+
+
+# --------------------------------------------------------------- (c) failure
+
+
+def sweep_failure(report):
+    payload = np.random.default_rng(0).integers(
+        0, 256, size=1 << 22, dtype=np.uint8
+    ).tobytes()
+    mi = MetaInfo.from_bytes(payload, 1 << 17, name="failover")
+    store = dict(mi.split_pieces(payload))
+    topo = ClusterTopology(
+        num_pods=PODS, hosts_per_pod=4, host_up_bps=2e6,
+        host_down_bps=4e6, spine_bps=float("inf"),
+    )
+    t0 = time.perf_counter()
+    sim = WebSeedSwarmSim(
+        mi, OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
+        SwarmConfig(max_neighbors=3), seed=11, topology=topo,
+        origin_payload=store,
+    )
+    sim.add_mirrors([MirrorSpec("origin0", up_bps=2e6, weight=2.0),
+                     MirrorSpec("origin1", up_bps=2e6, weight=1.0)])
+    sim.add_pod_caches(up_bps=20e6)
+    sim.origin_set.origins["origin0"].corrupt_once.add(0)
+    sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
+                  up_bps=2e6, down_bps=4e6)
+    # kill the preferred mirror while fills/ranges are mid-flight
+    sim.net.schedule(30.0, lambda now: sim.fail_mirror("origin0"))
+    res = sim.run()
+    wall = (time.perf_counter() - t0) * 1e6
+    n = PODS * 4
+    assert len(res.completion_time) == n, res.completion_time
+    # zero corrupt pieces delivered: every stored piece verifies
+    for pid, agent in sim.agents.items():
+        if pid not in sim.origin_set.origins and agent.store is not None:
+            assert all(mi.verify_piece(i, d) for i, d in agent.store.items())
+    for cache in sim.caches.values():
+        assert all(mi.verify_piece(i, d) for i, d in cache.store.items())
+    survivor = sim.origin_set.origins["origin1"].http_uploaded
+    report(
+        "mirror_fabric/failover/mid_sweep", wall,
+        f"done={n}/{n} survivor_served={survivor / mi.length:.2f}copies "
+        f"wasted={sum(l.wasted for l in res.ledgers.values()) / 1e6:.1f}MB "
+        f"verified=all",
+    )
+
+
+def main(report):
+    sweep_mirrors(report)
+    sweep_caches(report)
+    sweep_failure(report)
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

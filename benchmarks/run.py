@@ -1,12 +1,17 @@
 """Benchmark harness — one function per paper table/figure + beyond-paper.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...]
+    PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...] [--json DIR]
+
+``--json DIR`` additionally persists each bench's rows as
+``BENCH_<name>.json`` under DIR (repo-root convention), so the perf
+trajectory accumulates across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -19,6 +24,7 @@ from benchmarks import (  # noqa: E402
     bench_fabric_hillclimb,
     bench_fig1_server_load,
     bench_kernels,
+    bench_mirror_fabric,
     bench_pipeline,
     bench_roofline,
     bench_swarm_scaling,
@@ -33,6 +39,7 @@ SUITES = {
     "coldstart": bench_cluster_coldstart,
     "scaling": bench_swarm_scaling,
     "webseed": bench_webseed_hybrid,
+    "mirror_fabric": bench_mirror_fabric,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -43,12 +50,38 @@ SUITES = {
 DEFAULT_SUITES = [k for k in SUITES if k != "fabric_hc"]
 
 
+def bench_file_name(key: str) -> str:
+    """BENCH_<module>.json, module name sans the ``bench_`` prefix."""
+    mod = SUITES[key].__name__.rsplit(".", 1)[-1]
+    return f"BENCH_{mod.removeprefix('bench_')}.json"
+
+
+def write_json(
+    json_dir: Path, key: str, rows: list[dict], wall_s: float,
+    error: str | None,
+) -> Path:
+    path = json_dir / bench_file_name(key)
+    path.write_text(json.dumps({
+        "bench": key,
+        "wall_s": round(wall_s, 3),
+        "failed": error is not None,
+        **({"error": error} if error else {}),
+        "rows": rows,
+    }, indent=1) + "\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="persist each bench's rows as DIR/BENCH_<name>.json")
     args = ap.parse_args()
     chosen = DEFAULT_SUITES if not args.only else args.only.split(",")
+    json_dir = Path(args.json) if args.json else None
+    if json_dir is not None:
+        json_dir.mkdir(parents=True, exist_ok=True)
 
     rows: list[str] = []
 
@@ -56,12 +89,17 @@ def main() -> None:
         line = f"{name},{us:.0f},{derived}"
         rows.append(line)
         print(line, flush=True)
+        suite_rows.append(
+            {"name": name, "us_per_call": round(us), "derived": derived}
+        )
 
     print("name,us_per_call,derived")
     measured_ud = None
     failures = []
     for key in chosen:
         mod = SUITES[key]
+        suite_rows: list[dict] = []
+        error = None
         t0 = time.perf_counter()
         try:
             if key == "eq1":
@@ -71,8 +109,13 @@ def main() -> None:
             else:
                 mod.main(report)
         except Exception as e:  # keep the harness running; record the failure
-            failures.append((key, repr(e)))
-            report(f"{key}/FAILED", (time.perf_counter() - t0) * 1e6, repr(e)[:120])
+            error = repr(e)
+            failures.append((key, error))
+            report(f"{key}/FAILED", (time.perf_counter() - t0) * 1e6, error[:120])
+        if json_dir is not None:
+            write_json(
+                json_dir, key, suite_rows, time.perf_counter() - t0, error
+            )
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -33,7 +33,7 @@ from .collective_fabric import (
 )
 from .http_baseline import HttpResult, analytic_http, simulate_http
 from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
-from .netsim import FluidNetwork, Flow, Node
+from .netsim import FluidNetwork, Flow, Link, Node
 from .peer import Ledger, PeerAgent
 from .swarm import (
     LocalSwarm,
@@ -48,7 +48,10 @@ from .swarm import (
 from .topology import ClusterTopology, HostAddr
 from .tracker import PeerRecord, SwarmStats, Tracker
 from .webseed import (
+    MirrorSpec,
     OriginPolicy,
+    OriginSet,
+    PodCacheOrigin,
     WebSeedOrigin,
     WebSeedSwarmSim,
     swarm_routed_mask,

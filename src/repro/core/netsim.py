@@ -38,6 +38,24 @@ class Node:
 
 
 @dataclasses.dataclass
+class Link:
+    """A shared capacity constraint between node endpoints (bytes/sec).
+
+    Models an aggregation layer the endpoint caps cannot see — e.g. the
+    cross-pod *spine*: every flow tagged with the link fair-shares its
+    capacity in addition to the per-node up/down limits. ``bytes_through``
+    accumulates all payload carried over the link (the cross-pod byte
+    ledger the mirror-fabric benchmarks assert on); an infinite capacity
+    turns the link into pure telemetry.
+    """
+
+    name: str
+    capacity_bps: float
+    index: int = -1  # assigned by the network
+    bytes_through: float = 0.0
+
+
+@dataclasses.dataclass
 class Flow:
     """One in-flight transfer of ``size`` bytes from ``src`` to ``dst``."""
 
@@ -45,6 +63,7 @@ class Flow:
     src: Node
     dst: Node
     size: float
+    links: tuple[Link, ...] = ()
     tag: object = None
     on_complete: Optional[Callable[["Flow", float], None]] = None
     on_abort: Optional[Callable[["Flow", float], None]] = None
@@ -68,6 +87,7 @@ class FluidNetwork:
     def __init__(self) -> None:
         self.now = 0.0
         self.nodes: list[Node] = []
+        self.links: dict[str, Link] = {}
         self.flows: dict[int, Flow] = {}
         self._timers: list[tuple[float, int, Callable[[float], None]]] = []
         self._seq = 0
@@ -87,6 +107,14 @@ class FluidNetwork:
         self.bytes_received.setdefault(name, 0.0)
         return node
 
+    def add_link(self, name: str, capacity_bps: float) -> Link:
+        if name in self.links:
+            raise ValueError(f"duplicate link {name!r}")
+        link = Link(name=name, capacity_bps=float(capacity_bps))
+        link.index = len(self.links)
+        self.links[name] = link
+        return link
+
     def fail_node(self, node: Node) -> None:
         """Abort all flows touching ``node`` (peer churn / host failure)."""
         node.failed = True
@@ -102,6 +130,7 @@ class FluidNetwork:
         tag: object = None,
         on_complete: Optional[Callable[[Flow, float], None]] = None,
         on_abort: Optional[Callable[[Flow, float], None]] = None,
+        links: tuple[Link, ...] = (),
     ) -> Flow:
         if src.failed or dst.failed:
             raise RuntimeError("flow endpoints must be live")
@@ -113,6 +142,7 @@ class FluidNetwork:
             src=src,
             dst=dst,
             size=float(size),
+            links=tuple(links),
             tag=tag,
             on_complete=on_complete,
             on_abort=on_abort,
@@ -144,9 +174,9 @@ class FluidNetwork:
     def _recompute_rates(self) -> None:
         """Max-min fair allocation by progressive filling (vectorized).
 
-        All unfrozen flows grow at the same rate until some node side (an
-        uplink or a downlink) saturates; flows through a saturated side
-        freeze at their current rate; repeat.
+        All unfrozen flows grow at the same rate until some constraint (a
+        node's uplink or downlink, or a shared link) saturates; flows
+        through a saturated constraint freeze at their current rate; repeat.
         """
         flows = list(self.flows.values())
         nf = len(flows)
@@ -158,12 +188,23 @@ class FluidNetwork:
         dst = np.fromiter((f.dst.index for f in flows), dtype=np.int64, count=nf)
         up_cap = np.fromiter((n.up_bps for n in self.nodes), dtype=np.float64, count=nn)
         down_cap = np.fromiter((n.down_bps for n in self.nodes), dtype=np.float64, count=nn)
+        nl = len(self.links) if any(f.links for f in flows) else 0
+        if nl:
+            incidence = np.zeros((nl, nf), dtype=bool)
+            for j, f in enumerate(flows):
+                for link in f.links:
+                    incidence[link.index, j] = True
+            link_cap = np.fromiter(
+                (l.capacity_bps for l in self.links.values()),
+                dtype=np.float64, count=nl,
+            )
+            link_alloc = np.zeros(nl)
         rate = np.zeros(nf)
         frozen = np.zeros(nf, dtype=bool)
         up_alloc = np.zeros(nn)
         down_alloc = np.zeros(nn)
 
-        for _ in range(2 * nn + 2):  # each iteration saturates >=1 node side
+        for _ in range(2 * nn + nl + 2):  # each iteration saturates >=1 constraint
             active = ~frozen
             if not active.any():
                 break
@@ -173,6 +214,13 @@ class FluidNetwork:
                 du = np.where(n_up > 0, (up_cap - up_alloc) / n_up, INF)
                 dd = np.where(n_down > 0, (down_cap - down_alloc) / n_down, INF)
             delta = min(du.min(), dd.min())
+            if nl:
+                n_link = incidence[:, active].sum(axis=1).astype(np.float64)
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    dl = np.where(
+                        n_link > 0, (link_cap - link_alloc) / n_link, INF
+                    )
+                delta = min(delta, dl.min())
             if not math.isfinite(delta):
                 break
             delta = max(delta, 0.0)
@@ -182,6 +230,11 @@ class FluidNetwork:
             sat_up = (du <= delta + 1e-12) & (n_up > 0)
             sat_down = (dd <= delta + 1e-12) & (n_down > 0)
             newly = active & (sat_up[src] | sat_down[dst])
+            if nl:
+                link_alloc += n_link * delta
+                sat_link = (dl <= delta + 1e-12) & (n_link > 0)
+                if sat_link.any():
+                    newly = newly | (active & incidence[sat_link].any(axis=0))
             if not newly.any():
                 break
             frozen |= newly
@@ -199,6 +252,8 @@ class FluidNetwork:
             f.remaining -= moved
             self.bytes_sent[f.src.name] += moved
             self.bytes_received[f.dst.name] += moved
+            for link in f.links:
+                link.bytes_through += moved
         self.now += dt
 
     def _next_completion(self) -> float:

@@ -78,6 +78,10 @@ class PeerAgent:
         self.ledger = Ledger()
         self.in_flight: dict[int, str] = {}       # piece -> source peer_id
         self.endgame_extra: set[int] = set()      # pieces we duplicated in endgame
+        # why the most recent accept_piece returned False: True iff the
+        # payload failed hash verification (lets callers steer re-fetches
+        # to another source without re-hashing the bytes)
+        self.last_reject_verify = False
         self.node: Node | None = None             # attached by the swarm driver
         self.arrived_at = 0.0
         self.completed_at: float | None = 0.0 if is_origin else None
@@ -148,6 +152,7 @@ class PeerAgent:
         size = self.metainfo.piece_size(piece)
         self.in_flight.pop(piece, None)
         self.endgame_extra.discard(piece)
+        self.last_reject_verify = False
         nb = self.neighbors.get(source_id)
         if nb is not None:
             nb.outstanding = max(0, nb.outstanding - 1)
@@ -160,6 +165,7 @@ class PeerAgent:
         if data is not None:
             if not self.metainfo.verify_piece(piece, data):
                 self.ledger.wasted += size
+                self.last_reject_verify = True
                 return False
             if self.store is not None:
                 self.store[piece] = data

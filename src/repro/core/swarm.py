@@ -59,10 +59,12 @@ class SwarmResult:
     completion_time: dict[str, float]       # peer -> (complete - arrive) seconds
     finish_at: dict[str, float]
     ledgers: dict[str, Ledger]
-    origin_uploaded: float                  # total origin egress (peer + HTTP)
+    origin_uploaded: float                  # mirror-tier egress (peer + HTTP)
     total_downloaded: float
     events: int
     origin_http_uploaded: float = 0.0       # web-seed HTTP share of the above
+    pod_cache_uploaded: float = 0.0         # cache-tier serves into the pods
+    cross_pod_bytes: float = 0.0            # spine traffic (0 without a spine)
 
     @property
     def origin_peer_uploaded(self) -> float:
@@ -135,6 +137,29 @@ class SwarmSim:
         self._origin_payload = origin_payload
         self._tick_scheduled = False
         self._pending_arrivals = 0
+        # cross-pod spine: one shared link every cross-pod flow rides
+        self._pod_of: dict[str, Optional[int]] = {}
+        self.spine = None
+        if topology is not None and topology.spine_bps is not None:
+            self.spine = self.net.add_link("spine", topology.spine_bps)
+
+    # ------------------------------------------------------------- locality
+    def _pod(self, name: str) -> Optional[int]:
+        """Pod of a node name (host addr or registered cache), else None."""
+        if name not in self._pod_of:
+            addr = self.topology.addr_of(name) if self.topology else None
+            self._pod_of[name] = addr.pod if addr is not None else None
+        return self._pod_of[name]
+
+    def _links_between(self, a: str, b: str) -> tuple:
+        """Shared links an a->b flow traverses: the spine unless both ends
+        sit in the same pod (mirrors/origins live behind the spine)."""
+        if self.spine is None:
+            return ()
+        pa, pb = self._pod(a), self._pod(b)
+        if pa is not None and pa == pb:
+            return ()
+        return (self.spine,)
 
     # ------------------------------------------------------------- membership
     def _new_agent(self, peer_id: str, is_origin: bool) -> PeerAgent:
@@ -191,7 +216,7 @@ class SwarmSim:
             self.metainfo, spec.peer_id, uploaded=0, downloaded=0,
             event="started", now=now, want_peers=self.cfg.max_neighbors,
         )
-        for other_id in peer_list:
+        for other_id in self._filter_peer_list(agent, peer_list):
             other = self.agents.get(other_id)
             if other is None or other.departed:
                 continue
@@ -202,6 +227,10 @@ class SwarmSim:
         self._rechoke_all(now)
         self._ensure_tick(now)
         self._launch(agent, now)
+
+    def _filter_peer_list(self, agent: PeerAgent, peer_list: list[str]) -> list[str]:
+        """Hook for drivers to restrict tracker peer lists (identity here)."""
+        return peer_list
 
     def _ensure_tick(self, now: float) -> None:
         if not self._tick_scheduled:
@@ -260,6 +289,7 @@ class SwarmSim:
                 tag=(src_id, agent.peer_id, piece),
                 on_complete=self._on_piece_done,
                 on_abort=self._on_piece_abort,
+                links=self._links_between(src_id, agent.peer_id),
             )
 
     def _on_piece_done(self, flow: Flow, now: float) -> None:
@@ -378,6 +408,10 @@ class SwarmSim:
             total_downloaded=stats.total_downloaded,
             events=self.net.events_processed,
             origin_http_uploaded=stats.origin_http_uploaded,
+            pod_cache_uploaded=stats.pod_cache_uploaded,
+            cross_pod_bytes=(
+                self.spine.bytes_through if self.spine is not None else 0.0
+            ),
         )
 
 
@@ -406,6 +440,9 @@ class LocalSwarm:
         origin_slots: int = 4,
         needed: Optional[dict[str, np.ndarray]] = None,
         webseed=None,
+        mirrors=None,
+        pod_of: Optional[dict[str, int]] = None,
+        pod_caches: bool = False,
     ):
         """``needed``: optional per-peer bool mask (num_pieces,) restricting
         which pieces that peer must obtain (partitioned ingest — each data-
@@ -413,10 +450,26 @@ class LocalSwarm:
         everything they hold, so the swarm amplification is unchanged.
 
         ``webseed``: optional :class:`repro.core.webseed.OriginPolicy`. When
-        set, the origin is a bare HTTP byte-range server (it joins the peer
-        mesh only if ``serve_peer_protocol``); peers fall back to verified
-        range reads for pieces no peer holds — which is what lets a swarm
-        cold-start from an origin with zero seeded peers."""
+        set, the origin tier is a set of bare HTTP byte-range mirrors (the
+        origin joins the peer mesh only if ``serve_peer_protocol``); peers
+        fall back to verified range reads for pieces no peer holds — which
+        is what lets a swarm cold-start from an origin with zero seeded
+        peers.
+
+        ``mirrors``: optional sequence of
+        :class:`repro.core.webseed.MirrorSpec` replicating the origin store
+        behind divergent endpoints; defaults to one mirror named
+        ``"origin"``. Range reads are routed by ``webseed.selection`` and
+        fail over to the next ranked mirror when bytes fail verification or
+        a mirror is marked dead (:meth:`fail_mirror`).
+
+        ``pod_of``/``pod_caches``: optional peer -> pod map; with
+        ``pod_caches=True`` each pod gets a
+        :class:`~repro.core.webseed.PodCacheOrigin` and peers range-read
+        from their pod cache, which read-through fills (verified) from the
+        mirror tier — so cross-pod bytes collapse to ~1 copy per pod.
+        ``cross_pod_bytes`` ledgers every transfer whose endpoints sit in
+        different pods (mirrors count as outside every pod)."""
         self.metainfo = metainfo
         self.rng = np.random.default_rng(seed)
         self.policy = policy
@@ -428,17 +481,48 @@ class LocalSwarm:
             is_origin=True, store=dict(origin_store),
         )
         self.webseed = webseed
-        self.web_origin = None
+        self.origin_set = None
         self._swarm_routed: Optional[np.ndarray] = None
+        self.pod_of = dict(pod_of) if pod_of else {}
+        self.pod_caches: dict[int, "PodCacheOrigin"] = {}
+        self.cross_pod_bytes = 0.0
+        self._pod_have: Optional[dict[int, np.ndarray]] = None
+        if mirrors is not None and webseed is None:
+            raise ValueError("mirrors requires a webseed OriginPolicy")
+        if pod_caches and webseed is None:
+            raise ValueError("pod_caches requires a webseed OriginPolicy")
+        if pod_caches and not self.pod_of:
+            raise ValueError("pod_caches requires a pod_of peer->pod map")
+        if pod_caches:
+            # an unmapped peer would be unreachable: isolated from every
+            # pod's peer traffic yet denied the pod-filtered HTTP fallback
+            unmapped = [p for p in peer_ids if p not in self.pod_of]
+            if unmapped:
+                raise ValueError(
+                    "pod_caches requires a pod for every peer; missing "
+                    f"{unmapped[:3]}"
+                )
         if webseed is not None:
-            from .webseed import WebSeedOrigin, swarm_routed_mask
-
-            self.web_origin = WebSeedOrigin(
-                metainfo, store=self.origin.store, policy=webseed
+            from .webseed import (
+                MirrorSpec, OriginSet, PodCacheOrigin, swarm_routed_mask,
             )
+
+            specs = list(mirrors) if mirrors else [
+                MirrorSpec("origin", up_bps=webseed.origin_up_bps)
+            ]
+            self.origin_set = OriginSet(metainfo, policy=webseed)
+            for spec in specs:
+                self.origin_set.add_mirror(spec, store=self.origin.store)
             self._swarm_routed = swarm_routed_mask(
                 metainfo, webseed.swarm_fraction
             )
+            if pod_caches:
+                for pod in sorted(set(self.pod_of.values())):
+                    cache = PodCacheOrigin(metainfo, pod, policy=webseed)
+                    self.pod_caches[pod] = cache
+                    # register the cache in the pod map so fills from the
+                    # (unmapped) mirror tier ledger as cross-pod traffic
+                    self.pod_of[cache.name] = pod
         self.peers: dict[str, PeerAgent] = {}
         for i, pid in enumerate(peer_ids):
             self.peers[pid] = PeerAgent(
@@ -455,8 +539,28 @@ class LocalSwarm:
                     agent.connect(oid, other.bitfield)
         self.rounds = 0
 
+    @property
+    def web_origin(self):
+        """Primary mirror's HTTP front-end (single-origin back-compat)."""
+        return self.origin_set.primary if self.origin_set is not None else None
+
+    def fail_mirror(self, name: str) -> None:
+        """Fault injection: mark one mirror dead; range reads fail over."""
+        if self.origin_set is None:
+            raise ValueError("no web-seed mirrors configured")
+        self.origin_set.fail(name)
+
     def _agent(self, pid: str) -> PeerAgent:
         return self.origin if pid == "origin" else self.peers[pid]
+
+    def _count_cross_pod(self, a: str, b: str, size: float) -> None:
+        """Ledger a transfer a->b as cross-pod when the endpoints' pods
+        differ; mirrors (no pod) sit behind the spine, so mirror->pod
+        transfers count, while two unmapped endpoints trading do not."""
+        if not self.pod_of:
+            return
+        if self.pod_of.get(a) != self.pod_of.get(b):
+            self.cross_pod_bytes += size
 
     def _peer_done(self, pid: str) -> bool:
         me = self.peers[pid]
@@ -487,37 +591,127 @@ class LocalSwarm:
         best = cand[avail == avail.min()]
         return int(best[me.rng.integers(len(best))])
 
+    def _local_availability(self, me: PeerAgent) -> np.ndarray:
+        """Per-piece holder count within ``me``'s pod — the availability the
+        HTTP fallback keys off when a pod-cache tier isolates peer traffic
+        inside each pod. Maintained incrementally (seeded lazily from
+        current bitfields so resumable pre-seeding is captured, then bumped
+        by ``_note_gain`` on every accepted piece) the way
+        ``PeerAgent.availability`` is. ``me``'s own holdings are included,
+        but fallback only consults *missing* pieces, where me counts 0."""
+        if self._pod_have is None:
+            self._pod_have = {}
+            for pid, agent in self.peers.items():
+                pod = self.pod_of.get(pid)
+                if pod is None:
+                    continue
+                if pod not in self._pod_have:
+                    self._pod_have[pod] = np.zeros(
+                        self.metainfo.num_pieces, dtype=np.int64
+                    )
+                self._pod_have[pod] += agent.bitfield.as_array()
+        my_pod = self.pod_of.get(me.peer_id)
+        if my_pod is None or my_pod not in self._pod_have:
+            return me.availability
+        return self._pod_have[my_pod]
+
+    def _note_gain(self, pid: str, piece: int) -> None:
+        """Keep the pod-local availability counters fresh on piece intake."""
+        if self._pod_have is None:
+            return
+        pod = self.pod_of.get(pid)
+        if pod is not None and pod in self._pod_have:
+            self._pod_have[pod][piece] += 1
+
     def _select_http(self, me: PeerAgent, mask) -> Optional[int]:
-        """Next piece to range-request from the web-seed origin: HTTP-routed
+        """Next piece to range-request from the origin fabric: HTTP-routed
         pieces, plus — under swarm-first fallback — pieces no connected peer
-        holds (availability 0). Lowest index first; the immediate Have
-        propagation inside a round self-staggers concurrent clients."""
+        holds (availability 0; *same-pod* availability once a cache tier
+        isolates pods). Lowest index first; the immediate Have propagation
+        inside a round self-staggers concurrent clients."""
         cand = ~me.bitfield.as_array()
         if mask is not None:
             cand = cand & mask
         if self.webseed.mode != "http_first":
             eligible = ~self._swarm_routed
             if self.webseed.http_fallback:
-                eligible = eligible | (me.availability == 0)
+                avail = (
+                    self._local_availability(me) if self.pod_caches
+                    else me.availability
+                )
+                eligible = eligible | (avail == 0)
             cand = cand & eligible
         idx = np.flatnonzero(cand)
         return int(idx[0]) if idx.size else None
 
+    def _ranked_origins(self, pid: str) -> list:
+        """HTTP endpoints for this peer: its pod cache when one exists
+        (nearest-cache cold start), else the ranked live mirror tier."""
+        if self.pod_caches:
+            cache = self.pod_caches.get(self.pod_of.get(pid))
+            if cache is not None:
+                return [cache]
+        return [self.origin_set.origins[n] for n in self.origin_set.ranked()]
+
+    def _fill_cache(self, cache, piece: int) -> bool:
+        """Read-through fill: verified fetch from the first good mirror,
+        excluding (per piece) mirrors that already served bad bytes."""
+        if cache.holds(piece):
+            return True
+        size = self.metainfo.piece_size(piece)
+        for name in self.origin_set.ranked():
+            if name in cache.bad_mirrors.get(piece, ()):
+                continue
+            mirror = self.origin_set.origins[name]
+            data = mirror.read_piece(piece)   # mirror egress, even if bad
+            self.origin.record_served(piece, cache.name, float(self.rounds))
+            self._count_cross_pod(name, cache.name, size)  # fills ride the spine
+            if data is None:
+                continue
+            if not self.metainfo.verify_piece(piece, data):
+                cache.fill_wasted += size
+                cache.bad_mirrors.setdefault(piece, set()).add(name)
+                continue                       # verified failover: next mirror
+            cache.commit(piece, data)
+            return True
+        if cache.bad_mirrors.get(piece):
+            # every live mirror has served bad bytes for this piece: heal
+            # the exclusions so a later round retries (corrupt-once heals)
+            del cache.bad_mirrors[piece]
+        return False
+
     def _http_fetch(self, me: PeerAgent, pid: str) -> Optional[int]:
-        """One verified range read from the origin; returns the piece on
-        success, None when nothing is eligible or the range failed
-        verification (re-fetched on a later attempt)."""
+        """One verified range read from the origin fabric; returns the
+        piece on success, None when nothing is eligible or every endpoint's
+        range failed verification (re-fetched on a later attempt)."""
+        from .webseed import PodCacheOrigin
+
         piece = self._select_http(me, self.needed.get(pid))
         if piece is None:
             return None
-        data = self.web_origin.read_piece(piece)
-        self.origin.record_served(piece, pid, float(self.rounds))
-        if not me.accept_piece(piece, "origin::http", data, float(self.rounds)):
+        size = self.metainfo.piece_size(piece)
+        for origin in self._ranked_origins(pid):
+            if isinstance(origin, PodCacheOrigin):
+                if not self._fill_cache(origin, piece):
+                    continue
+                data = origin.read_piece(piece)   # cache egress + fault hook
+                # cache -> client stays inside the pod: no cross-pod bytes
+            else:
+                data = origin.read_piece(piece)
+                self.origin.record_served(piece, pid, float(self.rounds))
+                self._count_cross_pod(origin.name, pid, size)
+            if me.accept_piece(
+                piece, f"{origin.name}::http", data, float(self.rounds)
+            ):
+                self._note_gain(pid, piece)
+                for wid, w in {**self.peers, "origin": self.origin}.items():
+                    if wid != pid:
+                        w.on_have(pid, piece)
+                return piece
+            if me.last_reject_verify:
+                continue  # bad bytes from this endpoint: fail over to the next
             return None
-        for wid, w in {**self.peers, "origin": self.origin}.items():
-            if wid != pid:
-                w.on_have(pid, piece)
-        return piece
+        return None
 
     def step(self) -> int:
         """One round; returns number of pieces moved."""
@@ -546,6 +740,22 @@ class LocalSwarm:
                     if budget.get(oid, 0) > 0
                 ]
                 self.rng.shuffle(sources)
+                if self.pod_caches:
+                    # the cache tier isolates pods: peer traffic stays on
+                    # leaf links; pieces enter the pod via cache fills
+                    my_pod = self.pod_of.get(pid)
+                    sources = [
+                        (oid, nb) for oid, nb in sources
+                        if self.pod_of.get(oid) == my_pod
+                    ]
+                elif self.pod_of:
+                    # locality preference without isolation: same-pod
+                    # sources first (stable partition keeps the shuffle
+                    # within each tier, and RNG consumption unchanged)
+                    my_pod = self.pod_of.get(pid)
+                    sources.sort(
+                        key=lambda kv: self.pod_of.get(kv[0]) != my_pod
+                    )
                 got = None
                 for oid, nb in sources:
                     piece = self._select(me, nb.bitfield, peer_mask)
@@ -557,6 +767,10 @@ class LocalSwarm:
                         continue
                     if me.accept_piece(piece, oid, data, float(self.rounds)):
                         src.record_served(piece, pid, float(self.rounds))
+                        self._note_gain(pid, piece)
+                        self._count_cross_pod(
+                            oid, pid, self.metainfo.piece_size(piece)
+                        )
                         budget[oid] -= 1
                         moved += 1
                         got = piece
@@ -573,11 +787,18 @@ class LocalSwarm:
                     break
         return moved
 
+    # a zero-move round is not necessarily a stall: the verified-failover
+    # paths legitimately burn a round or two excluding bad endpoints and
+    # healing (corrupt-once origins recover on the retry)
+    MAX_IDLE_ROUNDS = 3
+
     def run(self, max_rounds: int = 100_000) -> int:
+        idle = 0
         while not self.complete:
             if self.rounds >= max_rounds:
                 raise RuntimeError("LocalSwarm did not converge")
-            if self.step() == 0 and not self.complete:
+            idle = idle + 1 if self.step() == 0 else 0
+            if idle > self.MAX_IDLE_ROUNDS and not self.complete:
                 raise RuntimeError("LocalSwarm stalled (no eligible transfer)")
         return self.rounds
 
@@ -588,8 +809,14 @@ class LocalSwarm:
 
     @property
     def http_uploaded(self) -> float:
-        """Origin bytes served over HTTP ranges (0 without a web seed)."""
-        return self.web_origin.http_uploaded if self.web_origin else 0.0
+        """Mirror-tier bytes served over HTTP ranges — direct serves plus
+        pod-cache fills (0 without a web seed)."""
+        return self.origin_set.http_uploaded if self.origin_set else 0.0
+
+    @property
+    def pod_cache_uploaded(self) -> float:
+        """Bytes the pod-cache tier served into its pods over HTTP ranges."""
+        return sum(c.http_uploaded for c in self.pod_caches.values())
 
     @property
     def ud_ratio(self) -> float:

@@ -16,7 +16,7 @@ ICI 4 links x ~50 GB/s per chip for the collective-assist path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +40,13 @@ class ClusterTopology:
     cross_pod_penalty: float = 4.0     # cross-pod flows see up/penalty effective share
     origin_up_bps: float = 12.5e9
     ici_bps_per_host: float = 4 * 50e9  # aggregate ICI bandwidth per host (collective assist)
+    # Aggregate cross-pod spine capacity (bytes/s). When set, the swarm
+    # drivers route every cross-pod flow — peer traffic, direct mirror
+    # range requests, and pod-cache fills — over one shared netsim Link,
+    # so the cache tier's fill traffic contends realistically. None keeps
+    # the pre-spine behaviour (cross-pod flows limited only by endpoint
+    # NICs); float("inf") tracks cross-pod bytes without constraining them.
+    spine_bps: Optional[float] = None
 
     def hosts(self) -> list[HostAddr]:
         return [
@@ -53,13 +60,25 @@ class ClusterTopology:
         return self.num_pods * self.hosts_per_pod
 
     def addr_of(self, name: str) -> HostAddr | None:
+        """Parse a ``podX/hostY`` name into a :class:`HostAddr`.
+
+        Names that do not start with ``pod`` (``origin``, mirrors,
+        ``cache/...``) are simply *not hosts* and return None. A name that
+        starts with ``pod`` but does not parse (``"pod3"``, ``"pod3/host"``,
+        ``"pod3/cache"``) is a caller typo and raises, instead of silently
+        degrading to "cross-pod" locality.
+        """
         if not name.startswith("pod"):
             return None
         try:
             pod_s, host_s = name.split("/")
+            if not host_s.startswith("host"):
+                raise ValueError(host_s)
             return HostAddr(int(pod_s[3:]), int(host_s[4:]))
-        except (ValueError, IndexError):
-            return None
+        except ValueError:
+            raise ValueError(
+                f"malformed host name {name!r}: expected 'pod<int>/host<int>'"
+            ) from None
 
     def same_pod(self, a: str, b: str) -> bool:
         aa, bb = self.addr_of(a), self.addr_of(b)

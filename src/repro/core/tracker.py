@@ -29,9 +29,15 @@ class PeerRecord:
     arrived_at: float = 0.0
     completed_at: float = -1.0
     is_origin: bool = False
-    is_web_seed: bool = False    # origin exposes an HTTP byte-range endpoint
+    is_web_seed: bool = False    # exposes an HTTP byte-range endpoint
     peer_protocol: bool = True   # False => never handed out in peer lists
     http_uploaded: float = 0.0   # payload bytes served via HTTP range requests
+    tier: str = "peer"           # egress tier: "origin" | "pod_cache" | "peer"
+    pod: Optional[int] = None    # locality of a web-seed endpoint (pod caches)
+
+    @property
+    def egress(self) -> float:
+        return self.uploaded + self.http_uploaded
 
 
 @dataclasses.dataclass
@@ -40,14 +46,22 @@ class SwarmStats:
     leechers: int
     total_uploaded: float
     total_downloaded: float
-    origin_uploaded: float       # total origin egress: peer protocol + HTTP
+    origin_uploaded: float       # mirror-tier egress: peer protocol + HTTP
     completed: int
     origin_http_uploaded: float = 0.0
+    # Egress decomposed by serving tier ("origin" / "pod_cache" / "peer").
+    # The tiers are exhaustive and disjoint: their sum equals total_uploaded.
+    tier_uploaded: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def origin_peer_uploaded(self) -> float:
         """Origin egress served through the swarm peer protocol only."""
         return self.origin_uploaded - self.origin_http_uploaded
+
+    @property
+    def pod_cache_uploaded(self) -> float:
+        """Bytes served to leechers out of the pod-local cache tier."""
+        return self.tier_uploaded.get("pod_cache", 0.0)
 
     @property
     def ud_ratio(self) -> float:
@@ -92,6 +106,8 @@ class Tracker:
         peer_protocol: bool = True,
         http_uploaded: Optional[float] = None,
         want_peers: int = 40,
+        tier: Optional[str] = None,
+        pod: Optional[int] = None,
     ) -> list[str]:
         swarm = self._swarm(metainfo)
         rec = swarm.get(peer_id)
@@ -99,6 +115,7 @@ class Tracker:
             rec = PeerRecord(
                 peer_id=peer_id, arrived_at=now, is_origin=is_origin,
                 is_web_seed=is_web_seed, peer_protocol=peer_protocol,
+                tier=tier or ("origin" if is_origin else "peer"), pod=pod,
             )
             swarm[peer_id] = rec
         rec.uploaded = float(uploaded)
@@ -127,25 +144,55 @@ class Tracker:
             candidates = [candidates[i] for i in sorted(idx)]
         return candidates
 
+    # ------------------------------------------------------------- mirrors
+    def mirror_list(self, metainfo: MetaInfo, peer_id: str) -> list[str]:
+        """Ranked live web-seed endpoints for ``peer_id``.
+
+        The tracker-side half of mirror selection: discovery plus locality
+        tiering. The client's pod cache (if one is registered for its pod)
+        ranks first; other pods' caches are withheld (serving through them
+        would re-cross the spine); root mirrors follow, least announced
+        egress first, so a cold mirror naturally absorbs new clients. The
+        swarm driver applies its client-side ``OriginPolicy.selection`` on
+        top of this list.
+        """
+        swarm = self._swarm(metainfo)
+        my_pod: Optional[int] = None
+        if self.topology is not None:
+            addr = self.topology.addr_of(peer_id)
+            my_pod = addr.pod if addr is not None else None
+        ranked = []
+        for rec in swarm.values():
+            if not rec.is_web_seed or rec.left or rec.peer_id == peer_id:
+                continue
+            if rec.tier == "pod_cache" and rec.pod != my_pod:
+                continue
+            local = 0 if (rec.pod is not None and rec.pod == my_pod) else 1
+            ranked.append((local, rec.egress, rec.peer_id))
+        return [pid for _, _, pid in sorted(ranked)]
+
     # ------------------------------------------------------------- scrape
     def scrape(self, metainfo: MetaInfo) -> SwarmStats:
         swarm = self._swarm(metainfo)
-        live = [r for r in swarm.values() if not r.left]
+        # pod caches are infrastructure, not community members: they never
+        # count as seeders/leechers (their bytes land in tier_uploaded)
+        live = [r for r in swarm.values() if not r.left and r.tier != "pod_cache"]
+        tiers: dict[str, float] = {}
+        for r in swarm.values():
+            tiers[r.tier] = tiers.get(r.tier, 0.0) + r.egress
         return SwarmStats(
             seeders=sum(1 for r in live if r.complete or r.is_origin),
             leechers=sum(1 for r in live if not (r.complete or r.is_origin)),
-            total_uploaded=sum(
-                r.uploaded + r.http_uploaded for r in swarm.values()
-            ),
+            total_uploaded=sum(r.egress for r in swarm.values()),
             total_downloaded=sum(r.downloaded for r in swarm.values()),
             origin_uploaded=sum(
-                r.uploaded + r.http_uploaded
-                for r in swarm.values() if r.is_origin
+                r.egress for r in swarm.values() if r.is_origin
             ),
             completed=sum(1 for r in swarm.values() if r.complete),
             origin_http_uploaded=sum(
                 r.http_uploaded for r in swarm.values() if r.is_origin
             ),
+            tier_uploaded=tiers,
         )
 
     def records(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:

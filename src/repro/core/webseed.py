@@ -1,42 +1,58 @@
-"""Web-seed hybrid origin: an HTTP server augmented with a swarm (BEP-19).
+"""Web-seed origin fabric: HTTP mirrors + pod caches augmented with a swarm.
 
-This is the paper's headline mechanism made explicit: "by augmenting an
+This is the paper's headline mechanism made explicit — "by augmenting an
 existing HTTP server with a peer-to-peer swarm, requests get re-routed to
-get data from downloaders". The origin stays a plain byte-range HTTP
-server; leechers decide, *per piece request*, whether to hit the origin or
-a peer, and every HTTP-delivered piece immediately becomes swarm inventory
-(a Have broadcast), so the community amplifies each origin byte the same
-way a classic seed would — without the origin ever speaking the peer
-protocol unless asked to.
+get data from downloaders" — generalized from one hard-wired origin to a
+**hierarchical multi-origin delivery network**. Real dissemination (the
+ImageNet mirrors the paper opens with) is served from several mirrors with
+divergent bandwidth; inside a cluster, a pod-local cache tier collapses
+cross-pod traffic the same way the swarm collapses origin traffic. Origins
+stay plain byte-range HTTP servers; leechers decide, *per piece request*,
+whether to hit an origin or a peer, and every HTTP-delivered piece
+immediately becomes swarm inventory (a Have broadcast).
 
 Components:
 
 * :class:`OriginPolicy` — all the routing/serving knobs (below).
+* :class:`MirrorSpec` — one mirror's deployment description (uplink
+  bandwidth, latency penalty, static weight, admission cap).
 * :class:`WebSeedOrigin` — the HTTP front-end over a piece store: verified
   byte-range reads, admission control, an HTTP-egress ledger, and a
   ``corrupt_once`` fault-injection hook (serve a bad range once, then heal)
   for exercising the client-side verify + re-fetch path.
+* :class:`OriginSet` — the mirror tier: N :class:`WebSeedOrigin` mirrors
+  plus the client-side selection policy (static weights, least-loaded,
+  EWMA throughput) and fault hooks (``fail``/``heal``). The tracker's
+  :meth:`~repro.core.tracker.Tracker.mirror_list` supplies discovery and
+  locality tiering; ``OriginSet.ranked`` orders within the tier.
+* :class:`PodCacheOrigin` — a per-pod web-seed proxy: serves its pod over
+  cheap leaf links and lazily fills from the mirror tier over the spine,
+  verifying every filled piece before caching it (a bad mirror is excluded
+  per piece and the fill re-fetched from the next one).
 * :func:`swarm_routed_mask` — deterministic per-piece route assignment.
   Each piece hashes to a uniform score in [0, 1); pieces with score <
   ``swarm_fraction`` are swarm-routed. The sets are *nested* across
   fractions, so origin egress falls monotonically as the fraction grows
   (the Fig. 1 hybrid crossover), and the endpoints are exact: fraction 0
   is pure HTTP, fraction 1 is pure swarm.
-* :class:`WebSeedSwarmSim` — the time-domain engine: HTTP range flows and
-  peer flows share the origin node's uplink in the fluid netsim, and the
-  tracker ledger splits origin HTTP egress from peer egress
-  (``SwarmStats.origin_http_uploaded`` / ``origin_peer_uploaded``).
+* :class:`WebSeedSwarmSim` — the time-domain engine: HTTP range flows,
+  cache-fill flows, and peer flows share the fluid netsim (cross-pod flows
+  additionally contend on the topology's spine link), and the tracker
+  ledger splits egress per tier (``SwarmStats.tier_uploaded``) and per
+  origin. A mirror that dies mid-range aborts its flows and clients/caches
+  fail over to the next ranked mirror.
 
 The byte-domain integration lives in :class:`repro.core.swarm.LocalSwarm`
-(``webseed=`` argument): real verified range reads with HTTP fallback when
-no peer holds a piece, which is what lets ``repro.data.swarm_loader``
-cold-start ingest from a bare origin with zero seeded peers.
+(``webseed=``/``mirrors=`` arguments): real verified range reads with HTTP
+fallback when no peer holds a piece, which is what lets
+``repro.data.swarm_loader`` cold-start ingest from the nearest pod cache —
+or a bare origin — with zero seeded peers.
 
 ``OriginPolicy`` knobs:
 
 ======================  =====================================================
 ``mode``                ``"swarm_first"``: swarm-routed pieces go to peers;
-                        the origin is only hit for HTTP-routed pieces and —
+                        origins are only hit for HTTP-routed pieces and —
                         when ``http_fallback`` — for pieces *no connected
                         peer holds* (cold start, churn holes).
                         ``"http_first"``: every missing piece is eligible
@@ -45,27 +61,48 @@ cold-start ingest from a bare origin with zero seeded peers.
                         whatever peers can already serve (origin offload).
 ``swarm_fraction``      Fraction of the piece space routed through the
                         swarm (0 = pure HTTP baseline, 1 = pure swarm).
-``origin_up_bps``       Bandwidth cap on origin egress (the HTTP server's
-                        uplink; shared with peer-protocol serving when
-                        ``serve_peer_protocol``).
-``max_concurrent``      Admission control: simultaneous range requests the
-                        origin will serve; excess requests are rejected.
+``origin_up_bps``       Default bandwidth cap on a mirror's egress; a
+                        :class:`MirrorSpec` overrides it per mirror.
+``max_concurrent``      Admission control: simultaneous range requests each
+                        origin (mirror or pod cache) will serve; excess
+                        requests are rejected. ``MirrorSpec.max_concurrent``
+                        overrides it per mirror.
 ``backoff``             Seconds a rejected client waits before retrying.
 ``http_pipeline``       Concurrent range requests per client (1 = serial
                         range streaming, matching the HTTP baseline).
-``http_fallback``       Allow swarm-routed pieces to fall back to the
+``http_fallback``       Allow swarm-routed pieces to fall back to an
                         origin when no connected peer holds them.
-``serve_peer_protocol`` The origin host *also* joins the swarm as a seed
+``serve_peer_protocol`` Mirror hosts *also* join the swarm as seeds
                         (one box, two serving paths, one uplink). With
                         ``swarm_fraction=1`` this reproduces ``SwarmSim``
                         exactly.
+``selection``           Client-side mirror selection within the tier the
+                        tracker hands back: ``"static"`` ranks by
+                        ``MirrorSpec.weight``; ``"least_loaded"`` by live
+                        admission count (then served bytes); ``"ewma"`` by
+                        an EWMA of observed per-flow throughput (seeded
+                        optimistically from ``MirrorSpec.up_bps``).
+======================  =====================================================
+
+Mirror/cache deployment knobs (:class:`MirrorSpec` / ``add_pod_caches``):
+
+======================  =====================================================
+``MirrorSpec.up_bps``   This mirror's uplink capacity (divergent mirrors
+                        are the point of the fabric).
+``MirrorSpec.latency_s``  Added delay before each range request's bytes
+                        start flowing (a far mirror loses to a near one at
+                        equal bandwidth).
+``MirrorSpec.weight``   Static selection weight (highest first).
+``MirrorSpec.max_concurrent``  Per-mirror admission cap override.
+``add_pod_caches(up_bps, down_bps)``  Per-pod cache proxy uplink (serving
+                        the pod) and downlink (absorbing spine fills).
 ======================  =====================================================
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -90,6 +127,7 @@ class OriginPolicy:
     http_pipeline: int = 1
     http_fallback: bool = True
     serve_peer_protocol: bool = False
+    selection: str = "static"          # "static" | "least_loaded" | "ewma"
 
     def __post_init__(self) -> None:
         if self.mode not in ("swarm_first", "http_first"):
@@ -100,6 +138,20 @@ class OriginPolicy:
             raise ValueError("max_concurrent must be >= 1")
         if self.http_pipeline < 1:
             raise ValueError("http_pipeline must be >= 1")
+        if self.selection not in ("static", "least_loaded", "ewma"):
+            raise ValueError(f"unknown mirror selection {self.selection!r}")
+
+
+@dataclasses.dataclass
+class MirrorSpec:
+    """Deployment description of one mirror in the origin tier."""
+
+    name: str
+    up_bps: float
+    down_bps: float = 1.0
+    latency_s: float = 0.0
+    weight: float = 1.0
+    max_concurrent: Optional[int] = None   # None => policy.max_concurrent
 
 
 def swarm_routed_mask(metainfo: MetaInfo, fraction: float) -> np.ndarray:
@@ -153,7 +205,7 @@ class WebSeedOrigin:
         self.active = 0
         self.peak_active = 0
         # fault injection: serve a corrupted range ONCE for these pieces,
-        # then heal — exercises client verify + re-fetch
+        # then heal — exercises client-side verify + re-fetch
         self.corrupt_once: set[int] = set()
 
     # ------------------------------------------------------------- admission
@@ -200,16 +252,167 @@ class WebSeedOrigin:
         return data
 
 
+class PodCacheOrigin(WebSeedOrigin):
+    """Per-pod web-seed proxy: serves its pod, lazily fills from mirrors.
+
+    The cache is itself a :class:`WebSeedOrigin` (admission, egress ledger,
+    corrupt-once hook), plus a possession mask (``have``) decoupled from the
+    payload store so size-only simulations work, a fill ledger, and the
+    in-flight fill bookkeeping the time-domain engine coalesces concurrent
+    misses through (one spine fill per piece, however many pod clients are
+    waiting on it).
+    """
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        pod: int,
+        policy: Optional[OriginPolicy] = None,
+        name: Optional[str] = None,
+    ):
+        super().__init__(
+            metainfo, store={}, policy=policy, name=name or f"cache/pod{pod}"
+        )
+        self.pod = pod
+        self.node = None               # netsim node, attached by the driver
+        self.have = np.zeros(metainfo.num_pieces, dtype=bool)
+        self.fill_downloaded = 0.0     # bytes pulled from the mirror tier
+        self.fill_wasted = 0.0         # fill bytes that failed verification
+        # time-domain fill state
+        self.filling: dict[int, list[str]] = {}   # piece -> waiting clients
+        self.fill_from: dict[int, str] = {}       # piece -> mirror mid-fill
+        self.bad_mirrors: dict[int, set[str]] = {}  # piece -> excluded mirrors
+
+    def holds(self, piece: int) -> bool:
+        return bool(self.have[piece])
+
+    def commit(self, piece: int, data: Optional[bytes]) -> None:
+        """Record a verified (or size-only) fill from the mirror tier."""
+        self.have[piece] = True
+        self.fill_downloaded += self.metainfo.piece_size(piece)
+        if data is not None and self.store is not None:
+            self.store[piece] = data
+
+
+# --------------------------------------------------------------------------- origin set
+
+
+class OriginSet:
+    """The mirror tier: N web-seed origins + client-side selection policy.
+
+    Mirrors replicate the same content (each wraps a piece store holding
+    the full bundle) but diverge in bandwidth, latency, weight, and
+    admission caps. ``ranked`` orders live mirrors by the policy's
+    ``selection`` mode; ``fail``/``heal`` are the fault hooks the failover
+    paths key off. A set with one mirror and no caches degenerates exactly
+    to the single hard-wired origin it replaced.
+    """
+
+    def __init__(
+        self,
+        metainfo: MetaInfo,
+        policy: Optional[OriginPolicy] = None,
+        mirrors: Iterable[MirrorSpec] = (),
+        store: Optional[dict[int, bytes]] = None,
+    ):
+        self.metainfo = metainfo
+        self.policy = policy or OriginPolicy()
+        self.specs: dict[str, MirrorSpec] = {}
+        self.origins: dict[str, WebSeedOrigin] = {}
+        self.failed: set[str] = set()
+        self._ewma_bps: dict[str, float] = {}
+        for spec in mirrors:
+            self.add_mirror(spec, store=store)
+
+    def add_mirror(
+        self, spec: MirrorSpec, store: Optional[dict[int, bytes]] = None
+    ) -> WebSeedOrigin:
+        if spec.name in self.origins:
+            raise ValueError(f"duplicate mirror {spec.name!r}")
+        pol = self.policy
+        if spec.max_concurrent is not None:
+            pol = dataclasses.replace(pol, max_concurrent=spec.max_concurrent)
+        origin = WebSeedOrigin(
+            self.metainfo, store=store, policy=pol, name=spec.name
+        )
+        self.specs[spec.name] = spec
+        self.origins[spec.name] = origin
+        self._ewma_bps[spec.name] = spec.up_bps  # optimistic start
+        return origin
+
+    def __len__(self) -> int:
+        return len(self.origins)
+
+    @property
+    def primary(self) -> WebSeedOrigin:
+        """First mirror added — the back-compat single ``web_origin``."""
+        return next(iter(self.origins.values()))
+
+    # ------------------------------------------------------------- faults
+    def fail(self, name: str) -> None:
+        if name not in self.origins:
+            raise KeyError(name)
+        self.failed.add(name)
+
+    def heal(self, name: str) -> None:
+        self.failed.discard(name)
+
+    def live(self) -> list[str]:
+        return [n for n in self.origins if n not in self.failed]
+
+    # ------------------------------------------------------------- selection
+    def observe(self, name: str, nbytes: float, elapsed: float) -> None:
+        """Fold one completed range flow into the mirror's throughput EWMA."""
+        if elapsed <= 0 or name not in self._ewma_bps:
+            return
+        alpha = 0.3
+        self._ewma_bps[name] = (
+            (1 - alpha) * self._ewma_bps[name] + alpha * (nbytes / elapsed)
+        )
+
+    def ranked(self, names: Optional[Iterable[str]] = None) -> list[str]:
+        """Live mirrors ordered by the policy's ``selection`` mode.
+
+        ``names`` restricts (and is typically supplied by) the tracker's
+        ``mirror_list``; ordering here is purely client-side.
+        """
+        cands = [
+            n for n in (self.origins if names is None else names)
+            if n in self.origins and n not in self.failed
+        ]
+        sel = self.policy.selection
+        if sel == "least_loaded":
+            key = lambda n: (
+                self.origins[n].active,
+                self.origins[n].http_uploaded,
+                -self.specs[n].weight,
+                n,
+            )
+        elif sel == "ewma":
+            key = lambda n: (-self._ewma_bps[n], n)
+        else:  # static weights
+            key = lambda n: (-self.specs[n].weight, n)
+        return sorted(cands, key=key)
+
+    # ------------------------------------------------------------- telemetry
+    @property
+    def http_uploaded(self) -> float:
+        """Aggregate mirror-tier HTTP egress (direct serves + cache fills)."""
+        return sum(o.http_uploaded for o in self.origins.values())
+
+
 # --------------------------------------------------------------------------- time-domain engine
 
 
 class WebSeedSwarmSim(SwarmSim):
-    """Time-domain hybrid: HTTP origin + swarm over one fluid network.
+    """Time-domain hybrid: an origin fabric + swarm over one fluid network.
 
-    Call :meth:`add_web_origin` instead of ``add_origin``; everything else
-    (``add_peers``, ``run``) is inherited. Per piece request the routing
-    mask + policy mode decide origin-vs-peer; HTTP range flows contend with
-    peer flows for the same origin uplink.
+    Call :meth:`add_web_origin` (single mirror, the PR-1 surface) or
+    :meth:`add_mirrors` instead of ``add_origin``; optionally
+    :meth:`add_pod_caches`; everything else (``add_peers``, ``run``) is
+    inherited. Per piece request the routing mask + policy mode decide
+    origin-vs-peer; HTTP range flows contend with peer flows for each
+    mirror's uplink, and with every cross-pod flow for the spine.
     """
 
     def __init__(
@@ -230,11 +433,19 @@ class WebSeedSwarmSim(SwarmSim):
         self._swarm_routed = swarm_routed_mask(
             metainfo, self.policy.swarm_fraction
         )
-        self.web_origin: Optional[WebSeedOrigin] = None
-        self.origin_id: Optional[str] = None
-        self._http_src: Optional[str] = None     # sentinel source id for flows
+        self.origin_set = OriginSet(metainfo, policy=self.policy)
+        self.caches: dict[int, PodCacheOrigin] = {}
+        self._cache_by_name: dict[str, PodCacheOrigin] = {}
+        self.origin_id: Optional[str] = None      # primary mirror (back-compat)
         self._http_outstanding: dict[str, int] = {}
         self._retry_scheduled: set[str] = set()
+        # (client, piece) -> mirrors that served bytes failing verification
+        self._http_bad: dict[tuple[str, int], set[str]] = {}
+
+    @property
+    def web_origin(self) -> Optional[WebSeedOrigin]:
+        """The primary mirror's HTTP front-end (single-origin back-compat)."""
+        return self.origin_set.primary if len(self.origin_set) else None
 
     # ------------------------------------------------------------- membership
     def _new_agent(self, peer_id: str, is_origin: bool) -> PeerAgent:
@@ -246,27 +457,92 @@ class WebSeedSwarmSim(SwarmSim):
     def add_web_origin(
         self, name: str = "origin", down_bps: float = 1.0
     ) -> PeerAgent:
-        """Attach the hybrid origin: one netsim node whose uplink serves
-        HTTP range flows and (optionally) peer-protocol flows."""
-        pol = self.policy
-        agent = self._new_agent(name, is_origin=True)
-        agent.node = self.net.add_node(name, pol.origin_up_bps, down_bps)
-        self.origin_id = name
-        self._http_src = f"{name}::http"
-        self.web_origin = WebSeedOrigin(
-            self.metainfo, store=agent.store, policy=pol, name=name
+        """Attach a single hybrid origin — the PR-1 surface, now one mirror."""
+        return self.add_mirror(
+            MirrorSpec(name, up_bps=self.policy.origin_up_bps,
+                       down_bps=down_bps)
         )
+
+    def add_mirror(self, spec: MirrorSpec) -> PeerAgent:
+        """Attach one mirror: a netsim node whose uplink serves HTTP range
+        flows, cache fills, and (optionally) peer-protocol flows."""
+        pol = self.policy
+        agent = self._new_agent(spec.name, is_origin=True)
+        agent.node = self.net.add_node(spec.name, spec.up_bps, spec.down_bps)
+        if self.origin_id is None:
+            self.origin_id = spec.name
+        self.origin_set.add_mirror(spec, store=agent.store)
         self.tracker.announce(
-            self.metainfo, name, uploaded=0, downloaded=0,
+            self.metainfo, spec.name, uploaded=0, downloaded=0,
             event="started", now=self.net.now, is_origin=True,
             is_web_seed=True, peer_protocol=pol.serve_peer_protocol,
         )
         return agent
 
+    def add_mirrors(self, specs: Sequence[MirrorSpec]) -> list[PeerAgent]:
+        return [self.add_mirror(s) for s in specs]
+
+    def add_pod_caches(
+        self, up_bps: float, down_bps: Optional[float] = None
+    ) -> list[PodCacheOrigin]:
+        """Attach one cache proxy per pod of the topology: a netsim node
+        that serves its pod over leaf links and fills from the mirror tier
+        over the spine. Must run before peers arrive — the cache tier
+        shapes the tracker peer lists pod-local."""
+        if self.topology is None:
+            raise ValueError("pod caches require a ClusterTopology")
+        if self._pending_arrivals > 0 or any(
+            not a.is_origin for a in self.agents.values()
+        ):
+            raise ValueError(
+                "add_pod_caches must be called before peers are added: "
+                "already-arrived peers keep their cross-pod connections "
+                "and would trade around the cache tier"
+            )
+        out = []
+        for pod in range(self.topology.num_pods):
+            if pod in self.caches:
+                raise ValueError(f"pod {pod} already has a cache")
+            cache = PodCacheOrigin(self.metainfo, pod, policy=self.policy)
+            cache.node = self.net.add_node(
+                cache.name, up_bps, down_bps if down_bps is not None else up_bps
+            )
+            self.caches[pod] = cache
+            self._cache_by_name[cache.name] = cache
+            self._pod_of[cache.name] = pod
+            self.tracker.announce(
+                self.metainfo, cache.name, uploaded=0, downloaded=0,
+                event="started", now=self.net.now, is_web_seed=True,
+                peer_protocol=False, tier="pod_cache", pod=pod,
+            )
+            out.append(cache)
+        return out
+
+    # ------------------------------------------------------------- faults
+    def fail_mirror(self, name: str) -> None:
+        """Hard-kill a mirror mid-swarm: its flows (range serves and cache
+        fills) abort and clients/caches fail over to the next ranked
+        mirror; the tracker stops handing it out."""
+        if name not in self.origin_set.origins:
+            raise KeyError(f"unknown mirror {name!r}")
+        self.origin_set.fail(name)
+        agent = self.agents.get(name)
+        if agent is not None and not agent.departed:
+            self._depart(agent, self.net.now)
+
     # ------------------------------------------------------------- scheduling
+    def _filter_peer_list(self, agent: PeerAgent, peer_list: list[str]) -> list[str]:
+        """With a cache tier, the peer mesh goes pod-local: the cache is the
+        pod's doorway to the rest of the fabric, so cross-pod bytes are fill
+        traffic only (attach caches before peers arrive)."""
+        if not self.caches:
+            return peer_list
+        pod = self._pod(agent.peer_id)
+        return [p for p in peer_list if self._pod(p) == pod]
+
     def _launch(self, agent: PeerAgent, now: float) -> None:
         super()._launch(agent, now)  # peer path (mask-constrained)
-        if self.web_origin is not None:
+        if len(self.origin_set):
             self._launch_http(agent, now)
 
     def _next_http_piece(self, agent: PeerAgent) -> Optional[int]:
@@ -303,36 +579,292 @@ class WebSeedSwarmSim(SwarmSim):
         cold = np.flatnonzero(fallback)
         return int(cold[agent.rng.integers(cold.size)])
 
+    def _http_targets(self, agent: PeerAgent) -> list[WebSeedOrigin]:
+        """Ranked serving endpoints for this client: its pod cache when one
+        exists (the cache IS the origin from the pod's point of view), else
+        the tracker's mirror list re-ranked by the client-side policy."""
+        if self.caches:
+            cache = self.caches.get(self._pod(agent.peer_id))
+            if cache is not None and not cache.node.failed:
+                return [cache]
+        names = self.tracker.mirror_list(self.metainfo, agent.peer_id)
+        out = []
+        for name in self.origin_set.ranked(names):
+            magent = self.agents.get(name)
+            if magent is not None and magent.node is not None \
+                    and not magent.node.failed:
+                out.append(self.origin_set.origins[name])
+        return out
+
     def _launch_http(self, agent: PeerAgent, now: float) -> None:
         pol = self.policy
         if (
             agent.departed or agent.node is None or agent.is_seed
-            or agent.peer_id == self.origin_id
+            or agent.peer_id in self.origin_set.origins
         ):
             return
-        origin = self.agents[self.origin_id]
-        if origin.node is None or origin.node.failed:
+        targets = self._http_targets(agent)
+        if not targets:
             return
         while self._http_outstanding.get(agent.peer_id, 0) < pol.http_pipeline:
             piece = self._next_http_piece(agent)
             if piece is None:
                 return
-            if not self.web_origin.try_admit():
+            started = self._request_http(agent, piece, targets, now)
+            if started is None:      # permanently unservable right now
+                return
+            if not started:          # everyone rejected: back off and retry
                 self._schedule_retry(agent, now)
                 return
-            agent.in_flight[piece] = self._http_src
+
+    def _request_http(
+        self,
+        agent: PeerAgent,
+        piece: int,
+        targets: Sequence[WebSeedOrigin],
+        now: float,
+    ) -> Optional[bool]:
+        """Route one range request to the first endpoint that admits it.
+
+        Returns True when a flow (or queued cache fill) is under way, False
+        when every endpoint rejected the request (caller backs off), None
+        when nothing can serve it at all (dead mirror tier — no retry)."""
+        bad = self._http_bad.get((agent.peer_id, piece), set())
+        servable = False
+        for origin in targets:
+            if origin.name in bad:
+                continue
+            servable = True
+            if isinstance(origin, PodCacheOrigin):
+                if not origin.try_admit():
+                    continue
+                if not origin.holds(piece) and piece not in origin.fill_from:
+                    if not self._start_fill(origin, piece, now):
+                        # dead mirror tier: nothing to fill from
+                        origin.release()
+                        return None
+                src_tag = f"{origin.name}::http"
+                agent.in_flight[piece] = src_tag
+                self._http_outstanding[agent.peer_id] = (
+                    self._http_outstanding.get(agent.peer_id, 0) + 1
+                )
+                if origin.holds(piece):
+                    self._start_http_flow(origin, agent, piece, now)
+                else:
+                    origin.filling.setdefault(piece, []).append(agent.peer_id)
+                return True
+            if not origin.try_admit():
+                continue
+            agent.in_flight[piece] = f"{origin.name}::http"
             self._http_outstanding[agent.peer_id] = (
                 self._http_outstanding.get(agent.peer_id, 0) + 1
             )
+            self._start_http_flow(origin, agent, piece, now)
+            return True
+        if not servable and targets and bad:
+            # every live endpoint previously served bad bytes for this
+            # piece: heal the exclusions (corrupt-once origins recover) and
+            # retry after the backoff instead of giving up
+            self._http_bad.pop((agent.peer_id, piece), None)
+            return False
+        return False if servable else None
+
+    def _finish_http_request(
+        self, origin: WebSeedOrigin, dst_id: str, piece: int
+    ) -> Optional[PeerAgent]:
+        """Tear down one admitted range request: free the origin's admission
+        slot and the client's pipeline slot (the paired invariant every HTTP
+        path must maintain). Returns the client agent, if it still exists;
+        the caller owns any in-flight cleanup and relaunch."""
+        origin.release()
+        self._http_outstanding[dst_id] = max(
+            0, self._http_outstanding.get(dst_id, 0) - 1
+        )
+        return self.agents.get(dst_id)
+
+    def _start_http_flow(
+        self, origin: WebSeedOrigin, agent: PeerAgent, piece: int, now: float
+    ) -> None:
+        """Start the serving flow origin->client (honoring mirror latency)."""
+        src_tag = f"{origin.name}::http"
+        cache = self._cache_by_name.get(origin.name)
+        src_node = cache.node if cache is not None \
+            else self.agents[origin.name].node
+        spec = self.origin_set.specs.get(origin.name)
+        latency = spec.latency_s if spec is not None else 0.0
+
+        def _start(t: float) -> None:
+            dst = self.agents.get(agent.peer_id)
+            if (
+                dst is None or dst.departed or src_node.failed
+                or dst.in_flight.get(piece) != src_tag
+            ):
+                # endpoint vanished during the latency window
+                dst = self._finish_http_request(origin, agent.peer_id, piece)
+                if dst is not None and dst.in_flight.get(piece) == src_tag:
+                    del dst.in_flight[piece]
+                if dst is not None and not dst.departed:
+                    self._launch(dst, t)
+                return
             self.net.start_flow(
-                origin.node,
-                agent.node,
+                src_node,
+                dst.node,
                 self.metainfo.piece_size(piece),
-                tag=(self._http_src, agent.peer_id, piece),
+                tag=(src_tag, dst.peer_id, piece),
                 on_complete=self._on_http_done,
                 on_abort=self._on_http_abort,
+                links=self._links_between(origin.name, dst.peer_id),
             )
 
+        if latency > 0:
+            self.net.schedule(now + latency, _start)
+        else:
+            _start(now)
+
+    # ------------------------------------------------------------- cache fills
+    def _schedule_fill_backoff(
+        self, cache: PodCacheOrigin, piece: int, now: float
+    ) -> None:
+        """Park the fill behind a ``<backoff>`` sentinel and retry later."""
+        def _retry(t: float) -> None:
+            if cache.fill_from.get(piece) == "<backoff>":
+                del cache.fill_from[piece]
+            if piece in cache.filling and piece not in cache.fill_from \
+                    and not cache.holds(piece):
+                if not self._start_fill(cache, piece, t):
+                    self._drop_fill_waiters(cache, piece, t)
+
+        self.net.schedule(now + self.policy.backoff, _retry)
+        cache.fill_from[piece] = "<backoff>"
+
+    def _start_fill(
+        self, cache: PodCacheOrigin, piece: int, now: float
+    ) -> bool:
+        """Start (or restart after failover) the spine fill for one piece.
+
+        Returns False only when the live mirror tier is empty; admission
+        rejections — and the corner where every live mirror has served bad
+        bytes for this piece (exclusions heal: corrupt-once recovers) — are
+        retried after the policy backoff."""
+        names = self.tracker.mirror_list(self.metainfo, cache.name)
+        live = []
+        for name in self.origin_set.ranked(names):
+            magent = self.agents.get(name)
+            if magent is not None and magent.node is not None \
+                    and not magent.node.failed:
+                live.append((name, magent))
+        if not live:
+            return False
+        excluded = cache.bad_mirrors.get(piece, set())
+        usable = [(n, a) for n, a in live if n not in excluded]
+        if not usable:
+            # every live mirror is excluded for this piece: heal and retry
+            cache.bad_mirrors.pop(piece, None)
+            self._schedule_fill_backoff(cache, piece, now)
+            return True
+        for name, magent in usable:
+            mirror = self.origin_set.origins[name]
+            if not mirror.try_admit():
+                continue
+            cache.fill_from[piece] = name
+            spec = self.origin_set.specs[name]
+            size = self.metainfo.piece_size(piece)
+
+            def _start(t: float, name=name, magent=magent, mirror=mirror) -> None:
+                if magent.node.failed:
+                    mirror.release()
+                    cache.fill_from.pop(piece, None)
+                    if piece in cache.filling and \
+                            not self._start_fill(cache, piece, t):
+                        self._drop_fill_waiters(cache, piece, t)
+                    return
+                self.net.start_flow(
+                    magent.node,
+                    cache.node,
+                    size,
+                    tag=(f"{name}::fill", cache.name, piece),
+                    on_complete=self._on_fill_done,
+                    on_abort=self._on_fill_abort,
+                    links=self._links_between(name, cache.name),
+                )
+
+            if spec.latency_s > 0:
+                self.net.schedule(now + spec.latency_s, _start)
+            else:
+                _start(now)
+            return True
+        # all mirrors alive but busy: retry the fill after the backoff
+        self._schedule_fill_backoff(cache, piece, now)
+        return True
+
+    def _drop_fill_waiters(
+        self, cache: PodCacheOrigin, piece: int, now: float
+    ) -> None:
+        """The mirror tier died under a fill: release the pod's waiters so
+        they can finish through the peer path."""
+        cache.fill_from.pop(piece, None)
+        src_tag = f"{cache.name}::http"
+        for dst_id in cache.filling.pop(piece, []):
+            dst = self._finish_http_request(cache, dst_id, piece)
+            if dst is None or dst.departed:
+                continue
+            if dst.in_flight.get(piece) == src_tag:
+                del dst.in_flight[piece]
+            self._launch(dst, now)
+
+    def _on_fill_done(self, flow: Flow, now: float) -> None:
+        src_tag, cache_name, piece = flow.tag
+        mname = src_tag.rsplit("::", 1)[0]
+        mirror = self.origin_set.origins[mname]
+        cache = self._cache_by_name[cache_name]
+        mirror.release()
+        cache.fill_from.pop(piece, None)
+        data = mirror.read_piece(piece)   # mirror egress ledger + fault hook
+        self.origin_set.observe(mname, flow.size, now - flow.start_time)
+        self._announce_mirror(mname, now)
+        if data is not None and not self.metainfo.verify_piece(piece, data):
+            # bad bytes from this mirror: exclude it for this piece and
+            # re-fetch from the next ranked mirror (verified failover)
+            cache.fill_wasted += self.metainfo.piece_size(piece)
+            cache.bad_mirrors.setdefault(piece, set()).add(mname)
+            if piece in cache.filling and \
+                    not self._start_fill(cache, piece, now):
+                self._drop_fill_waiters(cache, piece, now)
+            return
+        cache.commit(piece, data)
+        self._announce_cache(cache, now)
+        for dst_id in cache.filling.pop(piece, []):
+            self._serve_from_cache(cache, dst_id, piece, now)
+
+    def _on_fill_abort(self, flow: Flow, now: float) -> None:
+        src_tag, cache_name, piece = flow.tag
+        mname = src_tag.rsplit("::", 1)[0]
+        self.origin_set.origins[mname].release()
+        cache = self._cache_by_name[cache_name]
+        cache.fill_from.pop(piece, None)
+        if cache.holds(piece) or piece not in cache.filling:
+            return
+        if not self._start_fill(cache, piece, now):
+            self._drop_fill_waiters(cache, piece, now)
+
+    def _serve_from_cache(
+        self, cache: PodCacheOrigin, dst_id: str, piece: int, now: float
+    ) -> None:
+        src_tag = f"{cache.name}::http"
+        dst = self.agents.get(dst_id)
+        if dst is None or dst.departed:
+            self._finish_http_request(cache, dst_id, piece)
+            return
+        if dst.bitfield.has(piece) or dst.in_flight.get(piece) != src_tag:
+            # the peer path delivered it while the fill was in flight
+            self._finish_http_request(cache, dst_id, piece)
+            if dst.in_flight.get(piece) == src_tag:
+                del dst.in_flight[piece]
+            self._launch(dst, now)
+            return
+        self._start_http_flow(cache, dst, piece, now)
+
+    # ------------------------------------------------------------- retries
     def _schedule_retry(self, agent: PeerAgent, now: float) -> None:
         pid = agent.peer_id
         if pid in self._retry_scheduled:
@@ -347,16 +879,38 @@ class WebSeedSwarmSim(SwarmSim):
         self.net.schedule(now + self.policy.backoff, _retry)
 
     # ------------------------------------------------------------- HTTP events
+    def _origin_by_name(self, name: str) -> WebSeedOrigin:
+        cache = self._cache_by_name.get(name)
+        return cache if cache is not None else self.origin_set.origins[name]
+
+    def _announce_mirror(self, name: str, now: float) -> None:
+        magent = self.agents.get(name)
+        self.tracker.announce(
+            self.metainfo, name,
+            uploaded=magent.ledger.uploaded if magent else 0.0,
+            downloaded=0.0, event="update", now=now, is_origin=True,
+            http_uploaded=self.origin_set.origins[name].http_uploaded,
+        )
+
+    def _announce_cache(self, cache: PodCacheOrigin, now: float) -> None:
+        self.tracker.announce(
+            self.metainfo, cache.name, uploaded=0.0,
+            downloaded=cache.fill_downloaded, event="update", now=now,
+            http_uploaded=cache.http_uploaded, tier="pod_cache",
+            pod=cache.pod,
+        )
+
     def _on_http_done(self, flow: Flow, now: float) -> None:
         src_tag, dst_id, piece = flow.tag
-        self.web_origin.release()
-        self._http_outstanding[dst_id] = max(
-            0, self._http_outstanding.get(dst_id, 0) - 1
-        )
-        dst = self.agents.get(dst_id)
+        name = src_tag.rsplit("::", 1)[0]
+        origin = self._origin_by_name(name)
+        cache = self._cache_by_name.get(name)
+        dst = self._finish_http_request(origin, dst_id, piece)
         if dst is None or dst.departed:
             return
-        data = self.web_origin.read_piece(piece)
+        data = origin.read_piece(piece)
+        if cache is None:
+            self.origin_set.observe(name, flow.size, now - flow.start_time)
         corrupt = (
             self.cfg.corruption_prob > 0
             and self.rng.random() < self.cfg.corruption_prob
@@ -364,26 +918,27 @@ class WebSeedSwarmSim(SwarmSim):
         if corrupt and data is not None:
             data = bytes([data[0] ^ 0xFF]) + data[1:]
         accepted = dst.accept_piece(piece, src_tag, data, now, corrupt=corrupt)
-        origin = self.agents.get(self.origin_id)
-        self.tracker.announce(
-            self.metainfo, self.origin_id,
-            uploaded=origin.ledger.uploaded if origin else 0.0,
-            downloaded=0.0, event="update", now=now, is_origin=True,
-            http_uploaded=self.web_origin.http_uploaded,
-        )
+        if cache is not None:
+            self._announce_cache(cache, now)
+        else:
+            self._announce_mirror(name, now)
         if accepted:
+            self._http_bad.pop((dst_id, piece), None)
             self._on_piece_accepted(dst, piece, now)
+        elif not corrupt and dst.last_reject_verify:
+            # this endpoint served bad bytes: steer the re-fetch (relaunch
+            # below) to the next ranked mirror
+            self._http_bad.setdefault((dst_id, piece), set()).add(name)
         # rejected (corrupt range) pieces are back in the missing set; the
         # relaunch below re-fetches them
         self._launch(dst, now)
 
     def _on_http_abort(self, flow: Flow, now: float) -> None:
         src_tag, dst_id, piece = flow.tag
-        self.web_origin.release()
-        self._http_outstanding[dst_id] = max(
-            0, self._http_outstanding.get(dst_id, 0) - 1
+        name = src_tag.rsplit("::", 1)[0]
+        dst = self._finish_http_request(
+            self._origin_by_name(name), dst_id, piece
         )
-        dst = self.agents.get(dst_id)
         if dst is None or dst.departed:
             return
         if dst.in_flight.get(piece) == src_tag:

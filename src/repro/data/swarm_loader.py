@@ -40,6 +40,8 @@ class IngestReport:
     total_downloaded: float
     per_host_pieces: dict[str, int]
     origin_http_uploaded: float = 0.0   # web-seed range-read share of egress
+    pod_cache_uploaded: float = 0.0     # bytes served out of pod-local caches
+    cross_pod_bytes: float = 0.0        # transfers whose endpoints straddle pods
 
     @property
     def ud_ratio(self) -> float:
@@ -67,17 +69,37 @@ class SwarmShardLoader:
         host_stores: Sequence[ShardStore],
         seed: int = 0,
         webseed: Optional[OriginPolicy] = None,
+        mirrors: Optional[Sequence] = None,
+        pods: Optional[int] = None,
     ):
         """``webseed``: serve the origin as a bare HTTP byte-range server
         (see :mod:`repro.core.webseed`) — cold-start ingest then begins
         from an un-seeded origin: the first copy of each piece enters the
-        swarm via a verified range read, after which hosts amplify it."""
+        swarm via a verified range read, after which hosts amplify it.
+
+        ``mirrors``: optional :class:`~repro.core.webseed.MirrorSpec` list
+        replicating the origin behind several endpoints (verified failover
+        between them). ``pods``: partition the hosts contiguously into this
+        many pods, each with a pod-local cache proxy — cold start then
+        range-reads from the *nearest cache* instead of the root origin,
+        and the report ledgers cache egress and cross-pod bytes."""
         self.manifest = manifest
         self.origin_pieces = origin_pieces
         self.host_stores = list(host_stores)
         self.seed = seed
         self.webseed = webseed
+        self.mirrors = list(mirrors) if mirrors is not None else None
         self.host_ids = [f"host{i:04d}" for i in range(len(host_stores))]
+        self.pod_of: Optional[dict[str, int]] = None
+        if pods is not None:
+            if webseed is None:
+                raise ValueError("pods (cache tier) requires a webseed policy")
+            if pods < 1:
+                raise ValueError(f"pods must be >= 1, got {pods}")
+            n = len(self.host_ids)
+            self.pod_of = {
+                hid: (i * pods) // n for i, hid in enumerate(self.host_ids)
+            }
         self.last_report: Optional[IngestReport] = None
 
     # ------------------------------------------------------------- ingestion
@@ -121,6 +143,9 @@ class SwarmShardLoader:
             policy=policy,
             needed=self._needed_masks(assignment),
             webseed=self.webseed,
+            mirrors=self.mirrors,
+            pod_of=self.pod_of,
+            pod_caches=self.pod_of is not None,
         )
         # resumability: pre-seed swarm bitfields from what stores already hold
         for hid, store in zip(self.host_ids, self.host_stores):
@@ -150,6 +175,8 @@ class SwarmShardLoader:
                 hid: swarm.peers[hid].bitfield.count() for hid in self.host_ids
             },
             origin_http_uploaded=swarm.http_uploaded,
+            pod_cache_uploaded=swarm.pod_cache_uploaded,
+            cross_pod_bytes=swarm.cross_pod_bytes,
         )
         return self.last_report
 
@@ -187,6 +214,9 @@ class SwarmShardLoader:
             self.manifest, self.origin_pieces, self.host_ids,
             seed=self.seed + 7919 * epoch, policy="sequential",
             webseed=self.webseed,
+            mirrors=self.mirrors,
+            pod_of=self.pod_of,
+            pod_caches=self.pod_of is not None,
         )
         for hid, store in zip(self.host_ids, self.host_stores):
             agent = swarm.peers[hid]
@@ -204,11 +234,13 @@ class SwarmShardLoader:
 
         emitted = 0
         guard = 0
+        idle = 0
         while emitted < n:
             target = min(emitted + window, n)
             # run swarm rounds until the current window's shards are complete
             while not all(shard_done(s) for s in range(emitted, target)):
-                if swarm.step() == 0 and not swarm.complete:
+                idle = idle + 1 if swarm.step() == 0 else 0
+                if idle > swarm.MAX_IDLE_ROUNDS and not swarm.complete:
                     raise RuntimeError("streaming ingest stalled")
                 guard += 1
                 if guard > 100_000:
@@ -232,6 +264,8 @@ class SwarmShardLoader:
                 hid: swarm.peers[hid].bitfield.count() for hid in self.host_ids
             },
             origin_http_uploaded=swarm.http_uploaded,
+            pod_cache_uploaded=swarm.pod_cache_uploaded,
+            cross_pod_bytes=swarm.cross_pod_bytes,
         )
 
 
@@ -239,6 +273,8 @@ def loader_from_corpus(
     corpus: ShardedCorpus, num_hosts: int, seed: int = 0,
     directories: Optional[Sequence[str]] = None,
     webseed: Optional[OriginPolicy] = None,
+    mirrors: Optional[Sequence] = None,
+    pods: Optional[int] = None,
 ) -> SwarmShardLoader:
     stores = [
         ShardStore(directories[i] if directories else None)
@@ -246,5 +282,5 @@ def loader_from_corpus(
     ]
     return SwarmShardLoader(
         corpus.manifest, corpus.origin_pieces(), stores, seed=seed,
-        webseed=webseed,
+        webseed=webseed, mirrors=mirrors, pods=pods,
     )

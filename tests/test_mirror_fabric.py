@@ -1,0 +1,424 @@
+"""Mirror fabric + pod-cache tier: PR-1 equivalence gate, mirror selection,
+mid-range failover, verified re-fetch, per-tier tracker ledger under churn,
+and the byte-domain nearest-cache cold start."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterTopology,
+    LocalSwarm,
+    MetaInfo,
+    MirrorSpec,
+    OriginPolicy,
+    OriginSet,
+    SwarmConfig,
+    WebSeedSwarmSim,
+    flash_crowd,
+    staggered_arrivals,
+)
+from repro.data.dataset import CorpusSpec, ShardedCorpus
+from repro.data.swarm_loader import loader_from_corpus
+
+ORIGIN, PEER_UP, PEER_DOWN = 20e6, 25e6, 50e6
+
+
+def sizes_only_mi(size=512e6, piece=16e6, name="fab"):
+    return MetaInfo.from_sizes_only(int(size), int(piece), name=name)
+
+
+def payload_mi(n_bytes=1 << 20, piece=1 << 15, seed=0, name="pay"):
+    payload = np.random.default_rng(seed).integers(
+        0, 256, size=n_bytes, dtype=np.uint8
+    ).tobytes()
+    mi = MetaInfo.from_bytes(payload, piece, name=name)
+    return mi, dict(mi.split_pieces(payload))
+
+
+def run_sim(mi, arrivals, policy, mirrors=None, cfg=None, seed=0, **kw):
+    sim = WebSeedSwarmSim(mi, policy, cfg or SwarmConfig(), seed=seed, **kw)
+    if mirrors is None:
+        sim.add_web_origin()
+    else:
+        sim.add_mirrors(mirrors)
+    sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    return sim
+
+
+# ----------------------------------------------------------- equivalence gate
+
+
+@pytest.mark.parametrize("fraction", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("mode", ["swarm_first", "http_first"])
+def test_single_mirror_no_cache_is_bit_identical_to_pr1(fraction, mode):
+    """The refactor's contract: an OriginSet with one mirror and no pod
+    caches reproduces the PR-1 single-origin WebSeedSwarmSim exactly —
+    same seeds, same SwarmResult, regardless of selection policy."""
+    mi = sizes_only_mi()
+    arrivals = staggered_arrivals(8, interval=5.0)
+    pol = dict(mode=mode, swarm_fraction=fraction, origin_up_bps=ORIGIN,
+               max_concurrent=6, serve_peer_protocol=(fraction == 1.0))
+    ref = run_sim(mi, arrivals, OriginPolicy(**pol), seed=7).run()
+    for selection in ("static", "least_loaded", "ewma"):
+        res = run_sim(
+            mi, arrivals, OriginPolicy(**pol, selection=selection),
+            mirrors=[MirrorSpec("origin", up_bps=ORIGIN)], seed=7,
+        ).run()
+        assert res == ref  # full dataclass equality: stats, ledgers, times
+
+
+def test_local_swarm_explicit_single_mirror_matches_default():
+    mi, store = payload_mi()
+    kw = dict(seed=4, webseed=OriginPolicy(swarm_fraction=1.0))
+    ref = LocalSwarm(mi, store, ["a", "b", "c"], **kw)
+    got = LocalSwarm(mi, store, ["a", "b", "c"],
+                     mirrors=[MirrorSpec("origin", up_bps=50e6)], **kw)
+    assert ref.run() == got.run()
+    assert ref.http_uploaded == got.http_uploaded
+    assert {p: a.ledger for p, a in ref.peers.items()} == \
+        {p: a.ledger for p, a in got.peers.items()}
+
+
+# ----------------------------------------------------------- mirror selection
+
+
+def test_origin_set_ranked_modes():
+    mi = sizes_only_mi()
+    oset = OriginSet(
+        mi, OriginPolicy(selection="static"),
+        mirrors=[MirrorSpec("a", up_bps=10e6, weight=1.0),
+                 MirrorSpec("b", up_bps=30e6, weight=3.0),
+                 MirrorSpec("c", up_bps=20e6, weight=2.0)],
+    )
+    assert oset.ranked() == ["b", "c", "a"]          # by static weight
+    oset.policy = OriginPolicy(selection="ewma")
+    assert oset.ranked() == ["b", "c", "a"]          # EWMA seeds from up_bps
+    oset.observe("a", 200e6, 1.0)                    # a measured much faster
+    assert oset.ranked()[0] == "a"
+    oset.policy = OriginPolicy(selection="least_loaded")
+    oset.origins["b"].try_admit()
+    oset.origins["b"].try_admit()
+    oset.origins["c"].try_admit()
+    assert oset.ranked() == ["a", "c", "b"]          # by live admissions
+    oset.fail("a")
+    assert oset.ranked() == ["c", "b"]
+    oset.heal("a")
+    assert oset.ranked("b") == ["b"]                 # tracker-restricted
+    with pytest.raises(ValueError):
+        oset.add_mirror(MirrorSpec("a", up_bps=1.0))  # duplicate
+
+
+def test_mirrors_share_load():
+    mi = sizes_only_mi()
+    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=ORIGIN,
+                       selection="least_loaded")
+    sim = run_sim(
+        mi, flash_crowd(8), pol,
+        mirrors=[MirrorSpec("origin0", up_bps=ORIGIN),
+                 MirrorSpec("origin1", up_bps=ORIGIN / 2)],
+    )
+    res = sim.run()
+    assert len(res.completion_time) == 8
+    served = {n: o.http_uploaded for n, o in sim.origin_set.origins.items()}
+    assert served["origin0"] > 0 and served["origin1"] > 0
+    # aggregate egress is still exactly the pure-HTTP bill, split two ways
+    assert res.origin_uploaded == pytest.approx(8 * mi.length)
+    assert sum(served.values()) == pytest.approx(8 * mi.length)
+
+
+def test_mirror_latency_penalty_slows_delivery():
+    mi = sizes_only_mi(size=128e6)
+    arrivals = flash_crowd(4)
+    pol = dict(swarm_fraction=0.0, origin_up_bps=ORIGIN)
+    fast = run_sim(mi, arrivals, OriginPolicy(**pol),
+                   mirrors=[MirrorSpec("origin", up_bps=ORIGIN)]).run()
+    slow = run_sim(
+        mi, arrivals, OriginPolicy(**pol),
+        mirrors=[MirrorSpec("origin", up_bps=ORIGIN, latency_s=3.0)],
+    ).run()
+    assert slow.mean_completion_time() > fast.mean_completion_time()
+    assert len(slow.completion_time) == 4
+
+
+# ----------------------------------------------------------- failover
+
+
+def test_mirror_dies_mid_range_clients_fail_over():
+    mi, store = payload_mi(n_bytes=1 << 20, piece=1 << 15)
+    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=1e6)
+    sim = run_sim(
+        mi, flash_crowd(5), pol,
+        mirrors=[MirrorSpec("origin0", up_bps=1e6, weight=2.0),
+                 MirrorSpec("origin1", up_bps=1e6, weight=1.0)],
+        origin_payload=store, seed=3,
+    )
+    # kill the preferred mirror while its range flows are in flight
+    sim.net.schedule(0.25, lambda now: sim.fail_mirror("origin0"))
+    res = sim.run()
+    assert len(res.completion_time) == 5            # everyone finished
+    m1 = sim.origin_set.origins["origin1"].http_uploaded
+    assert m1 > 0                                    # failover actually served
+    for pid, agent in sim.agents.items():
+        if pid not in sim.origin_set.origins:
+            assert all(mi.verify_piece(i, d) for i, d in agent.store.items())
+    assert sim.tracker.mirror_list(mi, "peer0000") == ["origin1"]
+
+
+def test_corrupt_mirror_triggers_verified_refetch_from_next():
+    mi, store = payload_mi(n_bytes=1 << 19, piece=1 << 15)
+    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=ORIGIN)
+    sim = run_sim(
+        mi, flash_crowd(3), pol,
+        mirrors=[MirrorSpec("origin0", up_bps=ORIGIN, weight=2.0),
+                 MirrorSpec("origin1", up_bps=ORIGIN, weight=1.0)],
+        origin_payload=store, seed=1,
+    )
+    sim.origin_set.origins["origin0"].corrupt_once.update({0, 1})
+    res = sim.run()
+    assert len(res.completion_time) == 3
+    wasted = sum(l.wasted for l in res.ledgers.values())
+    assert wasted > 0                               # the bad ranges were paid for
+    for pid, agent in sim.agents.items():
+        if pid not in sim.origin_set.origins:
+            assert all(mi.verify_piece(i, d) for i, d in agent.store.items())
+
+
+def test_byte_domain_failover_and_dead_mirror():
+    mi, store = payload_mi()
+    swarm = LocalSwarm(
+        mi, store, ["a", "b", "c"], seed=2,
+        webseed=OriginPolicy(swarm_fraction=1.0),
+        mirrors=[MirrorSpec("m0", up_bps=20e6, weight=2.0),
+                 MirrorSpec("m1", up_bps=20e6, weight=1.0)],
+    )
+    swarm.origin_set.origins["m0"].corrupt_once.add(0)
+    swarm.run()
+    assert all(p.complete for p in swarm.peers.values())
+    # piece 0's first copy was re-fetched, verified, from the other mirror
+    assert swarm.origin_set.origins["m1"].http_uploaded > 0
+    for p in swarm.peers.values():
+        assert all(mi.verify_piece(i, d) for i, d in p.store.items())
+    with pytest.raises(KeyError):
+        swarm.fail_mirror("nope")
+
+
+def test_byte_domain_zero_move_retry_round_is_not_a_stall():
+    """Regression: a round in which every endpoint's range failed
+    verification moves zero pieces but is a legal retry state (corrupt-once
+    heals next round), not a stall."""
+    mi, store = payload_mi(n_bytes=1 << 18, piece=1 << 15)
+    swarm = LocalSwarm(
+        mi, store, ["solo"], seed=0,
+        webseed=OriginPolicy(swarm_fraction=0.0),
+    )
+    swarm.web_origin.corrupt_once.add(0)     # head-of-line piece, only origin
+    swarm.run()
+    assert swarm.peers["solo"].complete
+    assert all(
+        mi.verify_piece(i, d) for i, d in swarm.peers["solo"].store.items()
+    )
+
+
+def test_byte_domain_cache_heals_when_all_mirrors_served_bad_bytes():
+    """Regression: when *every* mirror serves a bad range for a piece, the
+    cache's exclusion set must heal in that same pass so the retry round
+    can re-fetch (and the run must survive the zero-move rounds)."""
+    mi, store = payload_mi(n_bytes=1 << 18, piece=1 << 15)
+    pod_of = {"p0": 0, "p1": 0}
+    swarm = LocalSwarm(
+        mi, store, list(pod_of), seed=1,
+        webseed=OriginPolicy(swarm_fraction=0.0),
+        mirrors=[MirrorSpec("m0", up_bps=20e6), MirrorSpec("m1", up_bps=20e6)],
+        pod_of=pod_of, pod_caches=True,
+    )
+    swarm.origin_set.origins["m0"].corrupt_once.add(0)
+    swarm.origin_set.origins["m1"].corrupt_once.add(0)
+    swarm.run()
+    assert all(p.complete for p in swarm.peers.values())
+    cache = swarm.pod_caches[0]
+    assert cache.fill_wasted > 0             # both bad serves were ledgered
+    assert not cache.bad_mirrors             # ...and the exclusions healed
+    for p in swarm.peers.values():
+        assert all(mi.verify_piece(i, d) for i, d in p.store.items())
+
+
+# ----------------------------------------------------------- pod cache tier
+
+
+def cache_sim(mi, seed=0, spine_bps=200e6, origin_payload=None, **pol_kw):
+    topo = ClusterTopology(
+        num_pods=2, hosts_per_pod=6, host_up_bps=PEER_UP,
+        host_down_bps=PEER_DOWN, spine_bps=spine_bps,
+    )
+    pol = OriginPolicy(swarm_fraction=1.0, origin_up_bps=ORIGIN, **pol_kw)
+    sim = WebSeedSwarmSim(
+        mi, pol, SwarmConfig(max_neighbors=5), seed=seed, topology=topo,
+        origin_payload=origin_payload,
+    )
+    sim.add_mirrors([MirrorSpec("origin0", up_bps=ORIGIN)])
+    sim.add_pod_caches(up_bps=100e6)
+    sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
+                  up_bps=PEER_UP, down_bps=PEER_DOWN)
+    return sim
+
+
+def test_pod_caches_collapse_cross_pod_traffic():
+    mi = sizes_only_mi(size=256e6, piece=8e6)
+    sim = cache_sim(mi)
+    res = sim.run()
+    assert len(res.completion_time) == 12
+    assert res.pod_cache_uploaded > 0
+    # the spine carried ~1 copy per pod (cache fills), not 6: the mesh is
+    # pod-local, so cross-pod bytes ARE the fill traffic
+    fills = sum(c.fill_downloaded for c in sim.caches.values())
+    assert res.cross_pod_bytes == pytest.approx(fills, rel=1e-6)
+    assert res.cross_pod_bytes < 1.3 * 2 * mi.length
+    # and the ledger decomposes exactly by tier
+    tiers = res.stats.tier_uploaded
+    assert tiers["pod_cache"] == pytest.approx(
+        sum(c.http_uploaded for c in sim.caches.values())
+    )
+    assert sum(tiers.values()) == pytest.approx(res.stats.total_uploaded)
+
+
+def test_pod_cache_payload_end_to_end_verified():
+    mi, store = payload_mi(n_bytes=1 << 20, piece=1 << 15)
+    sim = cache_sim(mi, seed=5, origin_payload=store)
+    sim.caches[0].corrupt_once.add(2)     # cache serves one bad range too
+    res = sim.run()
+    assert len(res.completion_time) == 12
+    for pid, agent in sim.agents.items():
+        if pid != "origin0" and agent.store is not None:
+            assert all(mi.verify_piece(i, d) for i, d in agent.store.items())
+    # caches verified their fills before serving them
+    for cache in sim.caches.values():
+        assert all(mi.verify_piece(i, d) for i, d in cache.store.items())
+
+
+def test_cache_fill_exclusions_heal_with_single_mirror():
+    """Regression: a corrupt-once range from the *only* mirror must not
+    permanently exclude it from the cache's fill path (which starved the
+    whole pod's HTTP pipeline) — exclusions heal and the fill retries."""
+    mi, store = payload_mi(n_bytes=1 << 20, piece=1 << 15)
+    sim = cache_sim(mi, seed=8, origin_payload=store)
+    sim.origin_set.origins["origin0"].corrupt_once.update({0, 5})
+    res = sim.run()
+    assert len(res.completion_time) == 12       # nobody starved
+    for cache in sim.caches.values():
+        assert all(mi.verify_piece(i, d) for i, d in cache.store.items())
+    # the bad fill bytes were paid for and ledgered
+    assert sum(c.fill_wasted for c in sim.caches.values()) > 0
+
+
+def test_pod_cache_misuse_raises():
+    mi = sizes_only_mi()
+    # byte domain: every peer must have a pod assignment
+    with pytest.raises(ValueError, match="pod for every peer"):
+        LocalSwarm(
+            mi, {}, ["a", "b"], webseed=OriginPolicy(),
+            pod_of={"a": 0}, pod_caches=True,
+        )
+    # time domain: caches must attach before peers arrive
+    topo = ClusterTopology(num_pods=2, hosts_per_pod=2, spine_bps=1e9)
+    sim = WebSeedSwarmSim(mi, OriginPolicy(), topology=topo)
+    sim.add_web_origin()
+    sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
+                  up_bps=PEER_UP, down_bps=PEER_DOWN)
+    with pytest.raises(ValueError, match="before peers"):
+        sim.add_pod_caches(up_bps=1e9)
+
+
+def test_tracker_mirror_list_ranks_pod_cache_first():
+    mi = sizes_only_mi()
+    sim = cache_sim(mi)
+    sim.run()
+    lst = sim.tracker.mirror_list(mi, "pod0/host0")
+    assert lst[0] == "cache/pod0"
+    assert "cache/pod1" not in lst        # never routed through a far cache
+    assert lst[-1] == "origin0"
+    # a mirror (no pod) only ever sees the root tier
+    assert sim.tracker.mirror_list(mi, "cache/pod0") == ["origin0"]
+
+
+# ----------------------------------------------------------- ledger under churn
+
+
+def test_tier_ledger_consistent_under_churn():
+    """Peers leaving mid-download must not double-count HTTP vs peer origin
+    egress, and the per-tier decomposition must stay exhaustive: tier sums
+    equal total uploads, and uploads equal delivered + wasted bytes."""
+    mi = sizes_only_mi(size=256e6, piece=8e6)
+    pol = OriginPolicy(swarm_fraction=0.5, origin_up_bps=ORIGIN,
+                       serve_peer_protocol=True)
+    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=9)
+    sim.add_web_origin()
+    sim.add_peers(flash_crowd(10), up_bps=PEER_UP, down_bps=PEER_DOWN,
+                  seed_linger=0.0)       # churn: seeds vanish at completion
+    sim.net.schedule(10.0, lambda now: sim.fail_peer("peer0003"))
+    sim.net.schedule(20.0, lambda now: sim.fail_peer("peer0007"))
+    res = sim.run()
+    stats = res.stats
+    # no double counting: the split reconstructs from independent ledgers
+    assert stats.origin_http_uploaded == pytest.approx(
+        sim.web_origin.http_uploaded
+    )
+    assert stats.origin_peer_uploaded == pytest.approx(
+        res.ledgers["origin"].uploaded
+    )
+    assert stats.origin_uploaded == pytest.approx(
+        stats.origin_http_uploaded + stats.origin_peer_uploaded
+    )
+    # per-tier totals are exhaustive and disjoint
+    assert set(stats.tier_uploaded) <= {"origin", "peer", "pod_cache"}
+    assert sum(stats.tier_uploaded.values()) == pytest.approx(
+        stats.total_uploaded
+    )
+    assert stats.tier_uploaded["peer"] == pytest.approx(
+        sum(l.uploaded for pid, l in res.ledgers.items() if pid != "origin")
+    )
+    # every uploaded byte was either delivered or wasted (verified ledger)
+    wasted = sum(l.wasted for l in res.ledgers.values())
+    assert stats.total_uploaded == pytest.approx(
+        stats.total_downloaded + wasted
+    )
+    # the survivors all finished despite the churn
+    assert len(res.completion_time) >= 8
+
+
+# ----------------------------------------------------------- data pipeline
+
+
+def test_loader_cold_start_from_nearest_cache():
+    corpus = ShardedCorpus(CorpusSpec(
+        num_shards=4, tokens_per_shard=512, vocab_size=128,
+        piece_length=1 << 12,
+    ))
+    loader = loader_from_corpus(
+        corpus, num_hosts=4, seed=0,
+        webseed=OriginPolicy(swarm_fraction=1.0),
+        mirrors=[MirrorSpec("m0", up_bps=20e6), MirrorSpec("m1", up_bps=20e6)],
+        pods=2,
+    )
+    report = loader.ingest(mode="full_replica")
+    n = corpus.manifest.num_pieces
+    assert all(c == n for c in report.per_host_pieces.values())
+    L = corpus.manifest.length
+    # fills: ~1 copy per pod crossed the spine, nothing else did
+    assert report.origin_http_uploaded == pytest.approx(2 * L)
+    assert report.cross_pod_bytes == pytest.approx(report.origin_http_uploaded)
+    assert report.pod_cache_uploaded > 0
+    tokens = loader.host_shard_tokens(0, 0)
+    assert tokens.size > 0
+    with pytest.raises(ValueError, match="pods"):
+        loader_from_corpus(
+            corpus, num_hosts=4,
+            webseed=OriginPolicy(swarm_fraction=1.0), pods=0,
+        )
+
+
+def test_arrival_helpers_exported_from_core():
+    from repro.core import flash_crowd, poisson_arrivals, staggered_arrivals
+    assert flash_crowd(2) == [("peer0000", 0.0), ("peer0001", 0.0)]
+    assert staggered_arrivals(2, interval=3.0)[1] == ("peer0001", 3.0)
+    times = poisson_arrivals(3, 1.0, np.random.default_rng(0))
+    assert len(times) == 3 and times[0][1] > 0

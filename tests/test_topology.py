@@ -1,0 +1,66 @@
+"""ClusterTopology name parsing + locality edge cases."""
+
+import pytest
+
+from repro.core import ClusterTopology, HostAddr
+
+
+@pytest.fixture
+def topo():
+    return ClusterTopology(num_pods=3, hosts_per_pod=4)
+
+
+# ------------------------------------------------------------------- addr_of
+
+
+def test_addr_of_valid_names(topo):
+    assert topo.addr_of("pod0/host0") == HostAddr(0, 0)
+    assert topo.addr_of("pod2/host13") == HostAddr(2, 13)
+    # round trip through the canonical name
+    for h in topo.hosts():
+        assert topo.addr_of(h.name) == h
+
+
+def test_addr_of_non_pod_names_are_not_hosts(topo):
+    # origins, mirrors, and caches are simply outside the pod namespace
+    for name in ("origin", "origin0", "mirror-eu", "cache/pod1", "peer0007"):
+        assert topo.addr_of(name) is None
+
+
+@pytest.mark.parametrize("name", [
+    "pod3",           # missing host segment (the classic caller typo)
+    "pod3/host",      # missing host index
+    "pod/host1",      # missing pod index
+    "podX/host1",     # non-integer pod
+    "pod3/hostY",     # non-integer host
+    "pod3/cache",     # host segment is not host<int>
+    "pod3/host1/x",   # trailing junk
+])
+def test_addr_of_malformed_pod_names_raise(topo, name):
+    with pytest.raises(ValueError, match="malformed host name"):
+        topo.addr_of(name)
+
+
+# ------------------------------------------------------------------- same_pod
+
+
+def test_same_pod(topo):
+    assert topo.same_pod("pod1/host0", "pod1/host3")
+    assert not topo.same_pod("pod1/host0", "pod2/host0")
+    # non-host endpoints are never "same pod"
+    assert not topo.same_pod("origin", "pod1/host0")
+    assert not topo.same_pod("pod1/host0", "cache/pod1")
+    assert not topo.same_pod("origin", "origin")
+
+
+def test_same_pod_propagates_typo_errors(topo):
+    with pytest.raises(ValueError):
+        topo.same_pod("pod1", "pod1/host0")
+
+
+def test_rank_peers_still_tolerates_non_host_ids(topo):
+    ranked = topo.rank_peers(
+        "pod0/host0",
+        ["origin", "pod1/host0", "pod0/host1"],
+    )
+    assert ranked == ["pod0/host1", "pod1/host0", "origin"]
