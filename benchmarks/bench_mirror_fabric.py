@@ -12,6 +12,11 @@ Three claims, swept over flash-crowd / staggered / Poisson arrivals:
   (c) **failure**: a mirror dying mid-sweep (range flows and cache fills
       in flight) costs zero corrupt pieces — clients and caches re-fetch,
       verified, from the next ranked mirror.
+  (d) **capacity planning**: a flash crowd swept over pod-cache admission
+      caps and uplinks — when a cache saturates (admission rejections),
+      ``OriginPolicy.cache_spillover`` sends clients to the ranked mirror
+      tier and the spilled bytes are ledgered as origin-tier egress; a
+      roomy cache spills nothing.
 """
 
 from __future__ import annotations
@@ -152,6 +157,69 @@ def sweep_caches(report):
         )
 
 
+# --------------------------------------------------------------- (d) capacity
+
+
+def sweep_cache_capacity(report):
+    """Flash-crowd sweep over pod-cache uplink/admission caps: saturation
+    (admission rejections) spills clients over to the mirror tier, and the
+    spillover is ledgered — origin-tier egress beyond the fill bytes."""
+    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="cachecap")
+    n = PODS * HOSTS_PER_POD
+    arrivals = flash_crowd(n)
+    spilled, rejects = {}, {}
+    for label, cap, up in (
+        ("roomy", 64, 100e6), ("tight", 2, 50e6), ("choked", 1, 25e6)
+    ):
+        topo = ClusterTopology(
+            num_pods=PODS, hosts_per_pod=HOSTS_PER_POD, host_up_bps=PEER_UP,
+            host_down_bps=PEER_DOWN, spine_bps=float("inf"),
+        )
+        t0 = time.perf_counter()
+        sim = WebSeedSwarmSim(
+            mi,
+            OriginPolicy(swarm_fraction=1.0, origin_up_bps=TOTAL_ORIGIN,
+                         cache_spillover=True, backoff=1.0),
+            SwarmConfig(max_neighbors=HOSTS_PER_POD - 1),
+            seed=13, topology=topo,
+        )
+        sim.add_mirrors(mirror_specs(2))
+        sim.add_pod_caches(up_bps=up, max_concurrent=cap)
+        hosts = [(h.name, t) for h, (_, t) in zip(topo.hosts(), arrivals)]
+        sim.add_peers(hosts, up_bps=PEER_UP, down_bps=PEER_DOWN)
+        res = sim.run()
+        wall = (time.perf_counter() - t0) * 1e6
+        fills = sum(
+            c.fill_downloaded + c.fill_wasted for c in sim.caches.values()
+        )
+        origin_egress = res.stats.tier_uploaded.get("origin", 0.0)
+        spilled[label] = origin_egress - fills
+        rejects[label] = sum(c.rejected for c in sim.caches.values())
+        report(
+            f"mirror_fabric/cache_capacity/{label}", wall,
+            f"cap={cap} up={up / 1e6:.0f}MBps rejected={rejects[label]} "
+            f"spill={spilled[label] / mi.length:.2f}copies "
+            f"cache={res.pod_cache_uploaded / mi.length:.2f}copies "
+            f"t={res.mean_completion_time():.0f}s",
+        )
+        assert len(res.completion_time) == n, (label,)
+        # the ledger stays exhaustive with spillover in play
+        assert abs(
+            sum(res.stats.tier_uploaded.values()) - res.stats.total_uploaded
+        ) < 1e-6 * max(res.stats.total_uploaded, 1.0), label
+    # (d): saturation produces ledgered spillover; a roomy cache never does
+    assert rejects["roomy"] == 0 and spilled["roomy"] <= 1e-6, spilled
+    for label in ("tight", "choked"):
+        assert rejects[label] > 0, (label, rejects)
+        assert spilled[label] > 0, (label, spilled)
+    report(
+        "mirror_fabric/cache_capacity/spillover", 0.0,
+        f"spill/copies roomy={spilled['roomy'] / mi.length:.2f} "
+        f"tight={spilled['tight'] / mi.length:.2f} "
+        f"choked={spilled['choked'] / mi.length:.2f}",
+    )
+
+
 # --------------------------------------------------------------- (c) failure
 
 
@@ -201,6 +269,7 @@ def sweep_failure(report):
 def main(report):
     sweep_mirrors(report)
     sweep_caches(report)
+    sweep_cache_capacity(report)
     sweep_failure(report)
 
 

@@ -1,17 +1,25 @@
 """Benchmark harness — one function per paper table/figure + beyond-paper.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...] [--json DIR]
+    PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...] \
+        [--json DIR] [--compare DIR [--tolerance REL]]
 
 ``--json DIR`` additionally persists each bench's rows as
 ``BENCH_<name>.json`` under DIR (repo-root convention), so the perf
 trajectory accumulates across PRs.
+
+``--compare DIR`` diffs the freshly produced rows against the committed
+baselines ``DIR/BENCH_<name>.json`` (numbers extracted from each row's
+``derived`` string, compared at ``--tolerance`` relative error;
+``us_per_call`` wall times are ignored) and exits non-zero on any metric
+regression — the CI gate that keeps the simulation goldens pinned.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
 from pathlib import Path
@@ -29,6 +37,7 @@ from benchmarks import (  # noqa: E402
     bench_roofline,
     bench_swarm_scaling,
     bench_table1_costs,
+    bench_tail_latency,
     bench_webseed_hybrid,
 )
 
@@ -40,6 +49,7 @@ SUITES = {
     "scaling": bench_swarm_scaling,
     "webseed": bench_webseed_hybrid,
     "mirror_fabric": bench_mirror_fabric,
+    "tail_latency": bench_tail_latency,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -48,6 +58,49 @@ SUITES = {
     "fabric_hc": bench_fabric_hillclimb,
 }
 DEFAULT_SUITES = [k for k in SUITES if k != "fabric_hc"]
+
+# every float in a derived string, sign/decimal/exponent included
+_NUM_RE = re.compile(r"-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")
+
+
+def compare_rows(
+    baseline: dict, fresh_rows: list[dict], tolerance: float
+) -> list[str]:
+    """Regressions of ``fresh_rows`` against a committed baseline file.
+
+    Every baseline row must exist in the fresh run, carry the same number
+    of metrics in its ``derived`` string, and match each metric within
+    ``tolerance`` relative error (new rows in the fresh run are fine —
+    they become baselines when committed). Returns human-readable problem
+    strings, empty when the run is clean.
+    """
+    problems: list[str] = []
+    if baseline.get("failed"):
+        return problems  # a failed baseline pins nothing
+    fresh = {r["name"]: r["derived"] for r in fresh_rows}
+    for row in baseline.get("rows", []):
+        name, want = row["name"], row["derived"]
+        if name not in fresh:
+            problems.append(f"{name}: row missing from fresh run")
+            continue
+        got = fresh[name]
+        want_nums = [float(x) for x in _NUM_RE.findall(want)]
+        got_nums = [float(x) for x in _NUM_RE.findall(got)]
+        if len(want_nums) != len(got_nums):
+            problems.append(
+                f"{name}: metric count changed ({want!r} -> {got!r})"
+            )
+            continue
+        for w, g in zip(want_nums, got_nums):
+            scale = max(abs(w), abs(g), 1e-12)
+            if abs(w - g) / scale > tolerance:
+                problems.append(
+                    f"{name}: {w} -> {g} "
+                    f"(rel err {abs(w - g) / scale:.3f} > {tolerance}) "
+                    f"in {got!r}"
+                )
+                break
+    return problems
 
 
 def bench_file_name(key: str) -> str:
@@ -77,11 +130,17 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="persist each bench's rows as DIR/BENCH_<name>.json")
+    ap.add_argument("--compare", default=None, metavar="DIR",
+                    help="diff fresh rows against DIR/BENCH_<name>.json "
+                         "baselines; exit non-zero on metric regressions")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative tolerance for --compare (default 0.05)")
     args = ap.parse_args()
     chosen = DEFAULT_SUITES if not args.only else args.only.split(",")
     json_dir = Path(args.json) if args.json else None
     if json_dir is not None:
         json_dir.mkdir(parents=True, exist_ok=True)
+    compare_dir = Path(args.compare) if args.compare else None
 
     rows: list[str] = []
 
@@ -96,6 +155,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     measured_ud = None
     failures = []
+    regressions: list[str] = []
     for key in chosen:
         mod = SUITES[key]
         suite_rows: list[dict] = []
@@ -116,8 +176,25 @@ def main() -> None:
             write_json(
                 json_dir, key, suite_rows, time.perf_counter() - t0, error
             )
+        if compare_dir is not None and error is None:
+            base_path = compare_dir / bench_file_name(key)
+            if base_path.exists():
+                found = compare_rows(
+                    json.loads(base_path.read_text()), suite_rows,
+                    args.tolerance,
+                )
+                for p in found:
+                    print(f"REGRESSION[{key}] {p}", flush=True)
+                regressions.extend(f"{key}: {p}" for p in found)
+            else:
+                print(f"compare: no baseline {base_path}, skipped", flush=True)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
+    if regressions:
+        raise SystemExit(
+            f"{len(regressions)} metric regression(s) vs baselines in "
+            f"{compare_dir}"
+        )
 
 
 if __name__ == "__main__":

@@ -35,6 +35,15 @@ from .http_baseline import HttpResult, analytic_http, simulate_http
 from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
 from .netsim import FluidNetwork, Flow, Link, Node
 from .peer import Ledger, PeerAgent
+from .scheduler import (
+    ClientView,
+    OriginPolicy,
+    Request,
+    TransferScheduler,
+    percentiles,
+    plan_peer_requests,
+    swarm_routed_mask,
+)
 from .swarm import (
     LocalSwarm,
     PeerSpec,
@@ -49,12 +58,10 @@ from .topology import ClusterTopology, HostAddr
 from .tracker import PeerRecord, SwarmStats, Tracker
 from .webseed import (
     MirrorSpec,
-    OriginPolicy,
     OriginSet,
     PodCacheOrigin,
     WebSeedOrigin,
     WebSeedSwarmSim,
-    swarm_routed_mask,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -9,6 +9,12 @@ fast hosts with fast hosts, which shortens the swarm tail. We keep the
 classic algorithm (top-k reciprocation + rotating optimistic unchoke)
 because its emergent schedule is exactly what produces the paper's
 "benefits grow with more users" behaviour.
+
+Choke state is an *input* to the unified transfer scheduler
+(:mod:`repro.core.scheduler`): the engines bake each rechoke round's
+verdict into ``NeighborState.unchokes_me``, which is what
+``plan_peer_requests`` filters eligible sources on — the choker decides
+*who may download from me*, the scheduler decides *what they fetch next*.
 """
 
 from __future__ import annotations
@@ -85,6 +91,12 @@ class Choker:
         )
         self.unchoked = regular | optimistic
         return self.unchoked
+
+    def allows(self, peer_id: str) -> bool:
+        """Is ``peer_id`` currently unchoked by this peer? (The per-request
+        view the engines mirror into ``NeighborState.unchokes_me`` for the
+        scheduler.)"""
+        return peer_id in self.unchoked
 
 
 class RateWindow:

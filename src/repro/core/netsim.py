@@ -80,6 +80,13 @@ class Flow:
     def done(self) -> bool:
         return self.remaining <= 1e-9 and not self.aborted
 
+    @property
+    def transferred(self) -> float:
+        """Bytes that actually crossed the wire so far. For a flow aborted
+        mid-range (failover, hedge cancellation) this is the partial payload
+        the scheduler ledgers as cancelled."""
+        return float(self.size) - max(float(self.remaining), 0.0)
+
 
 class FluidNetwork:
     """Event-driven fluid network. See module docstring."""

@@ -200,62 +200,10 @@ class PeerAgent:
     def plan_requests(self) -> list[tuple[str, int]]:
         """Greedy fill of the request pipeline from unchoked neighbors.
 
-        Returns (source_id, piece) pairs to launch, honoring the pipeline
-        depth, the per-neighbor outstanding cap, and the selection policy.
-        Endgame: once every missing piece is in flight, duplicate the
-        stragglers to other holders (first-finisher wins, the duplicate is
-        wasted bytes — that's the cost of tail-latency insurance).
+        The planning logic lives in the unified scheduler core
+        (:func:`repro.core.scheduler.plan_peer_requests`) so both engines
+        share one implementation; this remains the per-agent entry point.
         """
-        from . import piece_selection as ps
+        from .scheduler import plan_peer_requests
 
-        plans: list[tuple[str, int]] = []
-        if self.is_seed or self.departed:
-            return plans
-        mine = self._peer_path_bitfield()
-        budget = self.pipeline - len(self.in_flight) - len(plans)
-        sources = [
-            (pid, nb)
-            for pid, nb in sorted(self.neighbors.items())
-            if nb.unchokes_me and nb.outstanding < self.per_peer_requests
-        ]
-        self.rng.shuffle(sources)
-        in_flight = set(self.in_flight)
-        for pid, nb in sources:
-            if budget <= 0:
-                break
-            while budget > 0 and nb.outstanding < self.per_peer_requests:
-                piece = ps.select_piece(
-                    self.policy,
-                    mine,
-                    nb.bitfield,
-                    self.availability,
-                    in_flight,
-                    self.rng,
-                    pieces_held=self.bitfield.count(),
-                )
-                if piece is None:
-                    break
-                plans.append((pid, piece))
-                in_flight.add(piece)
-                nb.outstanding += 1
-                budget -= 1
-
-        # endgame: all missing pieces already in flight -> insure the tail
-        if budget > 0 and ps.in_endgame(mine, in_flight):
-            for pid, nb in sources:
-                if budget <= 0:
-                    break
-                cand = ps.endgame_candidates(
-                    mine, nb.bitfield,
-                    self.endgame_extra | {p for s, p in plans if s == pid},
-                )
-                for piece in cand.tolist():
-                    if budget <= 0 or nb.outstanding >= self.per_peer_requests:
-                        break
-                    if self.in_flight.get(piece) == pid:
-                        continue  # never duplicate to the same source
-                    plans.append((pid, int(piece)))
-                    self.endgame_extra.add(int(piece))
-                    nb.outstanding += 1
-                    budget -= 1
-        return plans
+        return plan_peer_requests(self)

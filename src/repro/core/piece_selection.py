@@ -32,6 +32,22 @@ def candidate_pieces(
     return np.flatnonzero(cand)
 
 
+def rarest_among(
+    cand: np.ndarray, availability: np.ndarray, rng: np.random.Generator
+) -> int:
+    """Min-availability filter over ``cand`` plus one uniform tie-break draw.
+
+    The shared tie-break kernel for every rarest-first path (peer planning,
+    masked partitioned-ingest selection): deterministic given the candidate
+    set, the availability vector, and the RNG state — equal-availability
+    ties consume exactly one ``rng.integers`` draw, so two schedulers with
+    the same seed make identical sequences of choices.
+    """
+    avail = availability[cand]
+    best = cand[avail == avail.min()]
+    return int(best[rng.integers(len(best))])
+
+
 def rarest_first(
     mine: Bitfield,
     remote: Bitfield,
@@ -48,9 +64,7 @@ def rarest_first(
     cand = candidate_pieces(mine, remote, in_flight)
     if cand.size == 0:
         return None
-    avail = availability[cand]
-    best = cand[avail == avail.min()]
-    return int(best[rng.integers(len(best))])
+    return rarest_among(cand, availability, rng)
 
 
 def sequential(

@@ -24,6 +24,7 @@ from .choking import ChokerConfig
 from .metainfo import MetaInfo
 from .netsim import FluidNetwork, Flow
 from .peer import Ledger, PeerAgent
+from .scheduler import ClientView, TransferScheduler, percentiles
 from .topology import ClusterTopology
 from .tracker import SwarmStats, Tracker
 
@@ -65,6 +66,10 @@ class SwarmResult:
     origin_http_uploaded: float = 0.0       # web-seed HTTP share of the above
     pod_cache_uploaded: float = 0.0         # cache-tier serves into the pods
     cross_pod_bytes: float = 0.0            # spine traffic (0 without a spine)
+    hedge_cancelled_bytes: float = 0.0      # losing hedge duplicates, cancelled
+    fetch_latencies: list[float] = dataclasses.field(default_factory=list)
+    # ^ verified per-piece fetch latencies (request start -> accept), event
+    #   order, across all clients and both serving paths
 
     @property
     def origin_peer_uploaded(self) -> float:
@@ -83,8 +88,38 @@ class SwarmResult:
         return float(np.mean(list(self.completion_time.values())))
 
     def mean_download_speed(self, size_bytes: float) -> float:
+        if not self.completion_time:
+            raise ValueError(
+                "mean_download_speed: no client has completed a download"
+            )
         t = self.mean_completion_time()
         return size_bytes / t if t > 0 else float("inf")
+
+    def completion_percentiles(
+        self, ps: Sequence[float] = (50, 95, 99)
+    ) -> dict[str, float]:
+        """Per-client tail latency: {"p50", "p95", "p99"} of completion
+        times (seconds from arrival). Raises when no client completed."""
+        if not self.completion_time:
+            raise ValueError(
+                "completion_percentiles: no client has completed a download"
+            )
+        return percentiles(self.completion_time.values(), ps)
+
+    def fetch_latency_histogram(
+        self, bins: int = 16
+    ) -> tuple[list[int], list[float]]:
+        """Per-piece fetch-latency histogram (counts, bin edges in seconds).
+
+        Raises when no verified fetch was recorded."""
+        if not self.fetch_latencies:
+            raise ValueError(
+                "fetch_latency_histogram: no verified fetches recorded"
+            )
+        counts, edges = np.histogram(
+            np.asarray(self.fetch_latencies, dtype=np.float64), bins=bins
+        )
+        return counts.tolist(), edges.tolist()
 
 
 # --------------------------------------------------------------------------- arrivals
@@ -133,6 +168,11 @@ class SwarmSim:
             same_pod_frac=same_pod_frac,
         )
         self.tracker.register(metainfo)
+        # the unified decision core; WebSeedSwarmSim swaps in one that also
+        # carries the HTTP policy + origin set
+        self.scheduler = TransferScheduler(
+            metainfo, None, endgame=self.cfg.endgame
+        )
         self.agents: dict[str, PeerAgent] = {}
         self._origin_payload = origin_payload
         self._tick_scheduled = False
@@ -259,7 +299,7 @@ class SwarmSim:
                 and not nb.is_seed
                 and nb.interested_in(agent.peer_id)
             }
-            unchoked = agent.rechoke(interested, now)
+            agent.rechoke(interested, now)
             for pid in agent.neighbors:
                 other = self.agents.get(pid)
                 if other is None or other.departed:
@@ -267,29 +307,29 @@ class SwarmSim:
                 state = other.neighbors.get(agent.peer_id)
                 if state is None:
                     continue
-                newly = pid in unchoked and not state.unchokes_me
-                state.unchokes_me = pid in unchoked
+                # mirror the choker's verdict into the scheduler's view
+                allowed = agent.choker.allows(pid)
+                newly = allowed and not state.unchokes_me
+                state.unchokes_me = allowed
                 if newly:
                     self._launch(other, now)
 
     def _launch(self, agent: PeerAgent, now: float) -> None:
         if agent.departed or agent.node is None:
             return
-        if not self.cfg.endgame:
-            agent.endgame_extra.clear()
-        for src_id, piece in agent.plan_requests():
-            src = self.agents[src_id]
+        for req in self.scheduler.next_actions(ClientView(agent=agent)):
+            src = self.agents[req.src]
             if src.node is None or src.node.failed:
                 continue
-            agent.in_flight.setdefault(piece, src_id)
+            agent.in_flight.setdefault(req.piece, req.src)
             self.net.start_flow(
                 src.node,
                 agent.node,
-                self.metainfo.piece_size(piece),
-                tag=(src_id, agent.peer_id, piece),
+                self.metainfo.piece_size(req.piece),
+                tag=(req.src, agent.peer_id, req.piece),
                 on_complete=self._on_piece_done,
                 on_abort=self._on_piece_abort,
-                links=self._links_between(src_id, agent.peer_id),
+                links=self._links_between(req.src, agent.peer_id),
             )
 
     def _on_piece_done(self, flow: Flow, now: float) -> None:
@@ -305,6 +345,10 @@ class SwarmSim:
         if corrupt and data is not None:
             data = bytes([data[0] ^ 0xFF]) + data[1:]  # verification will catch it
         accepted = dst.accept_piece(piece, src_id, data, now, corrupt=corrupt)
+        self.scheduler.on_piece_done(
+            dst_id, piece, accepted=accepted,
+            latency=(now - flow.start_time) if accepted else None,
+        )
         if src is not None and not src.departed:
             src.record_served(piece, dst_id, now)
             self._announce_counters(src, now)
@@ -351,6 +395,7 @@ class SwarmSim:
         dst = self.agents.get(dst_id)
         if dst is None or dst.departed:
             return
+        self.scheduler.on_piece_failed(dst_id, piece)
         if dst.in_flight.get(piece) == src_id:
             del dst.in_flight[piece]
         nb = dst.neighbors.get(src_id)
@@ -412,6 +457,8 @@ class SwarmSim:
             cross_pod_bytes=(
                 self.spine.bytes_through if self.spine is not None else 0.0
             ),
+            hedge_cancelled_bytes=stats.hedge_cancelled_bytes,
+            fetch_latencies=list(self.scheduler.fetch_latencies),
         )
 
 
@@ -482,7 +529,7 @@ class LocalSwarm:
         )
         self.webseed = webseed
         self.origin_set = None
-        self._swarm_routed: Optional[np.ndarray] = None
+        self.completed_round: dict[str, int] = {}
         self.pod_of = dict(pod_of) if pod_of else {}
         self.pod_caches: dict[int, "PodCacheOrigin"] = {}
         self.cross_pod_bytes = 0.0
@@ -503,9 +550,7 @@ class LocalSwarm:
                     f"{unmapped[:3]}"
                 )
         if webseed is not None:
-            from .webseed import (
-                MirrorSpec, OriginSet, PodCacheOrigin, swarm_routed_mask,
-            )
+            from .webseed import MirrorSpec, OriginSet, PodCacheOrigin
 
             specs = list(mirrors) if mirrors else [
                 MirrorSpec("origin", up_bps=webseed.origin_up_bps)
@@ -513,9 +558,6 @@ class LocalSwarm:
             self.origin_set = OriginSet(metainfo, policy=webseed)
             for spec in specs:
                 self.origin_set.add_mirror(spec, store=self.origin.store)
-            self._swarm_routed = swarm_routed_mask(
-                metainfo, webseed.swarm_fraction
-            )
             if pod_caches:
                 for pod in sorted(set(self.pod_of.values())):
                     cache = PodCacheOrigin(metainfo, pod, policy=webseed)
@@ -523,6 +565,11 @@ class LocalSwarm:
                     # register the cache in the pod map so fills from the
                     # (unmapped) mirror tier ledger as cross-pod traffic
                     self.pod_of[cache.name] = pod
+        # the same unified decision core the time-domain engines drive
+        self.scheduler = TransferScheduler(
+            metainfo, webseed, select_policy=policy,
+            origin_set=self.origin_set,
+        )
         self.peers: dict[str, PeerAgent] = {}
         for i, pid in enumerate(peer_ids):
             self.peers[pid] = PeerAgent(
@@ -573,24 +620,6 @@ class LocalSwarm:
     def complete(self) -> bool:
         return all(self._peer_done(pid) for pid in self.peers)
 
-    def _select(self, me: PeerAgent, nb_bitfield, mask) -> Optional[int]:
-        from . import piece_selection as ps
-
-        if mask is None:
-            return ps.select_piece(
-                self.policy, me.bitfield, nb_bitfield,
-                me.availability, set(), me.rng,
-                pieces_held=me.bitfield.count(),
-            )
-        cand = np.flatnonzero(nb_bitfield.as_array() & ~me.bitfield.as_array() & mask)
-        if cand.size == 0:
-            return None
-        if self.policy == "sequential":
-            return int(cand[0])
-        avail = me.availability[cand]
-        best = cand[avail == avail.min()]
-        return int(best[me.rng.integers(len(best))])
-
     def _local_availability(self, me: PeerAgent) -> np.ndarray:
         """Per-piece holder count within ``me``'s pod — the availability the
         HTTP fallback keys off when a pod-cache tier isolates peer traffic
@@ -623,35 +652,14 @@ class LocalSwarm:
         if pod is not None and pod in self._pod_have:
             self._pod_have[pod][piece] += 1
 
-    def _select_http(self, me: PeerAgent, mask) -> Optional[int]:
-        """Next piece to range-request from the origin fabric: HTTP-routed
-        pieces, plus — under swarm-first fallback — pieces no connected peer
-        holds (availability 0; *same-pod* availability once a cache tier
-        isolates pods). Lowest index first; the immediate Have propagation
-        inside a round self-staggers concurrent clients."""
-        cand = ~me.bitfield.as_array()
-        if mask is not None:
-            cand = cand & mask
-        if self.webseed.mode != "http_first":
-            eligible = ~self._swarm_routed
-            if self.webseed.http_fallback:
-                avail = (
-                    self._local_availability(me) if self.pod_caches
-                    else me.availability
-                )
-                eligible = eligible | (avail == 0)
-            cand = cand & eligible
-        idx = np.flatnonzero(cand)
-        return int(idx[0]) if idx.size else None
-
-    def _ranked_origins(self, pid: str) -> list:
-        """HTTP endpoints for this peer: its pod cache when one exists
-        (nearest-cache cold start), else the ranked live mirror tier."""
-        if self.pod_caches:
-            cache = self.pod_caches.get(self.pod_of.get(pid))
-            if cache is not None:
-                return [cache]
-        return [self.origin_set.origins[n] for n in self.origin_set.ranked()]
+    def _commit_gain(self, pid: str, piece: int) -> None:
+        """Post-accept bookkeeping shared by every intake path (peer trade,
+        range read, hedged range read): refresh the pod-local availability
+        counters and broadcast the Have."""
+        self._note_gain(pid, piece)
+        for wid, w in {**self.peers, "origin": self.origin}.items():
+            if wid != pid:
+                w.on_have(pid, piece)
 
     def _fill_cache(self, cache, piece: int) -> bool:
         """Read-through fill: verified fetch from the first good mirror,
@@ -686,32 +694,84 @@ class LocalSwarm:
         range failed verification (re-fetched on a later attempt)."""
         from .webseed import PodCacheOrigin
 
-        piece = self._select_http(me, self.needed.get(pid))
-        if piece is None:
+        cache = (
+            self.pod_caches.get(self.pod_of.get(pid))
+            if self.pod_caches else None
+        )
+        req = next(
+            (a for a in self.scheduler.next_actions(ClientView(
+                agent=me, peer_path=False, http_slots=1, cache=cache,
+                mask=self.needed.get(pid),
+                availability=(
+                    self._local_availability(me) if self.pod_caches else None
+                ),
+                round_based=True,
+            )) if a.kind == "http"),
+            None,
+        )
+        if req is None:
             return None
+        piece = req.piece
         size = self.metainfo.piece_size(piece)
-        for origin in self._ranked_origins(pid):
+        for origin in req.targets:
             if isinstance(origin, PodCacheOrigin):
                 if not self._fill_cache(origin, piece):
                     continue
                 data = origin.read_piece(piece)   # cache egress + fault hook
                 # cache -> client stays inside the pod: no cross-pod bytes
             else:
+                # hedging is mirror-tier insurance: it arms exactly when a
+                # mirror ends up serving (no cache, or the cache path was
+                # skipped/spilled) — the same non-cache branch the
+                # time-domain engine hedges in, with the pair chosen by the
+                # shared scheduler logic
+                hedge = self.scheduler.plan_hedge(
+                    me, piece, origin, req.targets,
+                    mask=self.needed.get(pid),
+                )
+                if hedge is not None:
+                    return self._http_fetch_hedged(
+                        me, pid, piece, [origin, hedge]
+                    )
                 data = origin.read_piece(piece)
                 self.origin.record_served(piece, pid, float(self.rounds))
                 self._count_cross_pod(origin.name, pid, size)
             if me.accept_piece(
                 piece, f"{origin.name}::http", data, float(self.rounds)
             ):
-                self._note_gain(pid, piece)
-                for wid, w in {**self.peers, "origin": self.origin}.items():
-                    if wid != pid:
-                        w.on_have(pid, piece)
+                self._commit_gain(pid, piece)
                 return piece
             if me.last_reject_verify:
                 continue  # bad bytes from this endpoint: fail over to the next
             return None
         return None
+
+    def _http_fetch_hedged(
+        self, me: PeerAgent, pid: str, piece: int, pair: list
+    ) -> Optional[int]:
+        """Tail-latency insurance, round-based: range-read the tail piece
+        from the top *two* ranked mirrors in the same round. Both reads are
+        accounted as mirror egress; the first verified arrival is committed
+        (exactly once — the loser is never offered to the ledger) and the
+        loser's bytes are ledgered as ``hedge_cancelled``."""
+        size = self.metainfo.piece_size(piece)
+        reads = []
+        for origin in pair:
+            data = origin.read_piece(piece)
+            self._count_cross_pod(origin.name, pid, size)
+            reads.append((origin, data))
+        got = None
+        for origin, data in reads:
+            if got is not None:
+                origin.hedge_cancelled += size
+                continue
+            self.origin.record_served(piece, pid, float(self.rounds))
+            if me.accept_piece(
+                piece, f"{origin.name}::http", data, float(self.rounds)
+            ):
+                got = origin
+                self._commit_gain(pid, piece)
+        return piece if got is not None else None
 
     def step(self) -> int:
         """One round; returns number of pieces moved."""
@@ -729,11 +789,9 @@ class LocalSwarm:
                 continue
             mask = self.needed.get(pid)
             peer_mask = mask
-            if self._swarm_routed is not None:
-                peer_mask = (
-                    self._swarm_routed if mask is None
-                    else mask & self._swarm_routed
-                )
+            routed = self.scheduler.swarm_routed
+            if routed is not None:
+                peer_mask = routed if mask is None else mask & routed
             for _ in range(me.pipeline):
                 sources = [
                     (oid, nb) for oid, nb in sorted(me.neighbors.items())
@@ -758,7 +816,9 @@ class LocalSwarm:
                     )
                 got = None
                 for oid, nb in sources:
-                    piece = self._select(me, nb.bitfield, peer_mask)
+                    piece = self.scheduler.select_peer_piece(
+                        me, nb.bitfield, peer_mask
+                    )
                     if piece is None:
                         continue
                     src = self._agent(oid)
@@ -767,16 +827,13 @@ class LocalSwarm:
                         continue
                     if me.accept_piece(piece, oid, data, float(self.rounds)):
                         src.record_served(piece, pid, float(self.rounds))
-                        self._note_gain(pid, piece)
                         self._count_cross_pod(
                             oid, pid, self.metainfo.piece_size(piece)
                         )
                         budget[oid] -= 1
                         moved += 1
                         got = piece
-                        for wid, w in {**self.peers, "origin": self.origin}.items():
-                            if wid != pid:
-                                w.on_have(pid, piece)
+                        self._commit_gain(pid, piece)
                     break
                 if got is None and self.web_origin is not None and http_budget > 0:
                     got = self._http_fetch(me, pid)
@@ -785,7 +842,28 @@ class LocalSwarm:
                         moved += 1
                 if got is None:
                     break
+        self._note_completions()
         return moved
+
+    def _note_completions(self) -> None:
+        """Record the round each peer first satisfied its needed set — the
+        byte-domain completion time the ingest reports summarize into
+        tail-latency percentiles."""
+        for pid in self.peers:
+            if pid not in self.completed_round and self._peer_done(pid):
+                self.completed_round[pid] = self.rounds
+
+    def completion_percentiles(
+        self, ps: Sequence[float] = (50, 95, 99)
+    ) -> dict[str, float]:
+        """Per-peer tail latency in rounds: {"p50", "p95", "p99"} of the
+        round each peer completed in. Raises when no peer completed."""
+        self._note_completions()
+        if not self.completed_round:
+            raise ValueError(
+                "completion_percentiles: no peer has completed"
+            )
+        return percentiles(self.completed_round.values(), ps)
 
     # a zero-move round is not necessarily a stall: the verified-failover
     # paths legitimately burn a round or two excluding bad endpoints and
@@ -817,6 +895,15 @@ class LocalSwarm:
     def pod_cache_uploaded(self) -> float:
         """Bytes the pod-cache tier served into its pods over HTTP ranges."""
         return sum(c.http_uploaded for c in self.pod_caches.values())
+
+    @property
+    def hedge_cancelled_bytes(self) -> float:
+        """Bytes spent on losing hedge duplicates across the origin tier."""
+        if self.origin_set is None:
+            return 0.0
+        return sum(
+            o.hedge_cancelled for o in self.origin_set.origins.values()
+        ) + sum(c.hedge_cancelled for c in self.pod_caches.values())
 
     @property
     def ud_ratio(self) -> float:

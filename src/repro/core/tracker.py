@@ -16,6 +16,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .metainfo import MetaInfo
+from .scheduler import percentiles
 from .topology import ClusterTopology
 
 
@@ -32,6 +33,7 @@ class PeerRecord:
     is_web_seed: bool = False    # exposes an HTTP byte-range endpoint
     peer_protocol: bool = True   # False => never handed out in peer lists
     http_uploaded: float = 0.0   # payload bytes served via HTTP range requests
+    hedge_cancelled: float = 0.0  # bytes this endpoint spent on losing hedges
     tier: str = "peer"           # egress tier: "origin" | "pod_cache" | "peer"
     pod: Optional[int] = None    # locality of a web-seed endpoint (pod caches)
 
@@ -52,6 +54,16 @@ class SwarmStats:
     # Egress decomposed by serving tier ("origin" / "pod_cache" / "peer").
     # The tiers are exhaustive and disjoint: their sum equals total_uploaded.
     tier_uploaded: dict[str, float] = dataclasses.field(default_factory=dict)
+    # Bytes spent on losing hedge duplicates — the tail-latency insurance
+    # premium. Mid-range-cancelled partials appear ONLY here (never in
+    # uploaded/wasted); a photo-finish loser that fully arrived is counted
+    # here AND as wasted, so this overlaps wasted rather than partitioning it.
+    hedge_cancelled_bytes: float = 0.0
+    # Per-client completion-time percentiles (seconds from arrival); empty
+    # until a client completes. See ``repro.core.scheduler.percentiles``.
+    completion_percentiles: dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def origin_peer_uploaded(self) -> float:
@@ -105,6 +117,7 @@ class Tracker:
         is_web_seed: bool = False,
         peer_protocol: bool = True,
         http_uploaded: Optional[float] = None,
+        hedge_cancelled: Optional[float] = None,
         want_peers: int = 40,
         tier: Optional[str] = None,
         pod: Optional[int] = None,
@@ -122,6 +135,8 @@ class Tracker:
         rec.downloaded = float(downloaded)
         if http_uploaded is not None:
             rec.http_uploaded = float(http_uploaded)
+        if hedge_cancelled is not None:
+            rec.hedge_cancelled = float(hedge_cancelled)
         if event == "completed":
             rec.complete = True
             rec.completed_at = now
@@ -180,6 +195,11 @@ class Tracker:
         tiers: dict[str, float] = {}
         for r in swarm.values():
             tiers[r.tier] = tiers.get(r.tier, 0.0) + r.egress
+        completion_times = [
+            r.completed_at - r.arrived_at
+            for r in swarm.values()
+            if r.complete and not r.is_origin and r.tier != "pod_cache"
+        ]
         return SwarmStats(
             seeders=sum(1 for r in live if r.complete or r.is_origin),
             leechers=sum(1 for r in live if not (r.complete or r.is_origin)),
@@ -193,6 +213,10 @@ class Tracker:
                 r.http_uploaded for r in swarm.values() if r.is_origin
             ),
             tier_uploaded=tiers,
+            hedge_cancelled_bytes=sum(
+                r.hedge_cancelled for r in swarm.values()
+            ),
+            completion_percentiles=percentiles(completion_times),
         )
 
     def records(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:

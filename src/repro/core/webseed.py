@@ -11,9 +11,16 @@ stay plain byte-range HTTP servers; leechers decide, *per piece request*,
 whether to hit an origin or a peer, and every HTTP-delivered piece
 immediately becomes swarm inventory (a Have broadcast).
 
+Routing, piece choice, ranked-origin choice, retry/backoff, verified
+failover, and hedging decisions are owned by the engine-independent
+:class:`repro.core.scheduler.TransferScheduler`; this module provides the
+origin fabric (mirrors, caches, admission, egress ledgers) and the
+time-domain engine that drives the scheduler over the fluid netsim.
+
 Components:
 
-* :class:`OriginPolicy` — all the routing/serving knobs (below).
+* :class:`OriginPolicy` — all the routing/serving knobs (below; defined in
+  :mod:`repro.core.scheduler`, re-exported here).
 * :class:`MirrorSpec` — one mirror's deployment description (uplink
   bandwidth, latency penalty, static weight, admission cap).
 * :class:`WebSeedOrigin` — the HTTP front-end over a piece store: verified
@@ -82,6 +89,18 @@ or a bare origin — with zero seeded peers.
                         admission count (then served bytes); ``"ewma"`` by
                         an EWMA of observed per-flow throughput (seeded
                         optimistically from ``MirrorSpec.up_bps``).
+``hedge``               Client-side mirror hedging (default **off**): in the
+                        download tail, duplicate each range request to the
+                        next ranked mirror; first verified arrival wins, the
+                        loser is cancelled and its bytes ledgered as
+                        ``SwarmStats.hedge_cancelled_bytes``.
+``hedge_tail_fraction`` Fraction of the piece space counting as the tail
+                        (hedging arms once the missing set is this small).
+``hedge_delay``         Seconds after the primary request before the hedge
+                        duplicate is issued (0 = immediately).
+``cache_spillover``     Saturated pod caches (admission rejections) spill
+                        clients over to the ranked mirror tier instead of
+                        backing off (default off).
 ======================  =====================================================
 
 Mirror/cache deployment knobs (:class:`MirrorSpec` / ``add_pod_caches``):
@@ -109,37 +128,16 @@ import numpy as np
 from .metainfo import MetaInfo
 from .netsim import Flow
 from .peer import PeerAgent
+from .scheduler import (  # noqa: F401  (re-exported: historical home)
+    ClientView,
+    OriginPolicy,
+    TransferScheduler,
+    swarm_routed_mask,
+)
 from .swarm import SwarmConfig, SwarmSim
 from .topology import ClusterTopology
 
-# --------------------------------------------------------------------------- policy
-
-
-@dataclasses.dataclass
-class OriginPolicy:
-    """Origin serving + request re-routing policy (see module docstring)."""
-
-    mode: str = "swarm_first"          # "swarm_first" | "http_first"
-    swarm_fraction: float = 1.0
-    origin_up_bps: float = 50e6
-    max_concurrent: int = 256
-    backoff: float = 2.0
-    http_pipeline: int = 1
-    http_fallback: bool = True
-    serve_peer_protocol: bool = False
-    selection: str = "static"          # "static" | "least_loaded" | "ewma"
-
-    def __post_init__(self) -> None:
-        if self.mode not in ("swarm_first", "http_first"):
-            raise ValueError(f"unknown origin policy mode {self.mode!r}")
-        if not 0.0 <= self.swarm_fraction <= 1.0:
-            raise ValueError("swarm_fraction must be in [0, 1]")
-        if self.max_concurrent < 1:
-            raise ValueError("max_concurrent must be >= 1")
-        if self.http_pipeline < 1:
-            raise ValueError("http_pipeline must be >= 1")
-        if self.selection not in ("static", "least_loaded", "ewma"):
-            raise ValueError(f"unknown mirror selection {self.selection!r}")
+# --------------------------------------------------------------------------- specs
 
 
 @dataclasses.dataclass
@@ -152,26 +150,6 @@ class MirrorSpec:
     latency_s: float = 0.0
     weight: float = 1.0
     max_concurrent: Optional[int] = None   # None => policy.max_concurrent
-
-
-def swarm_routed_mask(metainfo: MetaInfo, fraction: float) -> np.ndarray:
-    """Per-piece route assignment: True => swarm path, False => HTTP path.
-
-    Derived from each piece's content hash, so the assignment is stable
-    across runs and *nested* across fractions (the swarm set at f1 is a
-    subset of the set at f2 > f1) — which makes origin egress monotone in
-    ``fraction`` by construction.
-    """
-    n = metainfo.num_pieces
-    if fraction >= 1.0:
-        return np.ones(n, dtype=bool)
-    if fraction <= 0.0:
-        return np.zeros(n, dtype=bool)
-    scores = np.fromiter(
-        (int.from_bytes(h[:8], "big") / 2.0**64 for h in metainfo.piece_hashes),
-        dtype=np.float64, count=n,
-    )
-    return scores < fraction
 
 
 # --------------------------------------------------------------------------- origin
@@ -200,6 +178,7 @@ class WebSeedOrigin:
         self.name = name
         # ledger / telemetry
         self.http_uploaded = 0.0
+        self.hedge_cancelled = 0.0   # bytes spent on losing hedge duplicates
         self.requests = 0
         self.rejected = 0
         self.active = 0
@@ -430,17 +409,18 @@ class WebSeedSwarmSim(SwarmSim):
             origin_payload=origin_payload, same_pod_frac=same_pod_frac,
         )
         self.policy = policy or OriginPolicy()
-        self._swarm_routed = swarm_routed_mask(
-            metainfo, self.policy.swarm_fraction
-        )
         self.origin_set = OriginSet(metainfo, policy=self.policy)
+        # replace the peer-only scheduler the base engine built: HTTP piece
+        # choice, ranked-origin choice, failover/backoff bookkeeping, and
+        # hedging all live in the unified core
+        self.scheduler = TransferScheduler(
+            metainfo, self.policy, endgame=self.cfg.endgame,
+            origin_set=self.origin_set,
+        )
         self.caches: dict[int, PodCacheOrigin] = {}
         self._cache_by_name: dict[str, PodCacheOrigin] = {}
         self.origin_id: Optional[str] = None      # primary mirror (back-compat)
         self._http_outstanding: dict[str, int] = {}
-        self._retry_scheduled: set[str] = set()
-        # (client, piece) -> mirrors that served bytes failing verification
-        self._http_bad: dict[tuple[str, int], set[str]] = {}
 
     @property
     def web_origin(self) -> Optional[WebSeedOrigin]:
@@ -451,7 +431,7 @@ class WebSeedSwarmSim(SwarmSim):
     def _new_agent(self, peer_id: str, is_origin: bool) -> PeerAgent:
         agent = super()._new_agent(peer_id, is_origin)
         if not is_origin:
-            agent.want_mask = self._swarm_routed
+            agent.want_mask = self.scheduler.swarm_routed
         return agent
 
     def add_web_origin(
@@ -483,12 +463,17 @@ class WebSeedSwarmSim(SwarmSim):
         return [self.add_mirror(s) for s in specs]
 
     def add_pod_caches(
-        self, up_bps: float, down_bps: Optional[float] = None
+        self,
+        up_bps: float,
+        down_bps: Optional[float] = None,
+        max_concurrent: Optional[int] = None,
     ) -> list[PodCacheOrigin]:
         """Attach one cache proxy per pod of the topology: a netsim node
         that serves its pod over leaf links and fills from the mirror tier
         over the spine. Must run before peers arrive — the cache tier
-        shapes the tracker peer lists pod-local."""
+        shapes the tracker peer lists pod-local. ``max_concurrent``
+        overrides the policy's admission cap per cache (capacity-planning
+        sweeps pair it with ``OriginPolicy.cache_spillover``)."""
         if self.topology is None:
             raise ValueError("pod caches require a ClusterTopology")
         if self._pending_arrivals > 0 or any(
@@ -500,10 +485,15 @@ class WebSeedSwarmSim(SwarmSim):
                 "and would trade around the cache tier"
             )
         out = []
+        cache_policy = self.policy
+        if max_concurrent is not None:
+            cache_policy = dataclasses.replace(
+                self.policy, max_concurrent=max_concurrent
+            )
         for pod in range(self.topology.num_pods):
             if pod in self.caches:
                 raise ValueError(f"pod {pod} already has a cache")
-            cache = PodCacheOrigin(self.metainfo, pod, policy=self.policy)
+            cache = PodCacheOrigin(self.metainfo, pod, policy=cache_policy)
             cache.node = self.net.add_node(
                 cache.name, up_bps, down_bps if down_bps is not None else up_bps
             )
@@ -525,7 +515,7 @@ class WebSeedSwarmSim(SwarmSim):
         mirror; the tracker stops handing it out."""
         if name not in self.origin_set.origins:
             raise KeyError(f"unknown mirror {name!r}")
-        self.origin_set.fail(name)
+        self.scheduler.on_origin_dead(name)
         agent = self.agents.get(name)
         if agent is not None and not agent.departed:
             self._depart(agent, self.net.now)
@@ -545,72 +535,68 @@ class WebSeedSwarmSim(SwarmSim):
         if len(self.origin_set):
             self._launch_http(agent, now)
 
-    def _next_http_piece(self, agent: PeerAgent) -> Optional[int]:
-        """Pick the next piece this client should range-request, or None.
+    def _origin_live(self, name: str) -> bool:
+        """Scheduler liveness predicate: the mirror's netsim node is up."""
+        magent = self.agents.get(name)
+        return (
+            magent is not None and magent.node is not None
+            and not magent.node.failed
+        )
 
-        In swarm_first mode, HTTP-routed pieces stream in index order and
-        swarm-routed pieces are only HTTP-eligible as *fallback* — when no
-        connected peer holds them — picked at random so a cold flash crowd
-        pulls disjoint ranges it can then trade. In http_first mode every
-        missing piece is eligible and the pick is random: identical clients
-        requesting identical sequential ranges would hold identical piece
-        prefixes forever, and nothing could ever be re-routed to a peer.
-        """
-        pol = self.policy
-        missing = ~agent.bitfield.as_array()
-        cand = missing.copy() if pol.mode == "http_first" \
-            else missing & ~self._swarm_routed
-        fallback = np.zeros_like(cand)
-        if pol.mode == "swarm_first" and pol.http_fallback:
-            fallback = missing & self._swarm_routed & (agent.availability == 0)
-        eligible = cand | fallback
-        if agent.in_flight:
-            idx = np.fromiter(agent.in_flight, dtype=np.int64)
-            eligible[idx] = False
-            cand[idx] = False
-            fallback[idx] = False
-        if not eligible.any():
+    def _live_cache(self, agent: PeerAgent) -> Optional["PodCacheOrigin"]:
+        """This client's pod cache, when one exists and its node is up."""
+        if not self.caches:
             return None
-        routed = np.flatnonzero(cand)
-        if routed.size:
-            if pol.mode == "http_first":
-                return int(routed[agent.rng.integers(routed.size)])
-            return int(routed[0])
-        cold = np.flatnonzero(fallback)
-        return int(cold[agent.rng.integers(cold.size)])
+        cache = self.caches.get(self._pod(agent.peer_id))
+        if cache is not None and not cache.node.failed:
+            return cache
+        return None
 
-    def _http_targets(self, agent: PeerAgent) -> list[WebSeedOrigin]:
-        """Ranked serving endpoints for this client: its pod cache when one
-        exists (the cache IS the origin from the pod's point of view), else
-        the tracker's mirror list re-ranked by the client-side policy."""
-        if self.caches:
-            cache = self.caches.get(self._pod(agent.peer_id))
-            if cache is not None and not cache.node.failed:
-                return [cache]
-        names = self.tracker.mirror_list(self.metainfo, agent.peer_id)
-        out = []
-        for name in self.origin_set.ranked(names):
-            magent = self.agents.get(name)
-            if magent is not None and magent.node is not None \
-                    and not magent.node.failed:
-                out.append(self.origin_set.origins[name])
-        return out
+    def _client_view(self, agent: PeerAgent, slots: int) -> ClientView:
+        cache = self._live_cache(agent)
+        # a live cache with spillover off is the pod's only endpoint: skip
+        # the tracker discovery scan its ranking would never consult
+        names = None
+        if cache is None or self.policy.cache_spillover:
+            names = self.tracker.mirror_list(self.metainfo, agent.peer_id)
+        return ClientView(
+            agent=agent,
+            peer_path=False,
+            http_slots=slots,
+            cache=cache,
+            mirror_names=names,
+            origin_live=self._origin_live,
+        )
 
     def _launch_http(self, agent: PeerAgent, now: float) -> None:
+        """Drive the scheduler's HTTP decisions: one request per iteration
+        (admission outcomes feed back into the next piece choice), until
+        the pipeline is full, nothing is eligible, or everything rejected
+        (back off and retry)."""
         pol = self.policy
         if (
             agent.departed or agent.node is None or agent.is_seed
             or agent.peer_id in self.origin_set.origins
         ):
             return
-        targets = self._http_targets(agent)
-        if not targets:
-            return
-        while self._http_outstanding.get(agent.peer_id, 0) < pol.http_pipeline:
-            piece = self._next_http_piece(agent)
-            if piece is None:
+        view = None
+        while True:
+            slots = pol.http_pipeline - self._http_outstanding.get(
+                agent.peer_id, 0
+            )
+            if slots <= 0:
                 return
-            started = self._request_http(agent, piece, targets, now)
+            if view is None:   # discovery/ranking computed once per launch
+                view = self._client_view(agent, slots)
+            view.http_slots = slots
+            req = next(
+                (a for a in self.scheduler.next_actions(view)
+                 if a.kind == "http"),
+                None,
+            )
+            if req is None:
+                return
+            started = self._request_http(agent, req.piece, req.targets, now)
             if started is None:      # permanently unservable right now
                 return
             if not started:          # everyone rejected: back off and retry
@@ -629,7 +615,7 @@ class WebSeedSwarmSim(SwarmSim):
         Returns True when a flow (or queued cache fill) is under way, False
         when every endpoint rejected the request (caller backs off), None
         when nothing can serve it at all (dead mirror tier — no retry)."""
-        bad = self._http_bad.get((agent.peer_id, piece), set())
+        bad = self.scheduler.bad_origins(agent.peer_id, piece)
         servable = False
         for origin in targets:
             if origin.name in bad:
@@ -660,12 +646,15 @@ class WebSeedSwarmSim(SwarmSim):
                 self._http_outstanding.get(agent.peer_id, 0) + 1
             )
             self._start_http_flow(origin, agent, piece, now)
+            hedge = self.scheduler.plan_hedge(agent, piece, origin, targets)
+            if hedge is not None:
+                self._schedule_hedge(agent, piece, origin, hedge, now)
             return True
         if not servable and targets and bad:
             # every live endpoint previously served bad bytes for this
             # piece: heal the exclusions (corrupt-once origins recover) and
             # retry after the backoff instead of giving up
-            self._http_bad.pop((agent.peer_id, piece), None)
+            self.scheduler.heal_bad(agent.peer_id, piece)
             return False
         return False if servable else None
 
@@ -683,10 +672,22 @@ class WebSeedSwarmSim(SwarmSim):
         return self.agents.get(dst_id)
 
     def _start_http_flow(
-        self, origin: WebSeedOrigin, agent: PeerAgent, piece: int, now: float
+        self,
+        origin: WebSeedOrigin,
+        agent: PeerAgent,
+        piece: int,
+        now: float,
+        expect: Optional[str] = None,
     ) -> None:
-        """Start the serving flow origin->client (honoring mirror latency)."""
+        """Start the serving flow origin->client (honoring mirror latency).
+
+        ``expect`` is the in-flight tag that must still be current for the
+        flow to be worth starting — the flow's own tag by default; a hedge
+        duplicate instead expects its *primary's* tag (the hedge rides
+        alongside, it never owns the in-flight slot)."""
         src_tag = f"{origin.name}::http"
+        if expect is None:
+            expect = src_tag
         cache = self._cache_by_name.get(origin.name)
         src_node = cache.node if cache is not None \
             else self.agents[origin.name].node
@@ -697,10 +698,11 @@ class WebSeedSwarmSim(SwarmSim):
             dst = self.agents.get(agent.peer_id)
             if (
                 dst is None or dst.departed or src_node.failed
-                or dst.in_flight.get(piece) != src_tag
+                or dst.in_flight.get(piece) != expect
             ):
                 # endpoint vanished during the latency window
                 dst = self._finish_http_request(origin, agent.peer_id, piece)
+                self.scheduler.hedge_loser(agent.peer_id, piece, origin.name)
                 if dst is not None and dst.in_flight.get(piece) == src_tag:
                     del dst.in_flight[piece]
                 if dst is not None and not dst.departed:
@@ -720,6 +722,46 @@ class WebSeedSwarmSim(SwarmSim):
             self.net.schedule(now + latency, _start)
         else:
             _start(now)
+
+    # ------------------------------------------------------------- hedging
+    def _schedule_hedge(
+        self,
+        agent: PeerAgent,
+        piece: int,
+        primary: WebSeedOrigin,
+        hedge: WebSeedOrigin,
+        now: float,
+    ) -> None:
+        """Arm the tail-latency insurance: after ``hedge_delay``, duplicate
+        the range request to the next ranked mirror. The duplicate takes an
+        admission slot and a pipeline slot like any request (insurance is
+        not free) but never retries — if the hedge mirror rejects or died,
+        the primary simply runs unhedged."""
+        primary_tag = f"{primary.name}::http"
+
+        def _fire(t: float) -> None:
+            dst = self.agents.get(agent.peer_id)
+            if (
+                dst is None or dst.departed or dst.bitfield.has(piece)
+                or dst.in_flight.get(piece) != primary_tag
+            ):
+                return                       # primary already resolved
+            if not self._origin_live(hedge.name):
+                return
+            if not hedge.try_admit():
+                return                       # hedge mirror busy: no insurance
+            self.scheduler.register_hedge(
+                dst.peer_id, piece, primary.name, hedge.name
+            )
+            self._http_outstanding[dst.peer_id] = (
+                self._http_outstanding.get(dst.peer_id, 0) + 1
+            )
+            self._start_http_flow(hedge, dst, piece, t, expect=primary_tag)
+
+        if self.policy.hedge_delay > 0:
+            self.net.schedule(now + self.policy.hedge_delay, _fire)
+        else:
+            _fire(now)
 
     # ------------------------------------------------------------- cache fills
     def _schedule_fill_backoff(
@@ -746,13 +788,14 @@ class WebSeedSwarmSim(SwarmSim):
         rejections — and the corner where every live mirror has served bad
         bytes for this piece (exclusions heal: corrupt-once recovers) — are
         retried after the policy backoff."""
-        names = self.tracker.mirror_list(self.metainfo, cache.name)
-        live = []
-        for name in self.origin_set.ranked(names):
-            magent = self.agents.get(name)
-            if magent is not None and magent.node is not None \
-                    and not magent.node.failed:
-                live.append((name, magent))
+        live = [
+            (o.name, self.agents[o.name])
+            for o in self.scheduler.ranked_origins(
+                cache.name,
+                names=self.tracker.mirror_list(self.metainfo, cache.name),
+                live=self._origin_live,
+            )
+        ]
         if not live:
             return False
         excluded = cache.bad_mirrors.get(piece, set())
@@ -866,13 +909,11 @@ class WebSeedSwarmSim(SwarmSim):
 
     # ------------------------------------------------------------- retries
     def _schedule_retry(self, agent: PeerAgent, now: float) -> None:
-        pid = agent.peer_id
-        if pid in self._retry_scheduled:
+        if not self.scheduler.schedule_backoff(agent.peer_id):
             return
-        self._retry_scheduled.add(pid)
 
         def _retry(t: float, a: PeerAgent = agent) -> None:
-            self._retry_scheduled.discard(a.peer_id)
+            self.scheduler.backoff_fired(a.peer_id)
             if not a.departed:
                 self._launch_http(a, t)
 
@@ -885,11 +926,13 @@ class WebSeedSwarmSim(SwarmSim):
 
     def _announce_mirror(self, name: str, now: float) -> None:
         magent = self.agents.get(name)
+        mirror = self.origin_set.origins[name]
         self.tracker.announce(
             self.metainfo, name,
             uploaded=magent.ledger.uploaded if magent else 0.0,
             downloaded=0.0, event="update", now=now, is_origin=True,
-            http_uploaded=self.origin_set.origins[name].http_uploaded,
+            http_uploaded=mirror.http_uploaded,
+            hedge_cancelled=mirror.hedge_cancelled,
         )
 
     def _announce_cache(self, cache: PodCacheOrigin, now: float) -> None:
@@ -906,6 +949,7 @@ class WebSeedSwarmSim(SwarmSim):
         origin = self._origin_by_name(name)
         cache = self._cache_by_name.get(name)
         dst = self._finish_http_request(origin, dst_id, piece)
+        was_hedged = self.scheduler.hedge_loser(dst_id, piece, name)
         if dst is None or dst.departed:
             return
         data = origin.read_piece(piece)
@@ -917,18 +961,47 @@ class WebSeedSwarmSim(SwarmSim):
         )
         if corrupt and data is not None:
             data = bytes([data[0] ^ 0xFF]) + data[1:]
+        owner = dst.in_flight.get(piece)
         accepted = dst.accept_piece(piece, src_tag, data, now, corrupt=corrupt)
+        if (
+            was_hedged and not accepted
+            and not dst.last_reject_verify and dst.bitfield.has(piece)
+        ):
+            # hedge pair photo-finish: both mirrors delivered in the same
+            # tick — the full duplicate is the hedge's cancelled cost
+            origin.hedge_cancelled += float(flow.size)
+        if (
+            not accepted and owner not in (None, src_tag)
+            and piece not in dst.in_flight
+            and any(
+                f.tag == (owner, dst_id, piece)
+                for f in self.net.flows.values()
+            )
+        ):
+            # a rejected duplicate (e.g. a corrupt hedge arriving first)
+            # must not steal the slot from the still-running owner flow —
+            # otherwise the relaunch below re-requests the piece a third
+            # time while the owner is mid-range
+            dst.in_flight[piece] = owner
         if cache is not None:
             self._announce_cache(cache, now)
         else:
             self._announce_mirror(name, now)
+        # failover bookkeeping: clear exclusions on success, steer the
+        # re-fetch (relaunch below) away from endpoints serving bad bytes.
+        # the recorded fetch latency includes the mirror's per-request
+        # latency penalty (the flow itself only starts after that window)
+        spec = self.origin_set.specs.get(name)
+        req_latency = (now - flow.start_time) + (
+            spec.latency_s if spec is not None else 0.0
+        )
+        self.scheduler.on_piece_done(
+            dst_id, piece, name, accepted=accepted,
+            verify_failed=(not corrupt and dst.last_reject_verify),
+            latency=req_latency if accepted else None,
+        )
         if accepted:
-            self._http_bad.pop((dst_id, piece), None)
             self._on_piece_accepted(dst, piece, now)
-        elif not corrupt and dst.last_reject_verify:
-            # this endpoint served bad bytes: steer the re-fetch (relaunch
-            # below) to the next ranked mirror
-            self._http_bad.setdefault((dst_id, piece), set()).add(name)
         # rejected (corrupt range) pieces are back in the missing set; the
         # relaunch below re-fetches them
         self._launch(dst, now)
@@ -936,11 +1009,30 @@ class WebSeedSwarmSim(SwarmSim):
     def _on_http_abort(self, flow: Flow, now: float) -> None:
         src_tag, dst_id, piece = flow.tag
         name = src_tag.rsplit("::", 1)[0]
-        dst = self._finish_http_request(
-            self._origin_by_name(name), dst_id, piece
-        )
+        origin = self._origin_by_name(name)
+        dst = self._finish_http_request(origin, dst_id, piece)
+        was_hedged = self.scheduler.hedge_loser(dst_id, piece, name)
         if dst is None or dst.departed:
             return
+        if was_hedged and dst.bitfield.has(piece) and flow.transferred > 0:
+            # the losing half of a hedge pair, cancelled mid-range: its
+            # partial bytes are the insurance premium, ledgered separately
+            origin.hedge_cancelled += flow.transferred
+            if self._cache_by_name.get(name) is None:
+                self._announce_mirror(name, now)
+        self.scheduler.on_piece_failed(dst_id, piece)
         if dst.in_flight.get(piece) == src_tag:
             del dst.in_flight[piece]
+            if was_hedged and not dst.bitfield.has(piece):
+                # the aborted flow owned the slot but its hedge partner is
+                # still mid-range: hand the slot over instead of letting
+                # the relaunch fetch the piece a third time (which would
+                # also consume the pair's name-keyed entry and leak the
+                # eventual loser's bytes out of every ledger)
+                partner = self.scheduler.hedge_partner(dst_id, piece)
+                if partner is not None and any(
+                    f.tag == (f"{partner}::http", dst_id, piece)
+                    for f in self.net.flows.values()
+                ):
+                    dst.in_flight[piece] = f"{partner}::http"
         self._launch(dst, now)

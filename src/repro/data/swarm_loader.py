@@ -42,6 +42,12 @@ class IngestReport:
     origin_http_uploaded: float = 0.0   # web-seed range-read share of egress
     pod_cache_uploaded: float = 0.0     # bytes served out of pod-local caches
     cross_pod_bytes: float = 0.0        # transfers whose endpoints straddle pods
+    hedge_cancelled_bytes: float = 0.0  # losing hedge duplicates (tail insurance)
+    # per-host tail latency in rounds: {"p50", "p95", "p99"} of the round
+    # each host satisfied its needed set ({} if nothing completed)
+    completion_percentiles: dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def ud_ratio(self) -> float:
@@ -177,6 +183,10 @@ class SwarmShardLoader:
             origin_http_uploaded=swarm.http_uploaded,
             pod_cache_uploaded=swarm.pod_cache_uploaded,
             cross_pod_bytes=swarm.cross_pod_bytes,
+            hedge_cancelled_bytes=swarm.hedge_cancelled_bytes,
+            completion_percentiles=(
+                swarm.completion_percentiles() if swarm.peers else {}
+            ),
         )
         return self.last_report
 
@@ -266,6 +276,10 @@ class SwarmShardLoader:
             origin_http_uploaded=swarm.http_uploaded,
             pod_cache_uploaded=swarm.pod_cache_uploaded,
             cross_pod_bytes=swarm.cross_pod_bytes,
+            hedge_cancelled_bytes=swarm.hedge_cancelled_bytes,
+            completion_percentiles=(
+                swarm.completion_percentiles() if swarm.peers else {}
+            ),
         )
 
 

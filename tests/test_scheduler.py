@@ -1,0 +1,441 @@
+"""Unified TransferScheduler: interface, tie-break determinism, endgame and
+hedge duplicate-suppression, same-tick hedge cancellation, spillover, and
+the tail-latency helpers."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Bitfield,
+    ClientView,
+    LocalSwarm,
+    MetaInfo,
+    MirrorSpec,
+    OriginPolicy,
+    SwarmConfig,
+    TransferScheduler,
+    WebSeedSwarmSim,
+    flash_crowd,
+    percentiles,
+)
+from repro.core import piece_selection as ps
+
+ORIGIN, PEER_UP, PEER_DOWN = 20e6, 25e6, 50e6
+
+
+def sizes_only_mi(size=128e6, piece=8e6, name="sched"):
+    return MetaInfo.from_sizes_only(int(size), int(piece), name=name)
+
+
+def payload_mi(n_bytes=1 << 19, piece=1 << 15, seed=0, name="pay"):
+    payload = np.random.default_rng(seed).integers(
+        0, 256, size=n_bytes, dtype=np.uint8
+    ).tobytes()
+    mi = MetaInfo.from_bytes(payload, piece, name=name)
+    return mi, dict(mi.split_pieces(payload))
+
+
+def hedged_sim(mi, mirrors, n_peers=1, tail=1.0, delay=0.0, seed=3, **pol_kw):
+    pol = OriginPolicy(
+        swarm_fraction=0.0, origin_up_bps=ORIGIN, hedge=True,
+        hedge_tail_fraction=tail, hedge_delay=delay, **pol_kw,
+    )
+    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=seed)
+    sim.add_mirrors(mirrors)
+    sim.add_peers(flash_crowd(n_peers), up_bps=PEER_UP, down_bps=PEER_DOWN)
+    return sim
+
+
+# ------------------------------------------------------- tie-break determinism
+
+
+def test_rarest_tie_break_deterministic_under_equal_availability():
+    """Equal availability across all candidates: the choice is a single
+    uniform draw, so two schedulers with the same seed produce identical
+    selection sequences — and the full candidate set gets explored."""
+    n = 16
+    avail = np.full(n, 3, dtype=np.int64)   # perfect tie everywhere
+    cand = np.arange(n)
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    seq_a = [ps.rarest_among(cand, avail, rng_a) for _ in range(20)]
+    seq_b = [ps.rarest_among(cand, avail, rng_b) for _ in range(20)]
+    assert seq_a == seq_b                      # same seed => same choices
+    assert len(set(seq_a)) > 1                 # ...but genuinely randomized
+    # the same determinism through the scheduler's byte-domain entry point
+    mi = sizes_only_mi()
+
+    class _Me:
+        pass
+
+    def make_me(seed):
+        me = _Me()
+        me.bitfield = Bitfield(mi.num_pieces)
+        me.availability = np.full(mi.num_pieces, 2, dtype=np.int64)
+        me.rng = np.random.default_rng(seed)
+        return me
+
+    remote = Bitfield.full(mi.num_pieces)
+    sched = TransferScheduler(mi, None)
+    picks = [
+        [sched.select_peer_piece(make_me(s), remote, None) for _ in range(5)]
+        for s in (1, 1, 2)
+    ]
+    assert picks[0] == picks[1]
+    assert picks[0] != picks[2]
+
+
+def test_identical_seeds_reproduce_identical_results():
+    mi = sizes_only_mi()
+    runs = []
+    for _ in range(2):
+        sim = hedged_sim(
+            mi,
+            [MirrorSpec("m0", up_bps=ORIGIN, weight=2.0),
+             MirrorSpec("m1", up_bps=ORIGIN / 2, weight=1.0)],
+            n_peers=4, tail=0.5,
+        )
+        runs.append(sim.run())
+    assert runs[0] == runs[1]   # full dataclass equality incl. latencies
+
+
+# ------------------------------------------------- duplicate suppression
+
+
+def test_endgame_and_hedge_never_double_count_pieces():
+    """Endgame duplicates (peer path) and hedge duplicates (HTTP path)
+    may both be in flight; every client still ledgers each piece exactly
+    once — duplicates land in wasted/hedge-cancelled, never downloaded."""
+    mi, store = payload_mi()
+    pol = OriginPolicy(
+        swarm_fraction=0.5, origin_up_bps=ORIGIN, serve_peer_protocol=True,
+        hedge=True, hedge_tail_fraction=0.5,
+    )
+    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=5,
+                          origin_payload=store)
+    sim.add_mirrors([MirrorSpec("m0", up_bps=ORIGIN, weight=2.0),
+                     MirrorSpec("m1", up_bps=ORIGIN, weight=1.0)])
+    sim.add_peers(flash_crowd(5), up_bps=PEER_UP, down_bps=PEER_DOWN)
+    res = sim.run()
+    assert len(res.completion_time) == 5
+    for pid, ledger in res.ledgers.items():
+        if pid in sim.origin_set.origins:
+            continue
+        assert ledger.downloaded == mi.length          # exactly one copy
+        assert ledger.pieces_received == mi.num_pieces
+    # the egress ledger stays exhaustive: every completed serve was either
+    # delivered or wasted (aborted hedge losers never count as egress)
+    wasted = sum(l.wasted for l in res.ledgers.values())
+    assert res.stats.total_uploaded == pytest.approx(
+        res.stats.total_downloaded + wasted
+    )
+    # nothing hedged lingers once the swarm drains
+    assert not sim.scheduler.hedges
+
+
+def test_hedge_cancel_mid_flight_ledgers_partial_bytes():
+    """The losing hedge flow is cancelled mid-range; its partial bytes are
+    the insurance premium, ledgered separately from delivered/wasted."""
+    mi = sizes_only_mi(size=64e6, piece=8e6)
+    # slow preferred mirror, fast hedge target: the hedge always wins
+    sim = hedged_sim(
+        mi,
+        [MirrorSpec("slow", up_bps=1e6, weight=2.0),
+         MirrorSpec("fast", up_bps=50e6, weight=1.0)],
+    )
+    res = sim.run()
+    assert len(res.completion_time) == 1
+    slow = sim.origin_set.origins["slow"]
+    fast = sim.origin_set.origins["fast"]
+    assert slow.hedge_cancelled > 0                  # cancelled partials
+    assert fast.hedge_cancelled == 0.0               # the winner pays nothing
+    assert res.hedge_cancelled_bytes == pytest.approx(slow.hedge_cancelled)
+    assert res.stats.hedge_cancelled_bytes == pytest.approx(
+        slow.hedge_cancelled
+    )
+    # cancelled partials never inflate the delivered/wasted ledgers
+    assert res.ledgers["peer0000"].downloaded == mi.length
+    assert res.ledgers["peer0000"].wasted == 0.0
+
+
+def test_hedge_cancel_when_both_mirrors_finish_same_tick():
+    """Identical mirrors, immediate hedge: both flows complete in the same
+    event batch. The piece is counted once; the photo-finish duplicate is
+    ledgered as wasted AND as the hedge's cancelled cost."""
+    mi = sizes_only_mi(size=32e6, piece=8e6)
+    sim = hedged_sim(
+        mi,
+        [MirrorSpec("m0", up_bps=10e6, weight=2.0),
+         MirrorSpec("m1", up_bps=10e6, weight=1.0)],
+    )
+    res = sim.run()
+    assert len(res.completion_time) == 1
+    led = res.ledgers["peer0000"]
+    assert led.downloaded == mi.length               # every piece counted once
+    assert led.pieces_received == mi.num_pieces
+    assert led.wasted == mi.length                   # full duplicates arrived
+    # the loser (the lower-ranked mirror completes second in the batch)
+    assert sim.origin_set.origins["m1"].hedge_cancelled == mi.length
+    assert res.stats.hedge_cancelled_bytes == pytest.approx(mi.length)
+    assert not sim.scheduler.hedges                  # pairs fully resolved
+
+
+def test_hedging_off_is_bit_identical_and_spends_nothing():
+    mi = sizes_only_mi()
+    mirrors = [MirrorSpec("m0", up_bps=ORIGIN, weight=2.0),
+               MirrorSpec("m1", up_bps=ORIGIN / 4, weight=1.0)]
+    base_pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=ORIGIN)
+    runs = {}
+    for hedged in (False, True):
+        pol = dataclasses.replace(base_pol, hedge=hedged)
+        sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=9)
+        sim.add_mirrors(mirrors)
+        sim.add_peers(flash_crowd(3), up_bps=PEER_UP, down_bps=PEER_DOWN)
+        runs[hedged] = sim.run()
+    assert runs[False].hedge_cancelled_bytes == 0.0
+    off = dataclasses.replace(runs[False])
+    # hedging off reproduces the unhedged run exactly on the shared fields
+    assert off.completion_time == runs[False].completion_time
+    # and a no-hedge policy run equals a pre-hedge-era run by construction
+    # (the PR-2 golden equivalence is pinned in test_mirror_fabric)
+
+
+# ------------------------------------------------------- byte-domain hedging
+
+
+def test_byte_domain_hedge_commits_once_and_ledgers_loser():
+    mi, store = payload_mi()
+    swarm = LocalSwarm(
+        mi, store, ["a", "b"], seed=2,
+        webseed=OriginPolicy(swarm_fraction=0.0, hedge=True,
+                             hedge_tail_fraction=0.25),
+        mirrors=[MirrorSpec("m0", up_bps=20e6, weight=2.0),
+                 MirrorSpec("m1", up_bps=20e6, weight=1.0)],
+    )
+    swarm.run()
+    assert all(p.complete for p in swarm.peers.values())
+    for p in swarm.peers.values():
+        assert p.ledger.downloaded == mi.length      # no double count
+        assert p.ledger.pieces_received == mi.num_pieces
+        assert all(mi.verify_piece(i, d) for i, d in p.store.items())
+    assert swarm.hedge_cancelled_bytes > 0           # losers were ledgered
+    pct = swarm.completion_percentiles()
+    assert set(pct) == {"p50", "p95", "p99"}
+    assert pct["p50"] <= pct["p99"]
+
+
+def test_byte_domain_hedge_survives_corrupt_primary():
+    """When the preferred mirror serves bad bytes for a hedged tail piece,
+    the hedge's second read saves the round (verified commit)."""
+    mi, store = payload_mi(n_bytes=1 << 17, piece=1 << 15)
+    swarm = LocalSwarm(
+        mi, store, ["solo"], seed=1,
+        webseed=OriginPolicy(swarm_fraction=0.0, hedge=True,
+                             hedge_tail_fraction=1.0),
+        mirrors=[MirrorSpec("m0", up_bps=20e6, weight=2.0),
+                 MirrorSpec("m1", up_bps=20e6, weight=1.0)],
+    )
+    swarm.origin_set.origins["m0"].corrupt_once.add(0)
+    swarm.run()
+    me = swarm.peers["solo"]
+    assert me.complete
+    assert me.ledger.wasted > 0                      # the bad read was paid
+    assert all(mi.verify_piece(i, d) for i, d in me.store.items())
+
+
+def test_primary_abort_hands_slot_to_live_hedge_partner():
+    """The primary mirror dies while its hedge duplicate is mid-range: the
+    in-flight slot transfers to the survivor instead of re-requesting the
+    piece — no third concurrent fetch, no bytes leaking out of the
+    ledgers."""
+    mi = sizes_only_mi(size=16e6, piece=8e6)
+    sim = hedged_sim(
+        mi,
+        [MirrorSpec("near", up_bps=1e6, weight=2.0),
+         MirrorSpec("far", up_bps=1.2e6, weight=1.0)],
+        http_pipeline=2,
+    )
+    sim.net.schedule(2.0, lambda now: sim.fail_mirror("near"))
+    res = sim.run()
+    assert len(res.completion_time) == 1
+    far = sim.origin_set.origins["far"]
+    # the survivor served exactly one copy: the abort did not trigger a
+    # duplicate re-request racing the still-live hedge flow
+    assert far.http_uploaded == pytest.approx(mi.length)
+    assert res.ledgers["peer0000"].downloaded == mi.length
+    assert res.ledgers["peer0000"].wasted == 0.0
+    assert not sim.scheduler.hedges
+
+
+def test_byte_domain_hedge_defers_to_live_pod_cache():
+    """A pod with a live cache serves through it; hedging is mirror-tier
+    insurance only (matching the time-domain non-cache branch), so no tail
+    piece double-reads the spine."""
+    mi, store = payload_mi()
+    pod_of = {"a": 0, "b": 0}
+    swarm = LocalSwarm(
+        mi, store, list(pod_of), seed=3,
+        webseed=OriginPolicy(swarm_fraction=0.0, hedge=True,
+                             hedge_tail_fraction=1.0, cache_spillover=True),
+        mirrors=[MirrorSpec("m0", up_bps=20e6, weight=2.0),
+                 MirrorSpec("m1", up_bps=20e6, weight=1.0)],
+        pod_of=pod_of, pod_caches=True,
+    )
+    swarm.run()
+    assert all(p.complete for p in swarm.peers.values())
+    assert swarm.hedge_cancelled_bytes == 0.0        # cache served, no hedges
+    # fills crossed the spine ~once, not twice per tail piece
+    assert swarm.origin_set.http_uploaded == pytest.approx(mi.length)
+
+
+def test_hedge_eligibility_respects_needed_mask():
+    """Partitioned ingest: the tail is measured within the client's needed
+    set, so hedging arms when the *partition* is nearly done."""
+    mi = sizes_only_mi()
+    sched = TransferScheduler(
+        mi, OriginPolicy(hedge=True, hedge_tail_fraction=0.25),
+    )
+
+    class _Me:
+        pass
+
+    me = _Me()
+    me.bitfield = Bitfield(mi.num_pieces)
+    mask = np.zeros(mi.num_pieces, dtype=bool)
+    mask[:4] = True                                  # this client needs 4 pieces
+    for p in range(3):
+        me.bitfield.set(p)                           # 1 needed piece missing
+    assert not sched.hedge_eligible(me)              # globally: far from tail
+    assert sched.hedge_eligible(me, mask=mask)       # within the partition: tail
+    me.bitfield.set(3)
+    assert not sched.hedge_eligible(me, mask=mask)   # nothing missing => off
+
+
+# ------------------------------------------------------- interface / view
+
+
+def test_next_actions_view_contract():
+    mi = sizes_only_mi()
+    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=ORIGIN)
+    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=0)
+    sim.add_mirrors([MirrorSpec("m0", up_bps=ORIGIN)])
+    sim.add_peers(flash_crowd(1), up_bps=PEER_UP, down_bps=PEER_DOWN)
+    sim.net.run(until=0.0)                           # process the arrival
+    agent = sim.agents["peer0000"]
+    view = sim._client_view(agent, slots=1)
+    acts = sim.scheduler.next_actions(view)
+    https = [a for a in acts if a.kind == "http"]
+    assert len(https) <= 1                           # one per call by contract
+    if https:
+        assert https[0].targets and https[0].targets[0].name == "m0"
+    # no free slots -> no http action
+    assert not [
+        a for a in sim.scheduler.next_actions(sim._client_view(agent, 0))
+        if a.kind == "http"
+    ]
+
+
+def test_on_origin_dead_clears_ranking_and_hedges():
+    mi = sizes_only_mi()
+    sched = TransferScheduler(
+        mi, OriginPolicy(swarm_fraction=0.0),
+    )
+    from repro.core import OriginSet
+    sched.origin_set = OriginSet(
+        mi, OriginPolicy(),
+        mirrors=[MirrorSpec("m0", up_bps=1e6), MirrorSpec("m1", up_bps=1e6)],
+    )
+    sched.register_hedge("c", 0, "m0", "m1")
+    sched.on_origin_dead("m1")
+    assert sched.origin_set.live() == ["m0"]
+    assert sched.hedges == {("c", 0): {"m0"}}
+    sched.on_origin_dead("m0")
+    assert not sched.hedges
+
+
+def test_policy_validates_hedge_knobs():
+    with pytest.raises(ValueError, match="hedge_tail_fraction"):
+        OriginPolicy(hedge_tail_fraction=0.0)
+    with pytest.raises(ValueError, match="hedge_tail_fraction"):
+        OriginPolicy(hedge_tail_fraction=1.5)
+    with pytest.raises(ValueError, match="hedge_delay"):
+        OriginPolicy(hedge_delay=-1.0)
+
+
+# ------------------------------------------------------- spillover
+
+
+def test_saturated_cache_spills_to_mirror_tier_when_enabled():
+    from repro.core import ClusterTopology
+
+    mi = sizes_only_mi(size=128e6, piece=8e6)
+    results = {}
+    for spillover in (False, True):
+        topo = ClusterTopology(
+            num_pods=1, hosts_per_pod=6, host_up_bps=PEER_UP,
+            host_down_bps=PEER_DOWN, spine_bps=float("inf"),
+        )
+        pol = OriginPolicy(swarm_fraction=1.0, origin_up_bps=ORIGIN,
+                           cache_spillover=spillover, backoff=0.5)
+        sim = WebSeedSwarmSim(mi, pol, SwarmConfig(max_neighbors=5),
+                              seed=13, topology=topo)
+        sim.add_mirrors([MirrorSpec("m0", up_bps=ORIGIN)])
+        sim.add_pod_caches(up_bps=100e6, max_concurrent=1)
+        sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
+                      up_bps=PEER_UP, down_bps=PEER_DOWN)
+        res = sim.run()
+        assert len(res.completion_time) == 6
+        fills = sum(
+            c.fill_downloaded + c.fill_wasted for c in sim.caches.values()
+        )
+        results[spillover] = res.stats.tier_uploaded.get("origin", 0) - fills
+        assert sum(c.rejected for c in sim.caches.values()) > 0
+    assert results[False] == pytest.approx(0.0)   # backoff only, no spill
+    assert results[True] > 0                      # ledgered mirror spillover
+
+
+# ------------------------------------------------------- tail-latency helpers
+
+
+def test_percentile_helpers_raise_clear_errors_when_empty():
+    from repro.core import SwarmResult, SwarmStats
+
+    empty = SwarmResult(
+        sim_time=0.0,
+        stats=SwarmStats(seeders=0, leechers=0, total_uploaded=0,
+                         total_downloaded=0, origin_uploaded=0, completed=0),
+        completion_time={}, finish_at={}, ledgers={}, origin_uploaded=0.0,
+        total_downloaded=0.0, events=0,
+    )
+    with pytest.raises(ValueError, match="no client has completed"):
+        empty.mean_download_speed(1e6)
+    with pytest.raises(ValueError, match="no client has completed"):
+        empty.completion_percentiles()
+    with pytest.raises(ValueError, match="no verified fetches"):
+        empty.fetch_latency_histogram()
+    assert percentiles([]) == {}
+    got = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert got["p50"] == pytest.approx(2.5)
+    assert got["p99"] <= 4.0
+    # fractional percentiles keep distinct keys (no int-truncation collision)
+    frac = percentiles(list(range(1000)), (99, 99.9))
+    assert set(frac) == {"p99", "p99.9"}
+    assert frac["p99"] < frac["p99.9"]
+
+
+def test_result_threads_percentiles_and_histogram():
+    mi = sizes_only_mi()
+    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=ORIGIN)
+    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=1)
+    sim.add_mirrors([MirrorSpec("m0", up_bps=ORIGIN)])
+    sim.add_peers(flash_crowd(4), up_bps=PEER_UP, down_bps=PEER_DOWN)
+    res = sim.run()
+    pct = res.completion_percentiles()
+    assert pct["p50"] <= pct["p95"] <= pct["p99"]
+    # the tracker carries the same view (over the same completion times)
+    assert res.stats.completion_percentiles == pytest.approx(pct)
+    counts, edges = res.fetch_latency_histogram(bins=4)
+    assert sum(counts) == len(res.fetch_latencies)
+    assert len(edges) == 5
+    assert res.fetch_latencies                   # HTTP fetches were recorded
