@@ -17,65 +17,79 @@ Three claims, swept over flash-crowd / staggered / Poisson arrivals:
       ``OriginPolicy.cache_spillover`` sends clients to the ranked mirror
       tier and the spilled bytes are ledgered as origin-tier egress; a
       roomy cache spills nothing.
+
+Every point is declared through the ScenarioSpec API. The committed
+``benchmarks/scenarios/mirror_fabric.json`` carries the shared
+configuration (bundle size, mirror tier, peer NICs, topology, seed); each
+sweep derives its variants with ``dataclasses.replace`` — including the
+fault timeline of (c), which is two declarative events
+(``corrupt_once`` + ``mirror_fail@30``) instead of imperative pokes.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.core import (
-    ClusterTopology, MetaInfo, MirrorSpec, OriginPolicy, SwarmConfig,
-    WebSeedSwarmSim, flash_crowd, poisson_arrivals, staggered_arrivals,
+    ArrivalSpec, EventSpec, FabricSpec, ManifestSpec, MirrorSpec,
+    PodCacheSpec, ScenarioSpec, TopologySpec,
 )
 
-SIZE = 512e6
-PIECE = 8e6
-PEER_UP, PEER_DOWN = 25e6, 50e6
-TOTAL_ORIGIN = 20e6               # aggregate mirror uplink, split across M
-PODS, HOSTS_PER_POD = 2, 8
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "mirror_fabric.json"
 
 
-def arrival_kinds(n):
+def arrival_kinds(base: ArrivalSpec, n: int) -> dict[str, ArrivalSpec]:
+    base = dataclasses.replace(base, n=n)
     return {
-        "flash": flash_crowd(n),
-        "stagger": staggered_arrivals(n, interval=20.0),
-        "poisson": poisson_arrivals(n, 0.25, np.random.default_rng(7)),
+        "flash": base,
+        "stagger": dataclasses.replace(
+            base, kind="staggered", interval=20.0
+        ),
+        "poisson": dataclasses.replace(
+            base, kind="poisson", rate_per_sec=0.25, seed=7
+        ),
     }
 
 
-def mirror_specs(m, total_bps=TOTAL_ORIGIN):
+def mirror_specs(m, total_bps):
     """M mirrors with divergent bandwidth summing to ``total_bps``."""
     shares = np.arange(1, m + 1, dtype=float)
     shares /= shares.sum()
-    return [
+    return tuple(
         MirrorSpec(f"origin{i}", up_bps=float(total_bps * s), weight=float(s))
         for i, s in enumerate(shares)
-    ]
+    )
 
 
 # --------------------------------------------------------------- (a) mirrors
 
 
-def sweep_mirrors(report):
-    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="mirrors")
-    n = 16
-    for label, arrivals in arrival_kinds(n).items():
+def sweep_mirrors(report, spec: ScenarioSpec):
+    mi, _ = spec.content.manifests[0].build()
+    total = sum(m.up_bps for m in spec.fabric.mirrors)
+    n = spec.arrivals[0].n
+    for label, arr in arrival_kinds(spec.arrivals[0], n).items():
         for m in (1, 2, 3):
             copies = {}
             for frac in (0.0, 0.5, 1.0):
                 t0 = time.perf_counter()
-                sim = WebSeedSwarmSim(
-                    mi,
-                    OriginPolicy(swarm_fraction=frac,
-                                 origin_up_bps=TOTAL_ORIGIN,
-                                 selection="least_loaded"),
-                    SwarmConfig(), seed=3,
+                point = dataclasses.replace(
+                    spec,
+                    topology=None,
+                    arrivals=(arr,),
+                    fabric=FabricSpec(mirrors=mirror_specs(m, total)),
+                    policy=dataclasses.replace(
+                        spec.policy, swarm_fraction=frac,
+                        selection="least_loaded",
+                    ),
                 )
-                sim.add_mirrors(mirror_specs(m))
-                sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
-                res = sim.run()
+                compiled = point.build("time")
+                res = compiled.run().primary
+                sim = compiled.sim
                 wall = (time.perf_counter() - t0) * 1e6
                 copies[frac] = res.origin_uploaded / mi.length
                 served = [
@@ -106,39 +120,50 @@ def sweep_mirrors(report):
 # --------------------------------------------------------------- (b) caches
 
 
-def cluster_sim(mi, arrivals, stage, seed=5):
+def cluster_point(spec: ScenarioSpec, arr: ArrivalSpec, stage: str,
+                  seed: int = 5) -> ScenarioSpec:
     """One delivery-network stage: 'global' (locality-blind swarm),
     'locality' (tracker pod ranking), 'cache' (pod-cache tier)."""
-    topo = ClusterTopology(
-        num_pods=PODS, hosts_per_pod=HOSTS_PER_POD, host_up_bps=PEER_UP,
-        host_down_bps=PEER_DOWN, spine_bps=float("inf"),
-    )
+    topo = spec.topology
     same_pod_frac = {"global": 0.5, "locality": 0.95, "cache": 1.0}[stage]
-    sim = WebSeedSwarmSim(
-        mi,
-        OriginPolicy(swarm_fraction=1.0, origin_up_bps=TOTAL_ORIGIN),
-        SwarmConfig(max_neighbors=HOSTS_PER_POD - 1),
-        seed=seed, topology=topo, same_pod_frac=same_pod_frac,
+    n = topo.num_pods * topo.hosts_per_pod
+    return dataclasses.replace(
+        spec,
+        seed=seed,
+        topology=dataclasses.replace(topo, same_pod_frac=same_pod_frac),
+        swarm=dataclasses.replace(
+            spec.swarm, max_neighbors=topo.hosts_per_pod - 1
+        ),
+        policy=dataclasses.replace(spec.policy, swarm_fraction=1.0),
+        fabric=dataclasses.replace(
+            spec.fabric,
+            pod_caches=(
+                PodCacheSpec(up_bps=100e6) if stage == "cache" else None
+            ),
+        ),
+        arrivals=(
+            dataclasses.replace(arr, n=n, topology_hosts=True),
+        ),
     )
-    sim.add_mirrors(mirror_specs(2))
-    if stage == "cache":
-        sim.add_pod_caches(up_bps=100e6)
-    hosts = [(h.name, t) for h, (_, t) in zip(topo.hosts(), arrivals)]
-    sim.add_peers(hosts, up_bps=PEER_UP, down_bps=PEER_DOWN)
-    return sim
 
 
-def sweep_caches(report):
-    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="caches")
-    n = PODS * HOSTS_PER_POD
-    for label, arrivals in arrival_kinds(n).items():
+def sweep_caches(report, spec: ScenarioSpec):
+    mspec = dataclasses.replace(spec.content.manifests[0], name="caches")
+    spec = dataclasses.replace(
+        spec, content=dataclasses.replace(
+            spec.content, manifests=(mspec,)
+        ),
+    )
+    mi, _ = mspec.build()
+    pods = spec.topology.num_pods
+    n = pods * spec.topology.hosts_per_pod
+    for label, arr in arrival_kinds(spec.arrivals[0], n).items():
         per_pod = {}
         for stage in ("global", "locality", "cache"):
             t0 = time.perf_counter()
-            sim = cluster_sim(mi, arrivals, stage)
-            res = sim.run()
+            res = cluster_point(spec, arr, stage).build("time").run().primary
             wall = (time.perf_counter() - t0) * 1e6
-            per_pod[stage] = res.cross_pod_bytes / mi.length / PODS
+            per_pod[stage] = res.cross_pod_bytes / mi.length / pods
             report(
                 f"mirror_fabric/{label}/{stage}", wall,
                 f"cross_pod={per_pod[stage]:.2f}copies/pod "
@@ -160,34 +185,42 @@ def sweep_caches(report):
 # --------------------------------------------------------------- (d) capacity
 
 
-def sweep_cache_capacity(report):
+def sweep_cache_capacity(report, spec: ScenarioSpec):
     """Flash-crowd sweep over pod-cache uplink/admission caps: saturation
     (admission rejections) spills clients over to the mirror tier, and the
     spillover is ledgered — origin-tier egress beyond the fill bytes."""
-    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="cachecap")
-    n = PODS * HOSTS_PER_POD
-    arrivals = flash_crowd(n)
+    mspec = dataclasses.replace(spec.content.manifests[0], name="cachecap")
+    topo = spec.topology
+    n = topo.num_pods * topo.hosts_per_pod
     spilled, rejects = {}, {}
     for label, cap, up in (
         ("roomy", 64, 100e6), ("tight", 2, 50e6), ("choked", 1, 25e6)
     ):
-        topo = ClusterTopology(
-            num_pods=PODS, hosts_per_pod=HOSTS_PER_POD, host_up_bps=PEER_UP,
-            host_down_bps=PEER_DOWN, spine_bps=float("inf"),
-        )
         t0 = time.perf_counter()
-        sim = WebSeedSwarmSim(
-            mi,
-            OriginPolicy(swarm_fraction=1.0, origin_up_bps=TOTAL_ORIGIN,
-                         cache_spillover=True, backoff=1.0),
-            SwarmConfig(max_neighbors=HOSTS_PER_POD - 1),
-            seed=13, topology=topo,
+        point = dataclasses.replace(
+            spec,
+            seed=13,
+            content=dataclasses.replace(spec.content, manifests=(mspec,)),
+            swarm=dataclasses.replace(
+                spec.swarm, max_neighbors=topo.hosts_per_pod - 1
+            ),
+            policy=dataclasses.replace(
+                spec.policy, swarm_fraction=1.0, cache_spillover=True,
+                backoff=1.0,
+            ),
+            fabric=dataclasses.replace(
+                spec.fabric,
+                pod_caches=PodCacheSpec(up_bps=up, max_concurrent=cap),
+            ),
+            arrivals=(
+                dataclasses.replace(
+                    spec.arrivals[0], n=n, topology_hosts=True
+                ),
+            ),
         )
-        sim.add_mirrors(mirror_specs(2))
-        sim.add_pod_caches(up_bps=up, max_concurrent=cap)
-        hosts = [(h.name, t) for h, (_, t) in zip(topo.hosts(), arrivals)]
-        sim.add_peers(hosts, up_bps=PEER_UP, down_bps=PEER_DOWN)
-        res = sim.run()
+        compiled = point.build("time")
+        res, sim = compiled.run().primary, compiled.sim
+        mi = sim.metainfo
         wall = (time.perf_counter() - t0) * 1e6
         fills = sum(
             c.fill_downloaded + c.fill_wasted for c in sim.caches.values()
@@ -212,6 +245,7 @@ def sweep_cache_capacity(report):
     for label in ("tight", "choked"):
         assert rejects[label] > 0, (label, rejects)
         assert spilled[label] > 0, (label, spilled)
+    mi, _ = mspec.build()
     report(
         "mirror_fabric/cache_capacity/spillover", 0.0,
         f"spill/copies roomy={spilled['roomy'] / mi.length:.2f} "
@@ -223,33 +257,50 @@ def sweep_cache_capacity(report):
 # --------------------------------------------------------------- (c) failure
 
 
-def sweep_failure(report):
-    payload = np.random.default_rng(0).integers(
-        0, 256, size=1 << 22, dtype=np.uint8
-    ).tobytes()
-    mi = MetaInfo.from_bytes(payload, 1 << 17, name="failover")
-    store = dict(mi.split_pieces(payload))
-    topo = ClusterTopology(
-        num_pods=PODS, hosts_per_pod=4, host_up_bps=2e6,
-        host_down_bps=4e6, spine_bps=float("inf"),
-    )
+def sweep_failure(report, spec: ScenarioSpec):
     t0 = time.perf_counter()
-    sim = WebSeedSwarmSim(
-        mi, OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
-        SwarmConfig(max_neighbors=3), seed=11, topology=topo,
-        origin_payload=store,
+    topo = TopologySpec(
+        num_pods=spec.topology.num_pods, hosts_per_pod=4,
+        host_up_bps=2e6, host_down_bps=4e6, spine_bps=float("inf"),
     )
-    sim.add_mirrors([MirrorSpec("origin0", up_bps=2e6, weight=2.0),
-                     MirrorSpec("origin1", up_bps=2e6, weight=1.0)])
-    sim.add_pod_caches(up_bps=20e6)
-    sim.origin_set.origins["origin0"].corrupt_once.add(0)
-    sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
-                  up_bps=2e6, down_bps=4e6)
-    # kill the preferred mirror while fills/ranges are mid-flight
-    sim.net.schedule(30.0, lambda now: sim.fail_mirror("origin0"))
-    res = sim.run()
+    n = topo.num_pods * topo.hosts_per_pod
+    point = dataclasses.replace(
+        spec,
+        seed=11,
+        content=dataclasses.replace(
+            spec.content,
+            manifests=(ManifestSpec(
+                "failover", size_bytes=1 << 22, piece_length=1 << 17,
+                payload="random", seed=0,
+            ),),
+        ),
+        topology=topo,
+        swarm=dataclasses.replace(spec.swarm, max_neighbors=3),
+        policy=dataclasses.replace(
+            spec.policy, swarm_fraction=1.0, origin_up_bps=4e6,
+        ),
+        fabric=FabricSpec(
+            mirrors=(MirrorSpec("origin0", up_bps=2e6, weight=2.0),
+                     MirrorSpec("origin1", up_bps=2e6, weight=1.0)),
+            pod_caches=PodCacheSpec(up_bps=20e6),
+        ),
+        arrivals=(
+            dataclasses.replace(
+                spec.arrivals[0], n=n, up_bps=2e6, down_bps=4e6,
+                topology_hosts=True,
+            ),
+        ),
+        # the declarative fault timeline: one corrupted range up front,
+        # then the preferred mirror dies while fills/ranges are mid-flight
+        events=(
+            EventSpec(kind="corrupt_once", target="origin0", piece=0),
+            EventSpec(kind="mirror_fail", at=30.0, target="origin0"),
+        ),
+    )
+    compiled = point.build("time")
+    res, sim = compiled.run().primary, compiled.sim
+    mi = sim.metainfo
     wall = (time.perf_counter() - t0) * 1e6
-    n = PODS * 4
     assert len(res.completion_time) == n, res.completion_time
     # zero corrupt pieces delivered: every stored piece verifies
     for pid, agent in sim.agents.items():
@@ -266,11 +317,12 @@ def sweep_failure(report):
     )
 
 
-def main(report):
-    sweep_mirrors(report)
-    sweep_caches(report)
-    sweep_cache_capacity(report)
-    sweep_failure(report)
+def main(report, scenario=None):
+    spec = ScenarioSpec.load(scenario or SCENARIO)
+    sweep_mirrors(report, spec)
+    sweep_caches(report, spec)
+    sweep_cache_capacity(report, spec)
+    sweep_failure(report, spec)
 
 
 if __name__ == "__main__":

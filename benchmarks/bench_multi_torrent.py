@@ -1,0 +1,114 @@
+"""Multi-torrent fairness — weighted origin-uplink sharing across catalogs.
+
+Real dataset hosts serve *catalogs* of concurrent collections, not one
+torrent at a time (PTMTorrent; the multi-terabyte-dataset accessibility
+study in PAPERS.md). When two swarms share one origin box, whichever crowd
+is larger wins the admission race and starves the other — unless the
+scheduler arbitrates. This bench runs the committed two-manifest scenario
+(``benchmarks/scenarios/multi_torrent_fairness.json``: 12-client torrent A
+vs 4-client torrent B, one shared 20 MB/s mirror, pure HTTP so demand is
+deterministic) through the shared-fabric engine and measures how origin
+service divides while both torrents are live:
+
+  * ``fairness="none"``    — first-come-first-served admission: the big
+    crowd takes origin service roughly proportional to its client count
+    (Jain index over per-torrent service well below 1).
+  * ``fairness="weighted"``, equal weights — the FairShareLedger holds the
+    per-torrent granted bytes within one piece of each other: Jain >= 0.95
+    (the ROADMAP's scheduler-level fairness gate).
+  * ``fairness="weighted"``, 2:1 weights — torrent A's origin service runs
+    at ~2x torrent B's while both are live, and A finishes first.
+
+Per-torrent egress is ledgered end to end: the tracker's
+``SwarmStats.per_torrent_uploaded`` must decompose aggregate origin egress
+exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+from repro.core import ScenarioSpec
+
+SCENARIO = (
+    Path(__file__).resolve().parent / "scenarios"
+    / "multi_torrent_fairness.json"
+)
+
+
+def run_point(spec: ScenarioSpec, fairness: str, weights=(1.0, 1.0)):
+    a, b = spec.content.manifests
+    point = dataclasses.replace(
+        spec,
+        policy=dataclasses.replace(spec.policy, fairness=fairness),
+        content=dataclasses.replace(
+            spec.content,
+            manifests=(
+                dataclasses.replace(a, weight=weights[0]),
+                dataclasses.replace(b, weight=weights[1]),
+            ),
+        ),
+    )
+    return point.build("time").run()
+
+
+def sweep(report, spec: ScenarioSpec):
+    size = spec.content.manifests[0].size_bytes
+    names = [m.name for m in spec.content.manifests]
+    jain = {}
+    for label, fairness, weights in (
+        ("fcfs", "none", (1.0, 1.0)),
+        ("equal", "weighted", (1.0, 1.0)),
+        ("2to1", "weighted", (2.0, 1.0)),
+    ):
+        t0 = time.perf_counter()
+        res = run_point(spec, fairness, weights)
+        wall = (time.perf_counter() - t0) * 1e6
+        jain[label] = res.jain_fairness
+        share = {
+            n: res.concurrent_origin_uploaded[n] / size for n in names
+        }
+        done = {n: o.completed for n, o in res.outcomes.items()}
+        dur = {n: o.duration for n, o in res.outcomes.items()}
+        report(
+            f"multi_torrent/{label}", wall,
+            f"jain={jain[label]:.3f} "
+            f"shareA={share[names[0]]:.2f}copies "
+            f"shareB={share[names[1]]:.2f}copies "
+            f"tA={dur[names[0]]:.0f}s tB={dur[names[1]]:.0f}s",
+        )
+        # both torrents complete in every mode
+        for n, o in res.outcomes.items():
+            assert done[n] == o.clients, (label, n, done)
+        # the tracker ledger decomposes aggregate origin egress exactly
+        per = res.stats.per_torrent_uploaded
+        assert set(per) == set(names), per
+        assert abs(sum(per.values()) - res.stats.origin_uploaded) < 1e-6 * \
+            max(res.stats.origin_uploaded, 1.0), per
+        if label == "equal":
+            # the acceptance gate: equal weights share the uplink equally
+            assert jain["equal"] >= 0.95, jain
+        if label == "2to1":
+            # origin service while both torrents are live tracks the 2:1
+            # weights (torrent A still finishes later — its 12-client crowd
+            # demands 3x the bytes of B's 4-client crowd)
+            ratio = share[names[0]] / share[names[1]]
+            assert 1.5 <= ratio <= 2.5, (ratio, share)
+    # the knob does real work: weighted arbitration beats FCFS on the
+    # asymmetric crowd
+    assert jain["equal"] > jain["fcfs"], jain
+    report(
+        "multi_torrent/fairness_gain", 0.0,
+        f"jain fcfs={jain['fcfs']:.3f} -> weighted={jain['equal']:.3f} "
+        f"(2:1 weights jain={jain['2to1']:.3f})",
+    )
+
+
+def main(report, scenario=None):
+    sweep(report, ScenarioSpec.load(scenario or SCENARIO))
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

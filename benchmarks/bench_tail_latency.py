@@ -9,7 +9,9 @@ cancelling the loser — strictly cuts p99 completion time on a slow-mirror
 fabric, with the insurance premium ledgered separately
 (``SwarmStats.hedge_cancelled_bytes``).
 
-Scenarios:
+Scenarios (each point declared through the ScenarioSpec API; the committed
+``benchmarks/scenarios/tail_latency.json`` carries the shared fabric —
+a slow preferred "near" mirror and a fast "far" alternate):
 
   * **slow_mirror**: pure-HTTP delivery where static selection prefers a
     slow "near" mirror over a fast "far" one (the realistic
@@ -23,48 +25,33 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from pathlib import Path
 
-from repro.core import (
-    MetaInfo, MirrorSpec, OriginPolicy, SwarmConfig, WebSeedSwarmSim,
-    flash_crowd,
-)
+from repro.core import ScenarioSpec
 
-SIZE = 256e6
-PIECE = 8e6
-PEERS = 12
-PEER_UP, PEER_DOWN = 25e6, 50e6
-NEAR_BPS, FAR_BPS = 3e6, 60e6
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "tail_latency.json"
 
 
-def mirror_specs():
-    # static weights prefer the slow mirror: the tail is real
-    return [MirrorSpec("near", up_bps=NEAR_BPS, weight=2.0),
-            MirrorSpec("far", up_bps=FAR_BPS, weight=1.0)]
+def run_once(spec: ScenarioSpec, fraction: float, hedged: bool):
+    point = dataclasses.replace(
+        spec,
+        policy=dataclasses.replace(
+            spec.policy, swarm_fraction=fraction, hedge=hedged,
+            hedge_tail_fraction=0.25, hedge_delay=0.0,
+        ),
+    )
+    return point.build("time").run().primary
 
 
-def run_once(mi, policy, seed=11):
-    sim = WebSeedSwarmSim(mi, policy, SwarmConfig(), seed=seed)
-    sim.add_mirrors(mirror_specs())
-    sim.add_peers(flash_crowd(PEERS), up_bps=PEER_UP, down_bps=PEER_DOWN)
-    return sim.run()
-
-
-def sweep(report):
-    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="tail")
-    scenarios = {
-        "slow_mirror": dict(swarm_fraction=0.0),
-        "hybrid": dict(swarm_fraction=0.5),
-    }
-    for label, pol_kw in scenarios.items():
-        base = OriginPolicy(origin_up_bps=NEAR_BPS, selection="static",
-                            **pol_kw)
+def sweep(report, spec: ScenarioSpec):
+    mi, _ = spec.content.manifests[0].build()
+    peers = spec.arrivals[0].n
+    scenarios = {"slow_mirror": 0.0, "hybrid": 0.5}
+    for label, fraction in scenarios.items():
         results = {}
         for hedged in (False, True):
-            pol = dataclasses.replace(
-                base, hedge=hedged, hedge_tail_fraction=0.25, hedge_delay=0.0
-            )
             t0 = time.perf_counter()
-            res = run_once(mi, pol)
+            res = run_once(spec, fraction, hedged)
             wall = (time.perf_counter() - t0) * 1e6
             results[hedged] = res
             pct = res.completion_percentiles()
@@ -78,7 +65,7 @@ def sweep(report):
                 f"cancelled={res.hedge_cancelled_bytes / 1e6:.1f}MB "
                 f"max_fetch={slow_fetch:.0f}s",
             )
-            assert len(res.completion_time) == PEERS, (label, hedged)
+            assert len(res.completion_time) == peers, (label, hedged)
         off, on = results[False], results[True]
         p99_off = off.completion_percentiles()["p99"]
         p99_on = on.completion_percentiles()["p99"]
@@ -101,8 +88,8 @@ def sweep(report):
         )
 
 
-def main(report):
-    sweep(report)
+def main(report, scenario=None):
+    sweep(report, ScenarioSpec.load(scenario or SCENARIO))
 
 
 if __name__ == "__main__":

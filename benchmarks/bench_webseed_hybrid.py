@@ -7,55 +7,71 @@ match ``SwarmSim`` exactly), across flash-crowd, staggered, and Poisson
 arrivals. The assertions are the paper's hybrid story: origin egress falls
 monotonically toward one copy as the swarm takes over, while downloads get
 *faster*, not slower.
+
+Every simulated point is declared and compiled through the ScenarioSpec
+API: the committed ``benchmarks/scenarios/webseed_hybrid.json`` is the
+base configuration (sizes, bandwidths, seed), and each sweep point is a
+``dataclasses.replace`` override of it. CI pins this declarative path
+bit-identical to the imperative-era goldens via
+``benchmarks/run.py --scenario ... --compare``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.core import (
-    MetaInfo, OriginPolicy, SwarmConfig, SwarmSim, WebSeedSwarmSim,
-    flash_crowd, poisson_arrivals, simulate_http, staggered_arrivals,
+    ArrivalSpec, ScenarioSpec, SwarmConfig, SwarmSim, simulate_http,
 )
 
-SIZE = 1e9
-PIECE = 16e6
-N = 16
-ORIGIN = 20e6
-PEER_UP = 25e6
-PEER_DOWN = 50e6
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "webseed_hybrid.json"
 FRACTIONS = (0.0, 0.25, 0.5, 0.75, 1.0)
 
 
-def run_point(mi: MetaInfo, arrivals, fraction: float, seed: int = 3,
-              **policy_kw):
-    sim = WebSeedSwarmSim(
-        mi,
-        OriginPolicy(swarm_fraction=fraction, origin_up_bps=ORIGIN,
-                     **policy_kw),
-        SwarmConfig(), seed=seed,
-    )
-    sim.add_web_origin()
-    sim.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
-    return sim.run()
-
-
-def main(report):
-    mi = MetaInfo.from_sizes_only(int(SIZE), int(PIECE), name="webseed")
-    kinds = {
-        "flash": flash_crowd(N),
-        "stagger": staggered_arrivals(N, interval=30.0),
-        "poisson": poisson_arrivals(N, 0.2, np.random.default_rng(7)),
+def arrival_kinds(base: ArrivalSpec) -> dict[str, ArrivalSpec]:
+    """The three canonical crowds, derived from the base arrival group."""
+    return {
+        "flash": base,
+        "stagger": dataclasses.replace(
+            base, kind="staggered", interval=30.0
+        ),
+        "poisson": dataclasses.replace(
+            base, kind="poisson", rate_per_sec=0.2, seed=7
+        ),
     }
-    for label, arrivals in kinds.items():
-        http = simulate_http(mi, arrivals, ORIGIN, PEER_DOWN)
+
+
+def run_point(spec: ScenarioSpec, arrival: ArrivalSpec, fraction: float,
+              **policy_kw):
+    point = dataclasses.replace(
+        spec,
+        arrivals=(arrival,),
+        policy=dataclasses.replace(
+            spec.policy, swarm_fraction=fraction, **policy_kw
+        ),
+    )
+    return point.build("time").run().primary
+
+
+def main(report, scenario=None):
+    spec = ScenarioSpec.load(scenario or SCENARIO)
+    manifest = spec.content.manifests[0]
+    mi, _ = manifest.build()
+    base_arrival = spec.arrivals[0]
+    origin_bps = spec.fabric.mirrors[0].up_bps
+    n = base_arrival.n
+    for label, arr in arrival_kinds(base_arrival).items():
+        arrivals = arr.generate()
+        http = simulate_http(mi, arrivals, origin_bps, arr.down_bps)
         copies = {}
         times = {}
         for f in FRACTIONS:
             t0 = time.perf_counter()
-            res = run_point(mi, arrivals, f)
+            res = run_point(spec, arr, f)
             wall = (time.perf_counter() - t0) * 1e6
             copies[f] = res.origin_uploaded / mi.length
             times[f] = res.mean_completion_time()
@@ -71,7 +87,7 @@ def main(report):
                 a = np.array([http.completion_time[p] for p, _ in arrivals])
                 b = np.array([res.completion_time[p] for p, _ in arrivals])
                 assert np.allclose(a, b, rtol=1e-6), (label, a, b)
-                assert copies[f] == N
+                assert copies[f] == n
         # origin egress falls monotonically toward ~1 copy
         seq = [copies[f] for f in FRACTIONS]
         assert all(x >= y - 1e-9 for x, y in zip(seq, seq[1:])), (label, seq)
@@ -86,12 +102,13 @@ def main(report):
 
     # pure-swarm endpoint: with a peer-protocol origin the hybrid at
     # fraction 1 IS SwarmSim — identical egress and completion times
-    arrivals = kinds["stagger"]
-    ref = SwarmSim(mi, SwarmConfig(), seed=3)
-    ref.add_origin(up_bps=ORIGIN)
-    ref.add_peers(arrivals, up_bps=PEER_UP, down_bps=PEER_DOWN)
+    arr = arrival_kinds(base_arrival)["stagger"]
+    arrivals = arr.generate()
+    ref = SwarmSim(mi, SwarmConfig(), seed=spec.seed)
+    ref.add_origin(up_bps=origin_bps)
+    ref.add_peers(arrivals, up_bps=arr.up_bps, down_bps=arr.down_bps)
     rres = ref.run()
-    hres = run_point(mi, arrivals, 1.0, serve_peer_protocol=True)
+    hres = run_point(spec, arr, 1.0, serve_peer_protocol=True)
     a = np.array([rres.completion_time[p] for p, _ in arrivals])
     b = np.array([hres.completion_time[p] for p, _ in arrivals])
     assert np.allclose(a, b, rtol=1e-9)

@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...] \
-        [--json DIR] [--compare DIR [--tolerance REL]]
+        [--json DIR] [--compare DIR [--tolerance REL]] \
+        [--scenario FILE [--engine time|byte]] [--list]
 
 ``--json DIR`` additionally persists each bench's rows as
 ``BENCH_<name>.json`` under DIR (repo-root convention), so the perf
@@ -13,6 +14,15 @@ baselines ``DIR/BENCH_<name>.json`` (numbers extracted from each row's
 ``derived`` string, compared at ``--tolerance`` relative error;
 ``us_per_call`` wall times are ignored) and exits non-zero on any metric
 regression — the CI gate that keeps the simulation goldens pinned.
+
+``--scenario FILE`` runs a declarative ScenarioSpec JSON. When FILE is a
+registered bench's base scenario (see ``--list``), the whole bench suite
+runs seeded from it — combined with ``--compare`` this is the gate that
+pins the *declarative* compile path bit-identical to the goldens. Any
+other scenario file runs generically on ``--engine`` and reports one row
+per torrent.
+
+``--list`` prints the registered benchmarks and their scenario files.
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ from benchmarks import (  # noqa: E402
     bench_fig1_server_load,
     bench_kernels,
     bench_mirror_fabric,
+    bench_multi_torrent,
     bench_pipeline,
     bench_roofline,
     bench_swarm_scaling,
@@ -50,6 +61,7 @@ SUITES = {
     "webseed": bench_webseed_hybrid,
     "mirror_fabric": bench_mirror_fabric,
     "tail_latency": bench_tail_latency,
+    "multi_torrent": bench_multi_torrent,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -58,6 +70,51 @@ SUITES = {
     "fabric_hc": bench_fabric_hillclimb,
 }
 DEFAULT_SUITES = [k for k in SUITES if k != "fabric_hc"]
+
+
+def scenario_file(key: str):
+    """The bench's base ScenarioSpec file, or None for non-scenario suites."""
+    return getattr(SUITES[key], "SCENARIO", None)
+
+
+def list_benches() -> None:
+    print(f"{'bench':<14} {'scenario file':<46} description")
+    for key, mod in SUITES.items():
+        scen = scenario_file(key)
+        rel = scen.relative_to(Path(__file__).resolve().parent.parent) \
+            if scen else "-"
+        doc = (mod.__doc__ or "").strip().splitlines()[0]
+        print(f"{key:<14} {str(rel):<46} {doc}")
+
+
+def run_generic_scenario(path: Path, engine: str, report) -> None:
+    """Run one scenario file that no bench claims: one row per torrent,
+    plus the fairness row for multi-torrent scenarios."""
+    from repro.core import ScenarioSpec
+
+    spec = ScenarioSpec.load(path)
+    t0 = time.perf_counter()
+    result = spec.build(engine).run()
+    wall = (time.perf_counter() - t0) * 1e6
+    unit = "s" if engine == "time" else "rounds"
+    for name, out in result.outcomes.items():
+        size = next(
+            m.size_bytes for m in spec.content.manifests if m.name == name
+        )
+        pct = out.completion_percentiles
+        report(
+            f"scenario/{spec.name}/{name}", wall,
+            f"done={out.completed}/{out.clients} "
+            f"t={out.duration:.0f}{unit} "
+            f"origin={out.origin_uploaded / size:.2f}copies "
+            f"ud={out.ud_ratio:.1f}"
+            + (f" p99={pct['p99']:.0f}{unit}" if pct else ""),
+        )
+    if result.jain_fairness is not None:
+        report(
+            f"scenario/{spec.name}/fairness", 0.0,
+            f"jain={result.jain_fairness:.3f}",
+        )
 
 # every float in a derived string, sign/decimal/exponent included
 _NUM_RE = re.compile(r"-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")
@@ -135,8 +192,36 @@ def main() -> None:
                          "baselines; exit non-zero on metric regressions")
     ap.add_argument("--tolerance", type=float, default=0.05,
                     help="relative tolerance for --compare (default 0.05)")
+    ap.add_argument("--scenario", default=None, metavar="FILE",
+                    help="run a ScenarioSpec JSON: a registered bench's "
+                         "base file runs that whole bench seeded from it; "
+                         "any other file runs generically")
+    ap.add_argument("--engine", default="time", choices=["time", "byte"],
+                    help="engine for generic --scenario runs")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmarks + scenario files")
     args = ap.parse_args()
+    if args.list:
+        list_benches()
+        return
+    scenario_path = Path(args.scenario).resolve() if args.scenario else None
     chosen = DEFAULT_SUITES if not args.only else args.only.split(",")
+    if scenario_path is not None:
+        # exact-path match only: a user file that merely shares a committed
+        # scenario's basename must run generically, not trip the owning
+        # bench's golden assertions
+        owners = [
+            key for key in SUITES
+            if scenario_file(key) is not None
+            and scenario_file(key).resolve() == scenario_path
+        ]
+        chosen = owners  # empty => generic run below
+        if not owners and (args.json or args.compare):
+            raise SystemExit(
+                f"--json/--compare need a registered bench scenario; "
+                f"{scenario_path} is not one (see --list). Generic runs "
+                "have no BENCH_* baseline to write or diff."
+            )
     json_dir = Path(args.json) if args.json else None
     if json_dir is not None:
         json_dir.mkdir(parents=True, exist_ok=True)
@@ -156,13 +241,20 @@ def main() -> None:
     measured_ud = None
     failures = []
     regressions: list[str] = []
+    if scenario_path is not None and not chosen:
+        # no bench claims this file: run the scenario itself
+        suite_rows: list[dict] = []
+        run_generic_scenario(scenario_path, args.engine, report)
+        return
     for key in chosen:
         mod = SUITES[key]
         suite_rows: list[dict] = []
         error = None
         t0 = time.perf_counter()
         try:
-            if key == "eq1":
+            if scenario_path is not None:
+                mod.main(report, scenario=scenario_path)
+            elif key == "eq1":
                 measured_ud, _ = mod.main(report)
             elif key == "table1":
                 mod.main(report, measured_ud=measured_ud)

@@ -1,6 +1,11 @@
 """The paper's own scenario: N researchers downloading a dataset, HTTP vs
 HTTP+P2P, with live U/D accounting (Eq. 1) and Table-1-style projection.
 
+The deployment is one declarative ScenarioSpec: a single origin that also
+speaks the peer protocol (``serve_peer_protocol=True`` at swarm fraction 1
+is exactly the paper's seeded-origin swarm), staggered researcher
+arrivals that linger seeding for an hour after finishing.
+
 Run:  PYTHONPATH=src python examples/dataset_swarm.py --downloads 24
 """
 
@@ -11,8 +16,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import (
-    MetaInfo, SwarmConfig, SwarmSim, accounting, project_row,
-    simulate_http, staggered_arrivals,
+    ArrivalSpec, ContentSpec, FabricSpec, ManifestSpec, MirrorSpec,
+    OriginPolicy, ScenarioSpec, accounting, project_row, simulate_http,
 )
 
 
@@ -23,14 +28,26 @@ def main() -> None:
     args = ap.parse_args()
 
     size = args.size_gb * 1e9
-    mi = MetaInfo.from_sizes_only(int(size), int(32e6), name="dataset")
-    arrivals = staggered_arrivals(args.downloads, interval=120.0)
+    scenario = ScenarioSpec(
+        name="dataset_swarm",
+        content=ContentSpec(manifests=(
+            ManifestSpec("dataset", size_bytes=int(size),
+                         piece_length=int(32e6)),
+        )),
+        fabric=FabricSpec(mirrors=(MirrorSpec("origin", up_bps=10e6),)),
+        arrivals=(ArrivalSpec(kind="staggered", n=args.downloads,
+                              interval=120.0, up_bps=25e6, down_bps=50e6,
+                              seed_linger=3600.0),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=10e6,
+                            serve_peer_protocol=True),
+        seed=0,
+    )
+    mi, _ = scenario.content.manifests[0].build()
+    arrivals = scenario.arrivals[0].generate()
 
-    http = simulate_http(mi, arrivals, origin_up_bps=10e6, client_down_bps=50e6)
-    sim = SwarmSim(mi, SwarmConfig(), seed=0)
-    sim.add_origin(up_bps=10e6)
-    sim.add_peers(arrivals, up_bps=25e6, down_bps=50e6, seed_linger=3600.0)
-    res = sim.run()
+    http = simulate_http(mi, arrivals, origin_up_bps=10e6,
+                         client_down_bps=50e6)
+    res = scenario.build("time").run().primary
 
     cost = accounting.CostModel()
     print(f"dataset: {args.size_gb:.1f} GB, {args.downloads} downloads")

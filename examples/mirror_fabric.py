@@ -10,102 +10,137 @@ spine. A pod-local cache proxy fills once per pod from the mirror tier and
 serves its pod over leaf links — cross-pod traffic collapses to ~1 copy
 per pod, measured on the shared spine link.
 
-Act 3 — faults: the fastest mirror dies mid-download and one range arrives
-corrupted; verified re-fetch + mirror failover deliver every byte intact.
+Act 3 — faults, declared: the scenario's event timeline corrupts one range
+and kills the fastest mirror mid-download; verified re-fetch + mirror
+failover deliver every byte intact.
+
+Every act is a ScenarioSpec — the same JSON-able values the benchmarks
+commit under ``benchmarks/scenarios/``.
 
 Run:  PYTHONPATH=src python examples/mirror_fabric.py --hosts-per-pod 6
 """
 
 import argparse
+import dataclasses
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import numpy as np
-
 from repro.core import (
-    ClusterTopology, MetaInfo, MirrorSpec, OriginPolicy, SwarmConfig,
-    WebSeedSwarmSim, flash_crowd,
+    ArrivalSpec, ContentSpec, EventSpec, FabricSpec, ManifestSpec,
+    MirrorSpec, OriginPolicy, PodCacheSpec, ScenarioSpec, SwarmConfig,
+    TopologySpec,
 )
 
 
 def act1_mirrors(args):
-    size = args.size_gb * 1e9
-    mi = MetaInfo.from_sizes_only(int(size), int(size / 64), name="imagenet")
-    mirrors = [MirrorSpec("origin0", up_bps=12e6, weight=3.0),
-               MirrorSpec("origin1", up_bps=6e6, weight=2.0),
-               MirrorSpec("origin2", up_bps=2e6, weight=1.0)]
+    size = int(args.size_gb * 1e9)
+    scenario = ScenarioSpec(
+        name="imagenet_mirrors",
+        content=ContentSpec(manifests=(
+            ManifestSpec("imagenet", size_bytes=size,
+                         piece_length=size // 64),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("origin0", up_bps=12e6, weight=3.0),
+            MirrorSpec("origin1", up_bps=6e6, weight=2.0),
+            MirrorSpec("origin2", up_bps=2e6, weight=1.0),
+        )),
+        arrivals=(ArrivalSpec(kind="flash", n=args.peers, up_bps=25e6,
+                              down_bps=50e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, selection="least_loaded"),
+        seed=0,
+    )
     print(f"Act 1 — {args.peers} clients, {args.size_gb:.2f} GB, "
           f"3 mirrors (12/6/2 MB/s), least-loaded selection")
     print(f"{'swarm fraction':>14s} {'aggregate egress':>17s} "
           f"{'per-mirror copies':>19s} {'mean dl':>8s}")
     for frac in (0.0, 0.5, 1.0):
-        sim = WebSeedSwarmSim(
-            mi, OriginPolicy(swarm_fraction=frac, selection="least_loaded"),
-            SwarmConfig(), seed=0,
+        point = dataclasses.replace(
+            scenario,
+            policy=dataclasses.replace(scenario.policy, swarm_fraction=frac),
         )
-        sim.add_mirrors(mirrors)
-        sim.add_peers(flash_crowd(args.peers), up_bps=25e6, down_bps=50e6)
-        res = sim.run()
+        out = point.build("time")
+        res = out.run().primary
         per = "/".join(
-            f"{o.http_uploaded / mi.length:.2f}"
-            for o in sim.origin_set.origins.values()
+            f"{o.http_uploaded / size:.2f}"
+            for o in out.sim.origin_set.origins.values()
         )
-        print(f"{frac:>14.2f} {res.origin_uploaded / mi.length:>10.2f} copies "
+        print(f"{frac:>14.2f} {res.origin_uploaded / size:>10.2f} copies "
               f"{per:>19s} {res.mean_completion_time():>7.0f}s")
 
 
 def act2_caches(args):
-    size = args.size_gb * 1e9
-    mi = MetaInfo.from_sizes_only(int(size), int(size / 64), name="cluster")
+    size = int(args.size_gb * 1e9)
     pods = 2
     n = pods * args.hosts_per_pod
+    base = ScenarioSpec(
+        name="cluster_caches",
+        content=ContentSpec(manifests=(
+            ManifestSpec("cluster", size_bytes=size, piece_length=size // 64),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("origin0", up_bps=12e6),
+            MirrorSpec("origin1", up_bps=8e6),
+        )),
+        topology=TopologySpec(num_pods=pods,
+                              hosts_per_pod=args.hosts_per_pod,
+                              host_up_bps=25e6, host_down_bps=50e6,
+                              spine_bps=float("inf")),
+        arrivals=(ArrivalSpec(kind="flash", n=n, up_bps=25e6, down_bps=50e6,
+                              topology_hosts=True),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=20e6),
+        swarm=SwarmConfig(max_neighbors=args.hosts_per_pod - 1),
+        seed=1,
+    )
     print(f"\nAct 2 — {pods} pods x {args.hosts_per_pod} hosts, "
           f"spine-metered cross-pod traffic")
     print(f"{'stage':>10s} {'cross-pod/pod':>14s} {'mirror egress':>14s} "
           f"{'cache serves':>13s}")
     for stage in ("global", "locality", "cache"):
-        topo = ClusterTopology(
-            num_pods=pods, hosts_per_pod=args.hosts_per_pod,
-            host_up_bps=25e6, host_down_bps=50e6, spine_bps=float("inf"),
-        )
         frac = {"global": 0.5, "locality": 0.95, "cache": 1.0}[stage]
-        sim = WebSeedSwarmSim(
-            mi, OriginPolicy(swarm_fraction=1.0, origin_up_bps=20e6),
-            SwarmConfig(max_neighbors=args.hosts_per_pod - 1),
-            seed=1, topology=topo, same_pod_frac=frac,
+        point = dataclasses.replace(
+            base,
+            topology=dataclasses.replace(base.topology, same_pod_frac=frac),
+            fabric=dataclasses.replace(
+                base.fabric,
+                pod_caches=(PodCacheSpec(up_bps=100e6)
+                            if stage == "cache" else None),
+            ),
         )
-        sim.add_mirrors([MirrorSpec("origin0", up_bps=12e6),
-                         MirrorSpec("origin1", up_bps=8e6)])
-        if stage == "cache":
-            sim.add_pod_caches(up_bps=100e6)
-        sim.add_peers([(h.name, 0.0) for h in topo.hosts()],
-                      up_bps=25e6, down_bps=50e6)
-        res = sim.run()
+        res = point.build("time").run().primary
         assert len(res.completion_time) == n
         print(f"{stage:>10s} "
-              f"{res.cross_pod_bytes / mi.length / pods:>7.2f} copies "
-              f"{res.origin_uploaded / mi.length:>7.2f} copies "
-              f"{res.pod_cache_uploaded / mi.length:>6.2f} copies")
+              f"{res.cross_pod_bytes / size / pods:>7.2f} copies "
+              f"{res.origin_uploaded / size:>7.2f} copies "
+              f"{res.pod_cache_uploaded / size:>6.2f} copies")
 
 
 def act3_faults(args):
-    payload = np.random.default_rng(0).integers(
-        0, 256, size=1 << 21, dtype=np.uint8
-    ).tobytes()
-    mi = MetaInfo.from_bytes(payload, 1 << 16, name="faulty")
-    store = dict(mi.split_pieces(payload))
-    sim = WebSeedSwarmSim(
-        mi, OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
-        SwarmConfig(), seed=2, origin_payload=store,
+    scenario = ScenarioSpec(
+        name="fault_drill",
+        content=ContentSpec(manifests=(
+            ManifestSpec("faulty", size_bytes=1 << 21, piece_length=1 << 16,
+                         payload="random"),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("origin0", up_bps=2e6, weight=2.0),
+            MirrorSpec("origin1", up_bps=2e6, weight=1.0),
+        )),
+        arrivals=(ArrivalSpec(kind="flash", n=6, up_bps=2e6,
+                              down_bps=4e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
+        events=(
+            EventSpec(kind="corrupt_once", target="origin0", piece=0),
+            EventSpec(kind="mirror_fail", at=20.0, target="origin0"),
+        ),
+        seed=2,
     )
-    sim.add_mirrors([MirrorSpec("origin0", up_bps=2e6, weight=2.0),
-                     MirrorSpec("origin1", up_bps=2e6, weight=1.0)])
-    sim.origin_set.origins["origin0"].corrupt_once.add(0)
-    sim.add_peers(flash_crowd(6), up_bps=2e6, down_bps=4e6)
-    sim.net.schedule(20.0, lambda now: sim.fail_mirror("origin0"))
-    res = sim.run()
+    out = scenario.build("time")
+    res = out.run().primary
+    sim = out.sim
+    mi = sim.metainfo
     verified = all(
         mi.verify_piece(i, d)
         for pid, a in sim.agents.items()
@@ -114,7 +149,8 @@ def act3_faults(args):
     )
     wasted = sum(l.wasted for l in res.ledgers.values())
     print(f"\nAct 3 — preferred mirror corrupted one range, then died at "
-          f"t=20s:\n  {len(res.completion_time)}/6 clients finished; "
+          f"t=20s (both declared EventSpecs):\n  "
+          f"{len(res.completion_time)}/6 clients finished; "
           f"{wasted / 1e3:.0f} kB re-fetched; all pieces verified: {verified}")
     assert verified and len(res.completion_time) == 6
 

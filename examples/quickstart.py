@@ -1,10 +1,13 @@
-"""Quickstart: publish a dataset, swarm it to a fleet, train on it.
+"""Quickstart: declare a delivery scenario, swarm a dataset, train on it.
 
-The 60-second tour of the whole system:
+The 60-second tour of the whole system, now through the declarative API:
   1. build a synthetic sharded corpus; its manifest IS a torrent;
-  2. distribute it to 4 "hosts" through the verified byte-level swarm
-     (watch the origin upload ~1 copy while hosts get 4);
-  3. train a small LM on the swarm-ingested tokens for a few steps;
+  2. *declare* the delivery deployment as a ScenarioSpec — one JSON-able
+     value holding content, mirror fabric, policy, arrivals, and a fault
+     timeline — and compile it to the time-domain engine (watch origin
+     egress collapse to ~1 copy while a mirror dies mid-download);
+  3. distribute the corpus to 4 "hosts" through the verified byte-level
+     swarm and train a small LM on the swarm-ingested tokens;
   4. checkpoint it, and broadcast the checkpoint bundle through the swarm.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -16,12 +19,12 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax
-import numpy as np
-
 from repro.configs import get_config
 from repro.configs.base import TrainConfig
-from repro.core import LocalSwarm
+from repro.core import (
+    ArrivalSpec, ContentSpec, EventSpec, FabricSpec, LocalSwarm,
+    ManifestSpec, MirrorSpec, OriginPolicy, ScenarioSpec,
+)
 from repro.data import CorpusSpec, HostBatcher, ShardedCorpus, loader_from_corpus
 from repro.models import build_model
 from repro.train import Trainer, TrainerConfig, checkpoint_metainfo
@@ -36,14 +39,40 @@ def main() -> None:
           f"{corpus.manifest.num_pieces} pieces, "
           f"infohash {corpus.manifest.info_hash_hex[:16]}…")
 
-    print("\n=== 2. swarm it to 4 hosts ===")
+    print("\n=== 2. declare the delivery scenario (one serializable value) ===")
+    scenario = ScenarioSpec(
+        name="quickstart",
+        content=ContentSpec(manifests=(
+            ManifestSpec("release", size_bytes=int(256e6),
+                         piece_length=int(8e6)),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("mirror-a", up_bps=12e6, weight=2.0),
+            MirrorSpec("mirror-b", up_bps=8e6, weight=1.0),
+        )),
+        arrivals=(ArrivalSpec(kind="flash", n=12, up_bps=25e6,
+                              down_bps=50e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=20e6,
+                            selection="least_loaded"),
+        events=(EventSpec(kind="mirror_fail", at=30.0, target="mirror-a"),),
+        seed=0,
+    )
+    blob = scenario.to_json()
+    print(f"scenario JSON: {len(blob)} bytes; round-trips: "
+          f"{ScenarioSpec.from_json(blob) == scenario}")
+    result = scenario.build("time").run()
+    out = result.outcomes["release"]
+    print(f"flash crowd of {out.clients}: {out.completed} completed in "
+          f"{out.duration:.0f}s despite mirror-a dying at t=30s; "
+          f"origin served {out.origin_uploaded / 256e6:.2f} copies "
+          f"(U/D {out.ud_ratio:.1f}x, Eq. 1)")
+
+    print("\n=== 3. swarm the corpus to 4 hosts, train a small LM ===")
     loader = loader_from_corpus(corpus, num_hosts=4, seed=0)
     rep = loader.ingest("full_replica")
     print(f"origin uploaded {rep.origin_uploaded/1e6:.1f} MB for "
           f"{rep.total_downloaded/1e6:.1f} MB delivered "
-          f"(U/D amplification {rep.ud_ratio:.1f}x, Eq. 1)")
-
-    print("\n=== 3. train a small LM on host 0's swarm-ingested shards ===")
+          f"(U/D amplification {rep.ud_ratio:.1f}x)")
     cfg = get_config("granite_3_2b").reduce(vocab_size=512)
     bundle = build_model(cfg)
     shards = [loader.host_shard_tokens(0, s) for s in range(spec.num_shards)]

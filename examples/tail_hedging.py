@@ -7,9 +7,8 @@ pace. Client-side **mirror hedging** — the HTTP analogue of endgame mode —
 duplicates tail range requests to the next ranked mirror, cancels the
 loser, and ledgers the cancelled bytes as an explicit insurance premium.
 
-The script runs the same slow-mirror flash crowd unhedged and hedged and
-prints the per-client completion percentiles, the fetch-latency histogram
-tail, and the premium paid.
+The slow-mirror deployment is declared once as a ScenarioSpec; the unhedged
+and hedged runs are the same scenario with one policy knob flipped.
 
 Run:  PYTHONPATH=src python examples/tail_hedging.py --peers 12
 """
@@ -22,22 +21,9 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import (
-    MetaInfo, MirrorSpec, OriginPolicy, SwarmConfig, WebSeedSwarmSim,
-    flash_crowd,
+    ArrivalSpec, ContentSpec, FabricSpec, ManifestSpec, MirrorSpec,
+    OriginPolicy, ScenarioSpec,
 )
-
-
-def run(mi, peers, hedge, tail):
-    pol = OriginPolicy(swarm_fraction=0.0, origin_up_bps=3e6,
-                       selection="static", hedge=hedge,
-                       hedge_tail_fraction=tail)
-    sim = WebSeedSwarmSim(mi, pol, SwarmConfig(), seed=7)
-    # static weights prefer the slow mirror — the realistic "nearest mirror
-    # is not the fastest mirror" trap
-    sim.add_mirrors([MirrorSpec("near", up_bps=3e6, weight=2.0),
-                     MirrorSpec("far", up_bps=60e6, weight=1.0)])
-    sim.add_peers(flash_crowd(peers), up_bps=25e6, down_bps=50e6)
-    return sim.run()
 
 
 def main() -> None:
@@ -47,8 +33,26 @@ def main() -> None:
     ap.add_argument("--tail", type=float, default=0.25,
                     help="hedge_tail_fraction (fraction of pieces hedged)")
     args = ap.parse_args()
-    size = args.size_gb * 1e9
-    mi = MetaInfo.from_sizes_only(int(size), int(size / 32), name="tail")
+    size = int(args.size_gb * 1e9)
+
+    # static weights prefer the slow mirror — the realistic "nearest mirror
+    # is not the fastest mirror" trap
+    scenario = ScenarioSpec(
+        name="tail_hedging",
+        content=ContentSpec(manifests=(
+            ManifestSpec("tail", size_bytes=size, piece_length=size // 32),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("near", up_bps=3e6, weight=2.0),
+            MirrorSpec("far", up_bps=60e6, weight=1.0),
+        )),
+        arrivals=(ArrivalSpec(kind="flash", n=args.peers, up_bps=25e6,
+                              down_bps=50e6),),
+        policy=OriginPolicy(swarm_fraction=0.0, origin_up_bps=3e6,
+                            selection="static",
+                            hedge_tail_fraction=args.tail),
+        seed=7,
+    )
 
     print(f"{args.peers} clients, {args.size_gb:.2f} GB, slow preferred "
           f"mirror (3 MB/s) + fast alternate (60 MB/s)")
@@ -56,7 +60,11 @@ def main() -> None:
           f"{'premium':>10s}")
     results = {}
     for hedge in (False, True):
-        res = run(mi, args.peers, hedge, args.tail)
+        point = dataclasses.replace(
+            scenario,
+            policy=dataclasses.replace(scenario.policy, hedge=hedge),
+        )
+        res = point.build("time").run().primary
         assert len(res.completion_time) == args.peers
         results[hedge] = res
         pct = res.completion_percentiles()
@@ -71,7 +79,7 @@ def main() -> None:
     counts, edges = on.fetch_latency_histogram(bins=8)
     print(f"\nhedging cut p99 by {(1 - p99_on / p99_off) * 100:.0f}% "
           f"({p99_off:.0f}s -> {p99_on:.0f}s) for "
-          f"{on.hedge_cancelled_bytes / mi.length:.3f} copies of premium")
+          f"{on.hedge_cancelled_bytes / size:.3f} copies of premium")
     print(f"hedged fetch-latency histogram (s): "
           + " ".join(f"{e:.0f}:{c}" for e, c in zip(edges, counts)))
     assert p99_on < p99_off

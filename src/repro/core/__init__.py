@@ -35,13 +35,30 @@ from .http_baseline import HttpResult, analytic_http, simulate_http
 from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
 from .netsim import FluidNetwork, Flow, Link, Node
 from .peer import Ledger, PeerAgent
+from .scenario import (
+    ArrivalSpec,
+    CompiledScenario,
+    ContentSpec,
+    EventSpec,
+    FabricSpec,
+    ManifestSpec,
+    PodCacheSpec,
+    ScenarioResult,
+    ScenarioSpec,
+    TopologySpec,
+    TorrentOutcome,
+)
 from .scheduler import (
     ClientView,
+    FairShareLedger,
     OriginPolicy,
     Request,
     TransferScheduler,
+    jain_index,
     percentiles,
     plan_peer_requests,
+    spec_from_dict,
+    spec_to_dict,
     swarm_routed_mask,
 )
 from .swarm import (

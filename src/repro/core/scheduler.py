@@ -51,6 +51,49 @@ import numpy as np
 from . import piece_selection as ps
 from .metainfo import MetaInfo
 
+# --------------------------------------------------------------------------- spec (de)serialization
+
+
+def spec_from_dict(cls, data: dict):
+    """Strict, typed dataclass construction from a plain (JSON) dict.
+
+    Unknown keys raise ``ValueError`` (a typo must never silently produce a
+    default), scalar fields are coerced to their declared type (JSON has no
+    int/float distinction), and ``None`` passes through for Optional
+    fields. Composite specs (nested dataclasses, tuples) convert their
+    children first and hand this helper the leaf-ready dict.
+    """
+    if not isinstance(data, dict):
+        raise ValueError(f"{cls.__name__}: expected a mapping, got {data!r}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - set(fields))
+    if unknown:
+        raise ValueError(
+            f"{cls.__name__}: unknown keys {unknown} "
+            f"(valid: {sorted(fields)})"
+        )
+    kwargs = {}
+    for key, val in data.items():
+        t = str(fields[key].type)
+        if val is None:
+            kwargs[key] = None
+        elif "bool" in t:
+            kwargs[key] = bool(val)
+        elif "float" in t:
+            kwargs[key] = float(val)
+        elif "int" in t:
+            kwargs[key] = int(val)
+        else:
+            kwargs[key] = val
+    return cls(**kwargs)
+
+
+def spec_to_dict(obj) -> dict:
+    """Flat field dict of a leaf spec dataclass (inverse of
+    :func:`spec_from_dict` for scalar-only specs)."""
+    return {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)}
+
+
 # --------------------------------------------------------------------------- policy
 
 
@@ -77,6 +120,14 @@ class OriginPolicy:
                             when their pod cache rejects admission
                             (capacity-planning escape valve; default off —
                             the cache is the pod's only doorway).
+    ``fairness``            Scheduler-level sharing of the origin uplinks
+                            across *concurrent torrents* (multi-manifest
+                            scenarios): ``"none"`` admits first-come
+                            first-served; ``"weighted"`` arbitrates every
+                            mirror admission through a shared
+                            :class:`FairShareLedger` so each torrent's
+                            granted origin bytes track its configured
+                            weight (Jain index ~1 for equal weights).
     ======================  ==================================================
     """
 
@@ -93,6 +144,7 @@ class OriginPolicy:
     hedge_tail_fraction: float = 0.05
     hedge_delay: float = 0.0
     cache_spillover: bool = False
+    fairness: str = "none"             # "none" | "weighted"
 
     def __post_init__(self) -> None:
         if self.mode not in ("swarm_first", "http_first"):
@@ -109,6 +161,8 @@ class OriginPolicy:
             raise ValueError("hedge_tail_fraction must be in (0, 1]")
         if self.hedge_delay < 0.0:
             raise ValueError("hedge_delay must be >= 0")
+        if self.fairness not in ("none", "weighted"):
+            raise ValueError(f"unknown fairness mode {self.fairness!r}")
 
 
 def swarm_routed_mask(metainfo: MetaInfo, fraction: float) -> np.ndarray:
@@ -149,6 +203,140 @@ def percentiles(
     arr = np.percentile(np.asarray(vals, dtype=np.float64), list(ps_))
     # :g keeps integer percentiles as "p99" while "p99.9" stays distinct
     return {f"p{p:g}": float(v) for p, v in zip(ps_, arr)}
+
+
+def jain_index(values: Iterable[float]) -> float:
+    """Jain's fairness index (sum x)^2 / (n * sum x^2) in (0, 1].
+
+    1.0 means perfectly equal shares; 1/n means one participant got
+    everything. The multi-torrent scenarios report it over per-torrent
+    weight-normalized origin service.
+    """
+    vals = np.asarray(list(values), dtype=np.float64)
+    if vals.size == 0:
+        raise ValueError("jain_index: empty sample")
+    denom = float(vals.size * np.square(vals).sum())
+    if denom == 0.0:
+        return 1.0  # nobody got anything: trivially equal
+    return float(np.square(vals.sum()) / denom)
+
+
+# --------------------------------------------------------------------------- fairness
+
+
+class FairShareLedger:
+    """Weighted fair sharing of origin uplinks across concurrent torrents.
+
+    One ledger is shared by every per-torrent :class:`TransferScheduler` of
+    a multi-torrent run. It implements deficit-style arbitration at the
+    *admission* boundary (the scheduler-level analogue of weighted fair
+    queueing): for each origin it tracks the bytes granted to each torrent,
+    and :meth:`allow` admits a request only while the asking torrent's
+    weight-normalized service does not lead the most-deficited *live*
+    contender by more than one request's worth. A denied client backs off
+    and retries exactly like an admission rejection, so the mechanism is
+    work-conserving up to the policy backoff; torrents whose demand is
+    exhausted (``live()`` false) stop counting as contenders and their
+    share is redistributed.
+    """
+
+    def __init__(self) -> None:
+        self.weights: dict[str, float] = {}
+        self._live: dict[str, Callable[[], bool]] = {}
+        # (origin name, torrent) -> bytes granted at admission time (telemetry)
+        self.granted: dict[tuple[str, str], float] = {}
+        # (origin name, torrent) -> weight-normalized service level used for
+        # arbitration. Distinct from granted/weight: a torrent observed with
+        # NO live demand is marked dormant, and on resuming is
+        # fast-forwarded to the current floor (WFQ virtual time — idle past
+        # earns no credit, so a late joiner neither starves the fabric
+        # before arriving nor floods it catching up). Continuously
+        # backlogged torrents are never fast-forwarded: their transient
+        # normalized lag is exactly the deficit the weights entitle them to.
+        self._service: dict[tuple[str, str], float] = {}
+        self._dormant: set[str] = set()
+        # fairness denials per torrent (telemetry; origin counters untouched)
+        self.deferred: dict[str, int] = {}
+
+    def register(
+        self, torrent: str, weight: float, live: Callable[[], bool]
+    ) -> None:
+        if weight <= 0:
+            raise ValueError(f"torrent {torrent!r}: weight must be positive")
+        if torrent in self.weights:
+            raise ValueError(f"duplicate torrent {torrent!r}")
+        self.weights[torrent] = float(weight)
+        self._live[torrent] = live
+        self.deferred[torrent] = 0
+
+    def _normalized(self, origin_name: str, torrent: str) -> float:
+        return self._service.get((origin_name, torrent), 0.0)
+
+    def _contenders(self, torrent: str) -> list[str]:
+        """Torrents with live demand (the asker always counts). Torrents
+        observed demand-less are marked dormant for the resume rule."""
+        out = []
+        for t, live in self._live.items():
+            alive = live()
+            if not alive:
+                self._dormant.add(t)
+            if t == torrent or alive:
+                out.append(t)
+        return out
+
+    def _resume(self, torrent: str) -> None:
+        """A dormant torrent's demand is back: fast-forward its service at
+        every origin to the most-deficited live rival's level (no credit
+        for the idle past, no catch-up flood)."""
+        origins = {o for (o, _) in self._service}
+        for o in origins:
+            rivals = [
+                self._normalized(o, t)
+                for t in self.weights
+                if t != torrent and (o, t) in self._service
+            ]
+            if rivals:
+                key = (o, torrent)
+                self._service[key] = max(
+                    self._service.get(key, 0.0), min(rivals)
+                )
+        self._dormant.discard(torrent)
+
+    def allow(self, origin_name: str, torrent: str, nbytes: float) -> bool:
+        """May ``torrent`` take one more ``nbytes`` request at this origin?"""
+        if torrent not in self.weights:
+            return True  # unregistered torrent: fairness not in force
+        contenders = self._contenders(torrent)
+        if torrent in self._dormant:
+            self._resume(torrent)
+        if len(contenders) <= 1:
+            return True
+        mine = self._normalized(origin_name, torrent)
+        floor = min(self._normalized(origin_name, t) for t in contenders)
+        if mine - floor <= nbytes / self.weights[torrent]:
+            return True
+        self.deferred[torrent] += 1
+        return False
+
+    def record(self, origin_name: str, torrent: str, nbytes: float) -> None:
+        """Ledger one granted admission (bytes are committed to the wire)."""
+        if torrent not in self.weights:
+            return
+        self._contenders(torrent)          # refresh dormancy observations
+        if torrent in self._dormant:
+            self._resume(torrent)
+        key = (origin_name, torrent)
+        self.granted[key] = self.granted.get(key, 0.0) + float(nbytes)
+        self._service[key] = (
+            self._service.get(key, 0.0) + float(nbytes) / self.weights[torrent]
+        )
+
+    def granted_by_torrent(self) -> dict[str, float]:
+        """Total origin bytes granted per torrent, across all origins."""
+        out = {t: 0.0 for t in self.weights}
+        for (_, torrent), nbytes in self.granted.items():
+            out[torrent] = out.get(torrent, 0.0) + nbytes
+        return out
 
 
 # --------------------------------------------------------------------------- peer planning
@@ -284,12 +472,18 @@ class TransferScheduler:
         select_policy: str = "rarest_first",
         endgame: bool = True,
         origin_set=None,
+        torrent: Optional[str] = None,
+        fair_share: Optional[FairShareLedger] = None,
     ):
         self.metainfo = metainfo
         self.policy = policy
         self.select_policy = select_policy
         self.endgame = endgame
         self.origin_set = origin_set
+        # multi-torrent identity + the shared cross-torrent admission
+        # arbiter (None for single-torrent runs: behaviour is unchanged)
+        self.torrent = torrent
+        self.fair_share = fair_share
         self.swarm_routed: Optional[np.ndarray] = (
             swarm_routed_mask(metainfo, policy.swarm_fraction)
             if policy is not None else None
@@ -482,6 +676,31 @@ class TransferScheduler:
             pair.discard(name)
             if not pair:
                 del self.hedges[key]
+
+    # ------------------------------------------------------------- admission
+    def fair_allow(self, origin_name: str, nbytes: float) -> bool:
+        """Cross-torrent fairness verdict for one origin request (True when
+        no fair-share ledger is in force — the single-torrent case)."""
+        if self.fair_share is None or self.torrent is None:
+            return True
+        return self.fair_share.allow(origin_name, self.torrent, nbytes)
+
+    def fair_record(self, origin_name: str, nbytes: float) -> None:
+        """Ledger one granted origin request with the fair-share arbiter."""
+        if self.fair_share is not None and self.torrent is not None:
+            self.fair_share.record(origin_name, self.torrent, nbytes)
+
+    def try_admit(self, origin, nbytes: float) -> bool:
+        """Admission for one range request at a *mirror*: the cross-torrent
+        fairness gate first (a denial looks like a rejection to the caller
+        — back off and retry — but is ledgered scheduler-side, not against
+        the origin), then the origin's own admission cap."""
+        if not self.fair_allow(origin.name, nbytes):
+            return False
+        if not origin.try_admit():
+            return False
+        self.fair_record(origin.name, nbytes)
+        return True
 
     # ------------------------------------------------------------- failover bookkeeping
     def bad_origins(self, client_id: str, piece: int) -> set[str]:

@@ -24,7 +24,9 @@ from .choking import ChokerConfig
 from .metainfo import MetaInfo
 from .netsim import FluidNetwork, Flow
 from .peer import Ledger, PeerAgent
-from .scheduler import ClientView, TransferScheduler, percentiles
+from .scheduler import (
+    ClientView, TransferScheduler, percentiles, spec_from_dict, spec_to_dict,
+)
 from .topology import ClusterTopology
 from .tracker import SwarmStats, Tracker
 
@@ -42,6 +44,34 @@ class SwarmConfig:
     optimistic_slots: int = 1
     corruption_prob: float = 0.0   # fault injection: pieces that fail verification
     endgame: bool = True
+
+    def __post_init__(self) -> None:
+        from . import piece_selection as ps
+
+        if self.policy not in ps.POLICIES:
+            raise ValueError(
+                f"unknown selection policy {self.policy!r} "
+                f"(valid: {sorted(ps.POLICIES)})"
+            )
+        for knob in ("pipeline", "per_peer_requests", "max_neighbors",
+                     "max_unchoked"):
+            if getattr(self, knob) < 1:
+                raise ValueError(f"{knob} must be >= 1")
+        if self.choke_interval <= 0:
+            raise ValueError("choke_interval must be positive")
+        if self.optimistic_slots < 0:
+            raise ValueError("optimistic_slots must be >= 0")
+        if not 0.0 <= self.corruption_prob <= 1.0:
+            raise ValueError("corruption_prob must be in [0, 1]")
+
+    def to_dict(self) -> dict:
+        return spec_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "SwarmConfig":
+        """Strict construction: unknown keys raise (a typo must never
+        silently fall back to a default engine config)."""
+        return spec_from_dict(cls, data)
 
 
 @dataclasses.dataclass
@@ -157,17 +187,27 @@ class SwarmSim:
         topology: Optional[ClusterTopology] = None,
         origin_payload: Optional[dict[int, bytes]] = None,
         same_pod_frac: float = 1.0,
+        *,
+        net: Optional[FluidNetwork] = None,
+        tracker: Optional[Tracker] = None,
     ):
+        """``net``/``tracker`` inject shared infrastructure for multi-torrent
+        runs (:class:`repro.core.scenario.MultiTorrentSim`): every torrent's
+        flows then contend on one fluid network and announce to one tracker.
+        Default (None): the engine owns both — the historical behaviour."""
         self.metainfo = metainfo
         self.cfg = cfg or SwarmConfig()
         self.rng = np.random.default_rng(seed)
-        self.net = FluidNetwork()
+        self.net = net if net is not None else FluidNetwork()
         self.topology = topology
-        self.tracker = Tracker(
+        self.tracker = tracker if tracker is not None else Tracker(
             rng=np.random.default_rng(seed + 1), topology=topology,
             same_pod_frac=same_pod_frac,
         )
         self.tracker.register(metainfo)
+        # multi-torrent hook: called as (sim, agent, now) when a client
+        # completes its download (None => no observer)
+        self.on_client_complete = None
         # the unified decision core; WebSeedSwarmSim swaps in one that also
         # carries the HTTP policy + origin set
         self.scheduler = TransferScheduler(
@@ -181,7 +221,11 @@ class SwarmSim:
         self._pod_of: dict[str, Optional[int]] = {}
         self.spine = None
         if topology is not None and topology.spine_bps is not None:
-            self.spine = self.net.add_link("spine", topology.spine_bps)
+            # with an injected net the spine may already exist (one shared
+            # link for every torrent's cross-pod traffic)
+            self.spine = self.net.links.get("spine") or self.net.add_link(
+                "spine", topology.spine_bps
+            )
 
     # ------------------------------------------------------------- locality
     def _pod(self, name: str) -> Optional[int]:
@@ -384,6 +428,8 @@ class SwarmSim:
                 uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
                 event="completed", now=now,
             )
+            if self.on_client_complete is not None:
+                self.on_client_complete(self, dst, now)
             linger = getattr(dst, "seed_linger", None)
             if linger is not None:
                 self.net.schedule(
@@ -437,6 +483,12 @@ class SwarmSim:
     # ------------------------------------------------------------- run
     def run(self, until: float = float("inf")) -> SwarmResult:
         self.net.run(until=until)
+        return self._result()
+
+    def _result(self) -> SwarmResult:
+        """Assemble this torrent's result from the current engine state
+        (factored out of :meth:`run` so a multi-torrent driver can run the
+        shared network once and collect every torrent's result)."""
         stats = self.tracker.scrape(self.metainfo)
         comp, fin = {}, {}
         for pid, a in self.agents.items():
@@ -720,6 +772,12 @@ class LocalSwarm:
                 data = origin.read_piece(piece)   # cache egress + fault hook
                 # cache -> client stays inside the pod: no cross-pod bytes
             else:
+                # cross-torrent fairness: a torrent leading its weighted
+                # share defers this mirror read to the deficited torrent
+                # and retries on a later round (the byte-domain analogue
+                # of an admission rejection + backoff)
+                if not self.scheduler.fair_allow(origin.name, size):
+                    continue
                 # hedging is mirror-tier insurance: it arms exactly when a
                 # mirror ends up serving (no cache, or the cache path was
                 # skipped/spilled) — the same non-cache branch the
@@ -729,11 +787,16 @@ class LocalSwarm:
                     me, piece, origin, req.targets,
                     mask=self.needed.get(pid),
                 )
-                if hedge is not None:
+                # the hedge duplicate is origin service too: it must clear
+                # the cross-torrent gate or the request runs unhedged
+                if hedge is not None and self.scheduler.fair_allow(
+                    hedge.name, size
+                ):
                     return self._http_fetch_hedged(
                         me, pid, piece, [origin, hedge]
                     )
                 data = origin.read_piece(piece)
+                self.scheduler.fair_record(origin.name, size)
                 self.origin.record_served(piece, pid, float(self.rounds))
                 self._count_cross_pod(origin.name, pid, size)
             if me.accept_piece(
@@ -758,6 +821,7 @@ class LocalSwarm:
         reads = []
         for origin in pair:
             data = origin.read_piece(piece)
+            self.scheduler.fair_record(origin.name, size)
             self._count_cross_pod(origin.name, pid, size)
             reads.append((origin, data))
         got = None

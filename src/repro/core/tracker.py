@@ -64,6 +64,12 @@ class SwarmStats:
     completion_percentiles: dict[str, float] = dataclasses.field(
         default_factory=dict
     )
+    # Multi-torrent runs: origin-tier egress decomposed per torrent name
+    # (filled by :meth:`Tracker.scrape_fleet`; empty for single-torrent
+    # scrapes — the aggregate IS that torrent's ledger).
+    per_torrent_uploaded: dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def origin_peer_uploaded(self) -> float:
@@ -142,6 +148,10 @@ class Tracker:
             rec.completed_at = now
         elif event == "stopped":
             rec.left = True
+        elif event == "started":
+            # a healed mirror (or a rejoining peer) re-announces: it is
+            # handed out again and counts as live in scrapes
+            rec.left = False
 
         candidates = [
             pid
@@ -217,6 +227,43 @@ class Tracker:
                 r.hedge_cancelled for r in swarm.values()
             ),
             completion_percentiles=percentiles(completion_times),
+        )
+
+    def scrape_fleet(self, metainfos: Sequence[MetaInfo]) -> SwarmStats:
+        """Aggregate scrape across concurrent torrents, with the origin-tier
+        egress decomposed per torrent (``per_torrent_uploaded``) — the
+        multi-torrent ledger the fairness scenarios assert on. Completion
+        percentiles are recomputed over the union of all torrents' clients,
+        not averaged per torrent."""
+        per = {mi.name: self.scrape(mi) for mi in metainfos}
+        tiers: dict[str, float] = {}
+        for st in per.values():
+            for tier, nbytes in st.tier_uploaded.items():
+                tiers[tier] = tiers.get(tier, 0.0) + nbytes
+        completion_times = [
+            r.completed_at - r.arrived_at
+            for mi in metainfos
+            for r in self._swarm(mi).values()
+            if r.complete and not r.is_origin and r.tier != "pod_cache"
+        ]
+        return SwarmStats(
+            seeders=sum(s.seeders for s in per.values()),
+            leechers=sum(s.leechers for s in per.values()),
+            total_uploaded=sum(s.total_uploaded for s in per.values()),
+            total_downloaded=sum(s.total_downloaded for s in per.values()),
+            origin_uploaded=sum(s.origin_uploaded for s in per.values()),
+            completed=sum(s.completed for s in per.values()),
+            origin_http_uploaded=sum(
+                s.origin_http_uploaded for s in per.values()
+            ),
+            tier_uploaded=tiers,
+            hedge_cancelled_bytes=sum(
+                s.hedge_cancelled_bytes for s in per.values()
+            ),
+            completion_percentiles=percentiles(completion_times),
+            per_torrent_uploaded={
+                name: s.origin_uploaded for name, s in per.items()
+            },
         )
 
     def records(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:

@@ -101,6 +101,10 @@ or a bare origin — with zero seeded peers.
 ``cache_spillover``     Saturated pod caches (admission rejections) spill
                         clients over to the ranked mirror tier instead of
                         backing off (default off).
+``fairness``            ``"weighted"``: multi-torrent runs arbitrate every
+                        mirror admission across concurrent torrents by
+                        manifest weight (scheduler's ``FairShareLedger``;
+                        see :mod:`repro.core.scenario`). Default ``"none"``.
 ======================  =====================================================
 
 Mirror/cache deployment knobs (:class:`MirrorSpec` / ``add_pod_caches``):
@@ -132,6 +136,8 @@ from .scheduler import (  # noqa: F401  (re-exported: historical home)
     ClientView,
     OriginPolicy,
     TransferScheduler,
+    spec_from_dict,
+    spec_to_dict,
     swarm_routed_mask,
 )
 from .swarm import SwarmConfig, SwarmSim
@@ -150,6 +156,31 @@ class MirrorSpec:
     latency_s: float = 0.0
     weight: float = 1.0
     max_concurrent: Optional[int] = None   # None => policy.max_concurrent
+
+    def __post_init__(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("mirror name must be a non-empty string")
+        if self.up_bps <= 0:
+            raise ValueError(f"mirror {self.name!r}: up_bps must be positive")
+        if self.down_bps <= 0:
+            raise ValueError(f"mirror {self.name!r}: down_bps must be positive")
+        if self.latency_s < 0:
+            raise ValueError(f"mirror {self.name!r}: latency_s must be >= 0")
+        if self.weight <= 0:
+            raise ValueError(f"mirror {self.name!r}: weight must be positive")
+        if self.max_concurrent is not None and self.max_concurrent < 1:
+            raise ValueError(
+                f"mirror {self.name!r}: max_concurrent must be >= 1 (or None)"
+            )
+
+    def to_dict(self) -> dict:
+        return spec_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "MirrorSpec":
+        """Strict construction: unknown keys raise (a typo must never
+        silently deploy a default mirror)."""
+        return spec_from_dict(cls, data)
 
 
 # --------------------------------------------------------------------------- origin
@@ -403,19 +434,33 @@ class WebSeedSwarmSim(SwarmSim):
         topology: Optional[ClusterTopology] = None,
         origin_payload: Optional[dict[int, bytes]] = None,
         same_pod_frac: float = 1.0,
+        *,
+        net=None,
+        tracker=None,
+        shared_nodes: Optional[dict] = None,
+        torrent: Optional[str] = None,
+        fair_share=None,
     ):
+        """``net``/``tracker``/``shared_nodes`` wire this torrent into a
+        multi-torrent fabric (one fluid network; mirror *nodes* shared so
+        every torrent's range flows contend on the same physical uplinks);
+        ``torrent``/``fair_share`` identify it to the cross-torrent
+        admission arbiter. All default to the single-torrent behaviour."""
         super().__init__(
             metainfo, cfg, seed, topology=topology,
             origin_payload=origin_payload, same_pod_frac=same_pod_frac,
+            net=net, tracker=tracker,
         )
         self.policy = policy or OriginPolicy()
         self.origin_set = OriginSet(metainfo, policy=self.policy)
+        self._shared_nodes = shared_nodes or {}
         # replace the peer-only scheduler the base engine built: HTTP piece
         # choice, ranked-origin choice, failover/backoff bookkeeping, and
         # hedging all live in the unified core
         self.scheduler = TransferScheduler(
             metainfo, self.policy, endgame=self.cfg.endgame,
             origin_set=self.origin_set,
+            torrent=torrent, fair_share=fair_share,
         )
         self.caches: dict[int, PodCacheOrigin] = {}
         self._cache_by_name: dict[str, PodCacheOrigin] = {}
@@ -445,10 +490,14 @@ class WebSeedSwarmSim(SwarmSim):
 
     def add_mirror(self, spec: MirrorSpec) -> PeerAgent:
         """Attach one mirror: a netsim node whose uplink serves HTTP range
-        flows, cache fills, and (optionally) peer-protocol flows."""
+        flows, cache fills, and (optionally) peer-protocol flows. In a
+        multi-torrent fabric the node comes from ``shared_nodes`` — one
+        physical box whose uplink every torrent's flows contend on."""
         pol = self.policy
         agent = self._new_agent(spec.name, is_origin=True)
-        agent.node = self.net.add_node(spec.name, spec.up_bps, spec.down_bps)
+        agent.node = self._shared_nodes.get(spec.name) or self.net.add_node(
+            spec.name, spec.up_bps, spec.down_bps
+        )
         if self.origin_id is None:
             self.origin_id = spec.name
         self.origin_set.add_mirror(spec, store=agent.store)
@@ -519,6 +568,30 @@ class WebSeedSwarmSim(SwarmSim):
         agent = self.agents.get(name)
         if agent is not None and not agent.departed:
             self._depart(agent, self.net.now)
+
+    def heal_mirror(self, name: str) -> None:
+        """Bring a failed mirror back: its node serves HTTP range requests
+        again, the tracker hands it out, and ranked selection re-includes
+        it. Peer-protocol connections are *not* re-formed — a healed box
+        rejoins as a bare web seed (the HTTP tier is what failover and the
+        scenario event timeline exercise)."""
+        if name not in self.origin_set.origins:
+            raise KeyError(f"unknown mirror {name!r}")
+        self.origin_set.heal(name)
+        agent = self.agents.get(name)
+        if agent is not None:
+            agent.departed = False
+            if agent.node is not None:
+                agent.node.failed = False
+        mirror = self.origin_set.origins[name]
+        self.tracker.announce(
+            self.metainfo, name,
+            uploaded=agent.ledger.uploaded if agent else 0.0,
+            downloaded=0.0, event="started", now=self.net.now,
+            is_origin=True, is_web_seed=True,
+            http_uploaded=mirror.http_uploaded,
+            hedge_cancelled=mirror.hedge_cancelled,
+        )
 
     # ------------------------------------------------------------- scheduling
     def _filter_peer_list(self, agent: PeerAgent, peer_list: list[str]) -> list[str]:
@@ -639,7 +712,9 @@ class WebSeedSwarmSim(SwarmSim):
                 else:
                     origin.filling.setdefault(piece, []).append(agent.peer_id)
                 return True
-            if not origin.try_admit():
+            if not self.scheduler.try_admit(
+                origin, self.metainfo.piece_size(piece)
+            ):
                 continue
             agent.in_flight[piece] = f"{origin.name}::http"
             self._http_outstanding[agent.peer_id] = (
@@ -748,7 +823,9 @@ class WebSeedSwarmSim(SwarmSim):
                 return                       # primary already resolved
             if not self._origin_live(hedge.name):
                 return
-            if not hedge.try_admit():
+            if not self.scheduler.try_admit(
+                hedge, self.metainfo.piece_size(piece)
+            ):
                 return                       # hedge mirror busy: no insurance
             self.scheduler.register_hedge(
                 dst.peer_id, piece, primary.name, hedge.name
@@ -807,11 +884,11 @@ class WebSeedSwarmSim(SwarmSim):
             return True
         for name, magent in usable:
             mirror = self.origin_set.origins[name]
-            if not mirror.try_admit():
+            size = self.metainfo.piece_size(piece)
+            if not self.scheduler.try_admit(mirror, size):
                 continue
             cache.fill_from[piece] = name
             spec = self.origin_set.specs[name]
-            size = self.metainfo.piece_size(piece)
 
             def _start(t: float, name=name, magent=magent, mirror=mirror) -> None:
                 if magent.node.failed:
