@@ -22,6 +22,12 @@ pins the *declarative* compile path bit-identical to the goldens. Any
 other scenario file runs generically on ``--engine`` and reports one row
 per torrent.
 
+``--trace DIR`` (needs ``--scenario``) forces the flight recorder on,
+runs the scenario generically, exports ``TRACE_<name>.jsonl`` +
+``TRACE_<name>.chrome.json`` (load in chrome://tracing) +
+``METRICS_<name>.json`` under DIR, and replays the trace through the
+invariant checker — exits non-zero on any violation.
+
 ``--list`` prints the registered benchmarks and their scenario files.
 """
 
@@ -85,6 +91,59 @@ def list_benches() -> None:
             if scen else "-"
         doc = (mod.__doc__ or "").strip().splitlines()[0]
         print(f"{key:<14} {str(rel):<46} {doc}")
+
+
+def run_traced_scenario(path: Path, engine: str, trace_dir: Path) -> None:
+    """Flight-recorder run: force telemetry on, export the trace artifacts
+    and replay the invariant checker over them. Exits non-zero on any
+    invariant violation — the CI trace gate."""
+    import dataclasses
+
+    from repro.core import ScenarioSpec, TelemetrySpec, TraceChecker
+
+    spec = ScenarioSpec.load(path)
+    tel = spec.telemetry or TelemetrySpec()
+    spec = dataclasses.replace(
+        spec, telemetry=dataclasses.replace(tel, enabled=True)
+    )
+    result = spec.build(engine).run()
+    trace_dir.mkdir(parents=True, exist_ok=True)
+    written = [
+        result.trace.to_jsonl(trace_dir / f"TRACE_{spec.name}.jsonl"),
+        result.trace.to_chrome(
+            trace_dir / f"TRACE_{spec.name}.chrome.json"
+        ),
+    ]
+    if result.metrics is not None:
+        written.append(
+            result.metrics.to_json(trace_dir / f"METRICS_{spec.name}.json")
+        )
+    for p in written:
+        if p is not None:
+            print(f"trace: wrote {p}", flush=True)
+    if engine == "time":
+        hedged = result.stats.hedge_cancelled_bytes if result.stats else 0.0
+    else:
+        hedged = sum(
+            o.raw.hedge_cancelled_bytes for o in result.outcomes.values()
+        )
+    checker = TraceChecker(result.trace)
+    violations = checker.check(hedge_cancelled_bytes=hedged)
+    for origin, summary in checker.failover_summary().items():
+        print(
+            f"trace: {origin} failed@{summary['failed_at']:.0f} "
+            f"failovers={summary['failovers']} "
+            f"requests_after_fail={summary['requests_after_fail']}",
+            flush=True,
+        )
+    print(
+        f"trace: {len(result.trace.events)} events, "
+        f"{len(violations)} invariant violation(s)", flush=True,
+    )
+    if violations:
+        for v in violations:
+            print(f"VIOLATION {v}", flush=True)
+        raise SystemExit(f"{len(violations)} trace invariant violation(s)")
 
 
 def run_generic_scenario(path: Path, engine: str, report) -> None:
@@ -198,6 +257,11 @@ def main() -> None:
                          "any other file runs generically")
     ap.add_argument("--engine", default="time", choices=["time", "byte"],
                     help="engine for generic --scenario runs")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="flight-recorder run of --scenario: export "
+                         "TRACE_/METRICS_ artifacts under DIR and replay "
+                         "the invariant checker (exit non-zero on any "
+                         "violation)")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmarks + scenario files")
     args = ap.parse_args()
@@ -205,6 +269,11 @@ def main() -> None:
         list_benches()
         return
     scenario_path = Path(args.scenario).resolve() if args.scenario else None
+    if args.trace is not None:
+        if scenario_path is None:
+            raise SystemExit("--trace needs --scenario FILE")
+        run_traced_scenario(scenario_path, args.engine, Path(args.trace))
+        return
     chosen = DEFAULT_SUITES if not args.only else args.only.split(",")
     if scenario_path is not None:
         # exact-path match only: a user file that merely shares a committed

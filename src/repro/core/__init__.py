@@ -71,6 +71,15 @@ from .swarm import (
     poisson_arrivals,
     staggered_arrivals,
 )
+from .telemetry import (
+    MetricsSampler,
+    NULL_RECORDER,
+    TRACE_EVENT_KINDS,
+    TelemetrySpec,
+    TraceChecker,
+    TraceEvent,
+    TraceRecorder,
+)
 from .topology import ClusterTopology, HostAddr
 from .tracker import PeerRecord, SwarmStats, Tracker
 from .webseed import (

@@ -308,3 +308,9 @@ class FluidNetwork:
     # ------------------------------------------------------------- telemetry
     def total_bytes_moved(self) -> float:
         return sum(self.bytes_sent.values())
+
+    def link_rate(self, link: Link) -> float:
+        """Instantaneous aggregate rate (bytes/sec) through ``link``."""
+        if self._rates_dirty:
+            self._recompute_rates()
+        return sum(f.rate for f in self.flows.values() if link in f.links)

@@ -64,6 +64,7 @@ from .swarm import (
     poisson_arrivals,
     staggered_arrivals,
 )
+from .telemetry import MetricsSampler, TelemetrySpec, TraceRecorder
 from .topology import ClusterTopology
 from .tracker import SwarmStats, Tracker
 from .webseed import MirrorSpec, WebSeedSwarmSim
@@ -447,6 +448,12 @@ class ScenarioResult:
         default_factory=dict
     )
     jain_fairness: Optional[float] = None
+    # flight recorder (when the spec's TelemetrySpec is enabled): the shared
+    # TraceRecorder and MetricsSampler of the run. Deliberately excluded from
+    # to_dict — traces are exported separately (JSONL / chrome / metrics
+    # blocks), never inlined into benchmark result payloads.
+    trace: object = None
+    metrics: object = None
 
     @property
     def primary(self):
@@ -494,6 +501,9 @@ class ScenarioSpec:
     byte_upload_slots: int = 4
     byte_origin_slots: int = 4
     byte_max_rounds: int = 100_000
+    # flight recorder (both engines); None or enabled=False means the run
+    # is trace-free and must be bit-identical to a pre-telemetry run
+    telemetry: Optional[TelemetrySpec] = None
 
     # ------------------------------------------------------------- validation
     def __post_init__(self) -> None:
@@ -620,6 +630,9 @@ class ScenarioSpec:
             "byte_upload_slots": self.byte_upload_slots,
             "byte_origin_slots": self.byte_origin_slots,
             "byte_max_rounds": self.byte_max_rounds,
+            "telemetry": (
+                self.telemetry.to_dict() if self.telemetry else None
+            ),
         }
 
     @classmethod
@@ -627,7 +640,7 @@ class ScenarioSpec:
         known = {
             "name", "seed", "content", "fabric", "policy", "swarm",
             "topology", "arrivals", "events", "byte_upload_slots",
-            "byte_origin_slots", "byte_max_rounds",
+            "byte_origin_slots", "byte_max_rounds", "telemetry",
         }
         unknown = sorted(set(data) - known)
         if unknown:
@@ -661,6 +674,9 @@ class ScenarioSpec:
                      "byte_max_rounds"):
             if knob in data:
                 kwargs[knob] = int(data[knob])
+        tel = data.get("telemetry")
+        if tel is not None:
+            kwargs["telemetry"] = TelemetrySpec.from_dict(tel)
         return cls(**kwargs)
 
     def to_json(self, indent: int = 1) -> str:
@@ -715,6 +731,13 @@ class ScenarioSpec:
                 )
             if self.policy.fairness == "weighted":
                 fair = FairShareLedger()
+        tel = self.telemetry
+        recorder = (
+            TraceRecorder(enabled=tel.trace)
+            if tel is not None and tel.enabled else None
+        )
+        if recorder is not None and fair is not None:
+            fair.telemetry = recorder
         sims: dict[str, WebSeedSwarmSim] = {}
         for i, man in enumerate(self.content.manifests):
             mi, payload = man.build()
@@ -725,6 +748,7 @@ class ScenarioSpec:
                 net=net, tracker=tracker,
                 shared_nodes=shared_nodes or None,
                 torrent=man.name if multi else None, fair_share=fair,
+                telemetry=recorder,
             )
             sim.add_mirrors(list(self.fabric.mirrors))
             caches = self.fabric.pod_caches
@@ -768,12 +792,21 @@ class ScenarioSpec:
                 targets = [sims[self._manifest(ev.torrent).name]]
             for sim in targets:
                 shared_net.schedule(ev.at, _time_event_cb(sim, ev))
+        shared_tracker = (
+            tracker if multi else next(iter(sims.values())).tracker
+        )
+        sampler = None
+        if tel is not None and tel.enabled and tel.metrics:
+            sampler = MetricsSampler(
+                _time_metrics_source(sims, shared_net, shared_tracker),
+                capacity=tel.capacity, interval=tel.sample_interval,
+            )
         return CompiledScenario(
             spec=self, engine="time", sims=sims,
             net=shared_net,
-            tracker=tracker if multi
-            else next(iter(sims.values())).tracker,
+            tracker=shared_tracker,
             fair=fair,
+            recorder=recorder, sampler=sampler,
         )
 
     # ---- byte domain
@@ -795,6 +828,13 @@ class ScenarioSpec:
             if self.content.multi and self.policy.fairness == "weighted"
             else None
         )
+        tel = self.telemetry
+        recorder = (
+            TraceRecorder(enabled=tel.trace)
+            if tel is not None and tel.enabled else None
+        )
+        if recorder is not None and fair is not None:
+            fair.telemetry = recorder
         topo = self.topology.build() if self.topology is not None else None
         sims: dict[str, LocalSwarm] = {}
         for i, man in enumerate(self.content.manifests):
@@ -829,6 +869,7 @@ class ScenarioSpec:
                 mirrors=list(self.fabric.mirrors),
                 pod_of=pod_of,
                 pod_caches=self.fabric.pod_caches is not None,
+                telemetry=recorder,
             )
             if fair is not None:
                 swarm.scheduler.torrent = man.name
@@ -842,8 +883,15 @@ class ScenarioSpec:
             if ev.kind == "corrupt_once":
                 swarm = sims[self._manifest(ev.torrent).name]
                 swarm.origin_set.origins[ev.target].corrupt_once.add(ev.piece)
+        sampler = None
+        if tel is not None and tel.enabled and tel.metrics:
+            sampler = MetricsSampler(
+                _byte_metrics_source(sims),
+                capacity=tel.capacity, interval=tel.sample_interval,
+            )
         return CompiledScenario(
-            spec=self, engine="byte", sims=sims, fair=fair
+            spec=self, engine="byte", sims=sims, fair=fair,
+            recorder=recorder, sampler=sampler,
         )
 
 
@@ -872,6 +920,88 @@ def _time_event_cb(sim: WebSeedSwarmSim, ev: EventSpec):
     return _fire
 
 
+def _time_metrics_source(sims, net, tracker):
+    """Per-tick gauge closure for the time engine. Pure observation: reads
+    the tracker/netsim state without consuming RNG or mutating anything."""
+    def _source() -> dict[str, float]:
+        metainfos = [s.metainfo for s in sims.values()]
+        st = (
+            tracker.scrape_fleet(metainfos) if len(metainfos) > 1
+            else tracker.scrape(metainfos[0])
+        )
+        gauges = {
+            "seeders": float(st.seeders),
+            "leechers": float(st.leechers),
+            "origin_bytes": float(st.tier_uploaded.get("origin", 0.0)),
+            "cache_bytes": float(st.tier_uploaded.get("pod_cache", 0.0)),
+            "peer_bytes": float(st.tier_uploaded.get("peer", 0.0)),
+            "inflight_hedges": float(
+                sum(len(s.scheduler.hedges) for s in sims.values())
+            ),
+        }
+        mins: list[float] = []
+        means: list[float] = []
+        for s in sims.values():
+            amap = tracker.availability_map(s.metainfo)
+            if amap.size:
+                mins.append(float(amap.min()))
+                means.append(float(amap.mean()))
+        gauges["min_replication"] = min(mins) if mins else 0.0
+        gauges["mean_replication"] = (
+            float(np.mean(means)) if means else 0.0
+        )
+        for lname, link in net.links.items():
+            rate = net.link_rate(link)
+            cap = link.capacity_bps
+            gauges[f"link_{lname}_bps"] = rate
+            gauges[f"link_{lname}_util"] = (
+                rate / cap if np.isfinite(cap) and cap > 0 else 0.0
+            )
+        return gauges
+    return _source
+
+
+def _byte_metrics_source(sims):
+    """Per-round gauge closure for the byte engine (same schema core as the
+    time source so metrics blocks are comparable across engines)."""
+    def _source() -> dict[str, float]:
+        gauges = {
+            "seeders": 0.0, "leechers": 0.0,
+            "origin_bytes": 0.0, "cache_bytes": 0.0, "peer_bytes": 0.0,
+            "inflight_hedges": 0.0,
+        }
+        mins: list[float] = []
+        means: list[float] = []
+        for s in sims.values():
+            gauges["origin_bytes"] += (
+                s.http_uploaded if s.origin_set is not None
+                else s.origin.ledger.uploaded
+            )
+            gauges["cache_bytes"] += s.pod_cache_uploaded
+            gauges["peer_bytes"] += sum(
+                a.ledger.uploaded for a in s.peers.values()
+            )
+            done = sum(1 for pid in s.peers if s._peer_done(pid))
+            gauges["seeders"] += done
+            gauges["leechers"] += len(s.peers) - done
+            gauges["inflight_hedges"] += len(s.scheduler.hedges)
+            base = (
+                len(s.origin_set.live()) if s.origin_set is not None else 1
+            )
+            avail = np.full(s.metainfo.num_pieces, base, dtype=np.int64)
+            for a in s.peers.values():
+                avail += a.bitfield.as_array()
+            if avail.size:
+                mins.append(float(avail.min()))
+                means.append(float(avail.mean()))
+        gauges["min_replication"] = min(mins) if mins else 0.0
+        gauges["mean_replication"] = (
+            float(np.mean(means)) if means else 0.0
+        )
+        return gauges
+    return _source
+
+
 # --------------------------------------------------------------------------- compiled
 
 
@@ -886,13 +1016,17 @@ class CompiledScenario:
     when ``policy.fairness == "none"``).
     """
 
-    def __init__(self, spec, engine, sims, net=None, tracker=None, fair=None):
+    def __init__(self, spec, engine, sims, net=None, tracker=None, fair=None,
+                 recorder=None, sampler=None):
         self.spec = spec
         self.engine = engine
         self.sims = sims
         self.net = net
         self.tracker = tracker
         self.fair = fair
+        # flight recorder (None unless spec.telemetry is enabled)
+        self.recorder = recorder
+        self.sampler = sampler
         # per-torrent origin egress the instant the first torrent finishes
         self._concurrent_snapshot: dict[str, float] = {}
 
@@ -925,7 +1059,22 @@ class CompiledScenario:
         if multi:
             for name, sim in self.sims.items():
                 sim.on_client_complete = self._make_snapshot_hook(name)
-        self.net.run(until=until)
+        if self.sampler is None:
+            self.net.run(until=until)
+        else:
+            # chunked run: advance in sample_interval slices so the sampler
+            # sees the live network mid-flight. Only entered when telemetry
+            # is on — the plain run above keeps telemetry-off runs on the
+            # exact pre-telemetry code path (bit-identical goldens).
+            interval = float(self.sampler.interval)
+            self.sampler.sample(self.net.now)
+            while True:
+                self.net.run(until=min(self.net.now + interval, until))
+                self.sampler.sample(self.net.now)
+                if self.net.now >= until:
+                    break
+                if not self.net.flows and not self.net._timers:
+                    break
         outcomes: dict[str, TorrentOutcome] = {}
         weights = {m.name: m.weight for m in self.spec.content.manifests}
         for name, sim in self.sims.items():
@@ -961,6 +1110,7 @@ class CompiledScenario:
             sim_time=self.net.now, stats=stats,
             concurrent_origin_uploaded=dict(self._concurrent_snapshot),
             jain_fairness=self._jain(weights),
+            trace=self.recorder, metrics=self.sampler,
         )
 
     def _make_snapshot_hook(self, name: str):
@@ -986,6 +1136,10 @@ class CompiledScenario:
         rounds = 0
         idle = 0
         max_idle = LocalSwarm.MAX_IDLE_ROUNDS if len(self.sims) == 1 else 50
+        every = 1
+        if self.sampler is not None:
+            every = max(1, int(round(self.sampler.interval)))
+            self.sampler.sample(0.0)
         while any(not s.complete for s in self.sims.values()):
             if rounds >= spec.byte_max_rounds:
                 raise RuntimeError("scenario did not converge (byte engine)")
@@ -998,13 +1152,15 @@ class CompiledScenario:
                     if ev.kind == "mirror_fail":
                         swarm.fail_mirror(ev.target)
                     elif ev.kind == "mirror_heal":
-                        swarm.origin_set.heal(ev.target)
+                        swarm.heal_mirror(ev.target)
                 pending.remove(ev)
             moved = 0
             for swarm in self.sims.values():
                 if not swarm.complete:
                     moved += swarm.step()
             rounds += 1
+            if self.sampler is not None and rounds % every == 0:
+                self.sampler.sample(float(rounds))
             idle = idle + 1 if moved == 0 else 0
             if idle > max_idle:
                 raise RuntimeError(
@@ -1017,6 +1173,8 @@ class CompiledScenario:
                     n: s.origin.ledger.uploaded
                     for n, s in self.sims.items()
                 }
+        if self.sampler is not None and rounds % every != 0:
+            self.sampler.sample(float(rounds))
         outcomes: dict[str, TorrentOutcome] = {}
         weights = {m.name: m.weight for m in spec.content.manifests}
         for name, swarm in self.sims.items():
@@ -1046,4 +1204,5 @@ class CompiledScenario:
             sim_time=float(rounds), stats=None,
             concurrent_origin_uploaded=dict(self._concurrent_snapshot),
             jain_fairness=self._jain(weights),
+            trace=self.recorder, metrics=self.sampler,
         )

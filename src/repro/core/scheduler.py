@@ -50,6 +50,7 @@ import numpy as np
 
 from . import piece_selection as ps
 from .metainfo import MetaInfo
+from .telemetry import NULL_RECORDER
 
 # --------------------------------------------------------------------------- spec (de)serialization
 
@@ -257,6 +258,8 @@ class FairShareLedger:
         self._dormant: set[str] = set()
         # fairness denials per torrent (telemetry; origin counters untouched)
         self.deferred: dict[str, int] = {}
+        # flight recorder (scenario builder swaps in a live one)
+        self.telemetry = NULL_RECORDER
 
     def register(
         self, torrent: str, weight: float, live: Callable[[], bool]
@@ -316,6 +319,11 @@ class FairShareLedger:
         if mine - floor <= nbytes / self.weights[torrent]:
             return True
         self.deferred[torrent] += 1
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "admission_deferred", torrent=torrent, origin=origin_name,
+                nbytes=float(nbytes), info="fairness",
+            )
         return False
 
     def record(self, origin_name: str, torrent: str, nbytes: float) -> None:
@@ -330,6 +338,11 @@ class FairShareLedger:
         self._service[key] = (
             self._service.get(key, 0.0) + float(nbytes) / self.weights[torrent]
         )
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "fair_service", torrent=torrent, origin=origin_name,
+                nbytes=float(nbytes), value=self._service[key],
+            )
 
     def granted_by_torrent(self) -> dict[str, float]:
         """Total origin bytes granted per torrent, across all origins."""
@@ -496,6 +509,8 @@ class TransferScheduler:
         self.hedges: dict[tuple[str, int], set[str]] = {}
         # verified per-fetch latencies (seconds), event order
         self.fetch_latencies: list[float] = []
+        # flight recorder (engines swap in a live one when telemetry is on)
+        self.telemetry = NULL_RECORDER
 
     # ------------------------------------------------------------- entry point
     def next_actions(self, view: ClientView) -> list[Request]:
@@ -698,6 +713,11 @@ class TransferScheduler:
         if not self.fair_allow(origin.name, nbytes):
             return False
         if not origin.try_admit():
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "admission_deferred", torrent=self.torrent,
+                    origin=origin.name, nbytes=float(nbytes), info="capacity",
+                )
             return False
         self.fair_record(origin.name, nbytes)
         return True

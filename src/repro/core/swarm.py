@@ -27,6 +27,7 @@ from .peer import Ledger, PeerAgent
 from .scheduler import (
     ClientView, TransferScheduler, percentiles, spec_from_dict, spec_to_dict,
 )
+from .telemetry import NULL_RECORDER, TraceRecorder
 from .topology import ClusterTopology
 from .tracker import SwarmStats, Tracker
 
@@ -100,6 +101,11 @@ class SwarmResult:
     fetch_latencies: list[float] = dataclasses.field(default_factory=list)
     # ^ verified per-piece fetch latencies (request start -> accept), event
     #   order, across all clients and both serving paths
+    # peer -> seconds from arrival to first accepted piece. Trace-derived:
+    # populated only when the run records a trace (empty otherwise).
+    first_byte_latencies: dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def origin_peer_uploaded(self) -> float:
@@ -117,12 +123,29 @@ class SwarmResult:
             return 0.0
         return float(np.mean(list(self.completion_time.values())))
 
-    def mean_download_speed(self, size_bytes: float) -> float:
+    def mean_download_speed(
+        self, size_bytes: float, *, exclude_first_byte: bool = False
+    ) -> float:
+        """Mean per-client speed. ``exclude_first_byte`` subtracts each
+        client's trace-derived first-byte latency from its completion time
+        (steady-state transfer rate rather than end-to-end); it requires a
+        traced run and raises when no first-byte latencies were recorded."""
         if not self.completion_time:
             raise ValueError(
                 "mean_download_speed: no client has completed a download"
             )
-        t = self.mean_completion_time()
+        if exclude_first_byte:
+            if not self.first_byte_latencies:
+                raise ValueError(
+                    "mean_download_speed: exclude_first_byte needs "
+                    "first_byte_latencies (run with telemetry tracing on)"
+                )
+            t = float(np.mean([
+                max(dt - self.first_byte_latencies.get(pid, 0.0), 0.0)
+                for pid, dt in self.completion_time.items()
+            ]))
+        else:
+            t = self.mean_completion_time()
         return size_bytes / t if t > 0 else float("inf")
 
     def completion_percentiles(
@@ -135,6 +158,19 @@ class SwarmResult:
                 "completion_percentiles: no client has completed a download"
             )
         return percentiles(self.completion_time.values(), ps)
+
+    def first_byte_percentiles(
+        self, ps: Sequence[float] = (50, 95, 99)
+    ) -> dict[str, float]:
+        """Percentiles of the trace-derived per-client first-byte latency
+        (arrival -> first accepted piece). Raises when the run recorded no
+        trace (``first_byte_latencies`` is empty)."""
+        if not self.first_byte_latencies:
+            raise ValueError(
+                "first_byte_percentiles: no first-byte latencies recorded "
+                "(run with telemetry tracing on)"
+            )
+        return percentiles(self.first_byte_latencies.values(), ps)
 
     def fetch_latency_histogram(
         self, bins: int = 16
@@ -190,11 +226,15 @@ class SwarmSim:
         *,
         net: Optional[FluidNetwork] = None,
         tracker: Optional[Tracker] = None,
+        telemetry: Optional[TraceRecorder] = None,
     ):
         """``net``/``tracker`` inject shared infrastructure for multi-torrent
         runs (:class:`repro.core.scenario.MultiTorrentSim`): every torrent's
         flows then contend on one fluid network and announce to one tracker.
-        Default (None): the engine owns both — the historical behaviour."""
+        Default (None): the engine owns both — the historical behaviour.
+        ``telemetry`` is a shared flight recorder (None => disabled; a
+        disabled recorder costs one attribute check per emission site and
+        leaves results bit-identical to an untraced run)."""
         self.metainfo = metainfo
         self.cfg = cfg or SwarmConfig()
         self.rng = np.random.default_rng(seed)
@@ -213,6 +253,10 @@ class SwarmSim:
         self.scheduler = TransferScheduler(
             metainfo, None, endgame=self.cfg.endgame
         )
+        self.telemetry = telemetry if telemetry is not None else NULL_RECORDER
+        if self.telemetry.enabled:
+            self.telemetry.clock = lambda: self.net.now
+        self.scheduler.telemetry = self.telemetry
         self.agents: dict[str, PeerAgent] = {}
         self._origin_payload = origin_payload
         self._tick_scheduled = False
@@ -277,6 +321,7 @@ class SwarmSim:
             self.metainfo, name, uploaded=0, downloaded=0,
             event="started", now=self.net.now, is_origin=True,
         )
+        self.tracker.attach_bitfield(self.metainfo, name, agent.bitfield)
         return agent
 
     def add_peer(self, spec: PeerSpec) -> None:
@@ -300,6 +345,14 @@ class SwarmSim:
             self.metainfo, spec.peer_id, uploaded=0, downloaded=0,
             event="started", now=now, want_peers=self.cfg.max_neighbors,
         )
+        self.tracker.attach_bitfield(
+            self.metainfo, spec.peer_id, agent.bitfield
+        )
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_join", t=now, torrent=self.metainfo.name,
+                client=spec.peer_id,
+            )
         for other_id in self._filter_peer_list(agent, peer_list):
             other = self.agents.get(other_id)
             if other is None or other.departed:
@@ -366,15 +419,22 @@ class SwarmSim:
             if src.node is None or src.node.failed:
                 continue
             agent.in_flight.setdefault(req.piece, req.src)
+            size = self.metainfo.piece_size(req.piece)
             self.net.start_flow(
                 src.node,
                 agent.node,
-                self.metainfo.piece_size(req.piece),
+                size,
                 tag=(req.src, agent.peer_id, req.piece),
                 on_complete=self._on_piece_done,
                 on_abort=self._on_piece_abort,
                 links=self._links_between(req.src, agent.peer_id),
             )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "request_issued", t=now, torrent=self.metainfo.name,
+                    client=agent.peer_id, origin=req.src, piece=req.piece,
+                    nbytes=float(size), info="peer",
+                )
 
     def _on_piece_done(self, flow: Flow, now: float) -> None:
         src_id, dst_id, piece = flow.tag
@@ -393,6 +453,19 @@ class SwarmSim:
             dst_id, piece, accepted=accepted,
             latency=(now - flow.start_time) if accepted else None,
         )
+        if self.telemetry.enabled:
+            if accepted:
+                self.telemetry.emit(
+                    "piece_done", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=src_id, piece=piece,
+                    nbytes=float(flow.size), info="peer",
+                )
+            else:
+                self.telemetry.emit(
+                    "piece_failed", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=src_id, piece=piece,
+                    info="verify" if dst.last_reject_verify else "duplicate",
+                )
         if src is not None and not src.departed:
             src.record_served(piece, dst_id, now)
             self._announce_counters(src, now)
@@ -428,6 +501,11 @@ class SwarmSim:
                 uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
                 event="completed", now=now,
             )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "peer_complete", t=now, torrent=self.metainfo.name,
+                    client=dst_id,
+                )
             if self.on_client_complete is not None:
                 self.on_client_complete(self, dst, now)
             linger = getattr(dst, "seed_linger", None)
@@ -442,6 +520,11 @@ class SwarmSim:
         if dst is None or dst.departed:
             return
         self.scheduler.on_piece_failed(dst_id, piece)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "piece_failed", t=now, torrent=self.metainfo.name,
+                client=dst_id, origin=src_id, piece=piece, info="abort",
+            )
         if dst.in_flight.get(piece) == src_id:
             del dst.in_flight[piece]
         nb = dst.neighbors.get(src_id)
@@ -461,6 +544,13 @@ class SwarmSim:
         if agent.departed:
             return
         agent.departed = True
+        if self.telemetry.enabled and not agent.is_origin:
+            self.telemetry.emit(
+                "peer_churn", t=now, torrent=self.metainfo.name,
+                client=agent.peer_id,
+                info="post_complete" if agent.completed_at is not None
+                else "mid_download",
+            )
         self.tracker.announce(
             self.metainfo, agent.peer_id,
             uploaded=agent.ledger.uploaded, downloaded=agent.ledger.downloaded,
@@ -495,6 +585,13 @@ class SwarmSim:
             if not a.is_origin and a.completed_at is not None:
                 comp[pid] = a.completed_at - a.arrived_at
                 fin[pid] = a.completed_at
+        first_byte: dict[str, float] = {}
+        if self.telemetry.enabled:
+            first_byte = self.telemetry.first_byte_latencies(
+                self.metainfo.name,
+                {pid: a.arrived_at for pid, a in self.agents.items()
+                 if not a.is_origin},
+            )
         return SwarmResult(
             sim_time=self.net.now,
             stats=stats,
@@ -511,6 +608,7 @@ class SwarmSim:
             ),
             hedge_cancelled_bytes=stats.hedge_cancelled_bytes,
             fetch_latencies=list(self.scheduler.fetch_latencies),
+            first_byte_latencies=first_byte,
         )
 
 
@@ -542,6 +640,7 @@ class LocalSwarm:
         mirrors=None,
         pod_of: Optional[dict[str, int]] = None,
         pod_caches: bool = False,
+        telemetry: Optional[TraceRecorder] = None,
     ):
         """``needed``: optional per-peer bool mask (num_pieces,) restricting
         which pieces that peer must obtain (partitioned ingest — each data-
@@ -622,12 +721,23 @@ class LocalSwarm:
             metainfo, webseed, select_policy=policy,
             origin_set=self.origin_set,
         )
+        # flight recorder: the byte engine stamps events with the round
+        # counter (its unit of "time"); a shared multi-torrent recorder
+        # keeps the first swarm's clock for scheduler-side emissions
+        self.telemetry = telemetry if telemetry is not None else NULL_RECORDER
+        if self.telemetry.enabled and self.telemetry.clock is None:
+            self.telemetry.clock = lambda: float(self.rounds)
+        self.scheduler.telemetry = self.telemetry
         self.peers: dict[str, PeerAgent] = {}
         for i, pid in enumerate(peer_ids):
             self.peers[pid] = PeerAgent(
                 pid, metainfo, np.random.default_rng(seed + 2 + i),
                 policy=policy, store={},
             )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "peer_join", t=0.0, torrent=metainfo.name, client=pid,
+                )
         origin_in_mesh = webseed is None or webseed.serve_peer_protocol
         everyone = dict(self.peers)
         if origin_in_mesh:
@@ -647,7 +757,23 @@ class LocalSwarm:
         """Fault injection: mark one mirror dead; range reads fail over."""
         if self.origin_set is None:
             raise ValueError("no web-seed mirrors configured")
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "mirror_fail", t=float(self.rounds),
+                torrent=self.metainfo.name, origin=name,
+            )
         self.origin_set.fail(name)
+
+    def heal_mirror(self, name: str) -> None:
+        """Fault injection: bring a dead mirror back into the rotation."""
+        if self.origin_set is None:
+            raise ValueError("no web-seed mirrors configured")
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "mirror_heal", t=float(self.rounds),
+                torrent=self.metainfo.name, origin=name,
+            )
+        self.origin_set.heal(name)
 
     def _agent(self, pid: str) -> PeerAgent:
         return self.origin if pid == "origin" else self.peers[pid]
@@ -719,6 +845,7 @@ class LocalSwarm:
         if cache.holds(piece):
             return True
         size = self.metainfo.piece_size(piece)
+        tel = self.telemetry
         for name in self.origin_set.ranked():
             if name in cache.bad_mirrors.get(piece, ()):
                 continue
@@ -726,13 +853,31 @@ class LocalSwarm:
             data = mirror.read_piece(piece)   # mirror egress, even if bad
             self.origin.record_served(piece, cache.name, float(self.rounds))
             self._count_cross_pod(name, cache.name, size)  # fills ride the spine
+            if tel.enabled:
+                tel.emit(
+                    "request_issued", t=float(self.rounds),
+                    torrent=self.metainfo.name, client=cache.name,
+                    origin=name, piece=piece, nbytes=size, info="fill",
+                )
             if data is None:
                 continue
             if not self.metainfo.verify_piece(piece, data):
                 cache.fill_wasted += size
                 cache.bad_mirrors.setdefault(piece, set()).add(name)
+                if tel.enabled:
+                    tel.emit(
+                        "mirror_failover", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=cache.name,
+                        origin=name, piece=piece, info="verify",
+                    )
                 continue                       # verified failover: next mirror
             cache.commit(piece, data)
+            if tel.enabled:
+                tel.emit(
+                    "cache_fill", t=float(self.rounds),
+                    torrent=self.metainfo.name, client=cache.name,
+                    origin=name, piece=piece, nbytes=size,
+                )
             return True
         if cache.bad_mirrors.get(piece):
             # every live mirror has served bad bytes for this piece: heal
@@ -765,12 +910,20 @@ class LocalSwarm:
             return None
         piece = req.piece
         size = self.metainfo.piece_size(piece)
+        tel = self.telemetry
         for origin in req.targets:
             if isinstance(origin, PodCacheOrigin):
                 if not self._fill_cache(origin, piece):
                     continue
                 data = origin.read_piece(piece)   # cache egress + fault hook
                 # cache -> client stays inside the pod: no cross-pod bytes
+                if tel.enabled:
+                    tel.emit(
+                        "request_issued", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, nbytes=size,
+                        info="http",
+                    )
             else:
                 # cross-torrent fairness: a torrent leading its weighted
                 # share defers this mirror read to the deficited torrent
@@ -799,12 +952,39 @@ class LocalSwarm:
                 self.scheduler.fair_record(origin.name, size)
                 self.origin.record_served(piece, pid, float(self.rounds))
                 self._count_cross_pod(origin.name, pid, size)
+                if tel.enabled:
+                    tel.emit(
+                        "request_issued", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, nbytes=size,
+                        info="http",
+                    )
             if me.accept_piece(
                 piece, f"{origin.name}::http", data, float(self.rounds)
             ):
+                if tel.enabled:
+                    tel.emit(
+                        "piece_done", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, nbytes=size,
+                        info="http",
+                    )
                 self._commit_gain(pid, piece)
                 return piece
+            if tel.enabled:
+                tel.emit(
+                    "piece_failed", t=float(self.rounds),
+                    torrent=self.metainfo.name, client=pid,
+                    origin=origin.name, piece=piece,
+                    info="verify" if me.last_reject_verify else "duplicate",
+                )
             if me.last_reject_verify:
+                if tel.enabled and not isinstance(origin, PodCacheOrigin):
+                    tel.emit(
+                        "mirror_failover", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, info="verify",
+                    )
                 continue  # bad bytes from this endpoint: fail over to the next
             return None
         return None
@@ -818,22 +998,43 @@ class LocalSwarm:
         (exactly once — the loser is never offered to the ledger) and the
         loser's bytes are ledgered as ``hedge_cancelled``."""
         size = self.metainfo.piece_size(piece)
+        tel = self.telemetry
         reads = []
-        for origin in pair:
+        for i, origin in enumerate(pair):
             data = origin.read_piece(piece)
             self.scheduler.fair_record(origin.name, size)
             self._count_cross_pod(origin.name, pid, size)
             reads.append((origin, data))
+            if tel.enabled:
+                tel.emit(
+                    "request_issued" if i == 0 else "hedge_fired",
+                    t=float(self.rounds), torrent=self.metainfo.name,
+                    client=pid, origin=origin.name, piece=piece, nbytes=size,
+                    info="http",
+                )
         got = None
         for origin, data in reads:
             if got is not None:
                 origin.hedge_cancelled += size
+                if tel.enabled:
+                    tel.emit(
+                        "hedge_cancelled", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, nbytes=size,
+                    )
                 continue
             self.origin.record_served(piece, pid, float(self.rounds))
             if me.accept_piece(
                 piece, f"{origin.name}::http", data, float(self.rounds)
             ):
                 got = origin
+                if tel.enabled:
+                    tel.emit(
+                        "piece_done", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                        origin=origin.name, piece=piece, nbytes=size,
+                        info="http",
+                    )
                 self._commit_gain(pid, piece)
         return piece if got is not None else None
 
@@ -889,6 +1090,14 @@ class LocalSwarm:
                     data = src.read_piece(piece)
                     if data is None:
                         continue
+                    if self.telemetry.enabled:
+                        self.telemetry.emit(
+                            "request_issued", t=float(self.rounds),
+                            torrent=self.metainfo.name, client=pid,
+                            origin=oid, piece=piece,
+                            nbytes=float(self.metainfo.piece_size(piece)),
+                            info="peer",
+                        )
                     if me.accept_piece(piece, oid, data, float(self.rounds)):
                         src.record_served(piece, pid, float(self.rounds))
                         self._count_cross_pod(
@@ -898,6 +1107,22 @@ class LocalSwarm:
                         moved += 1
                         got = piece
                         self._commit_gain(pid, piece)
+                        if self.telemetry.enabled:
+                            self.telemetry.emit(
+                                "piece_done", t=float(self.rounds),
+                                torrent=self.metainfo.name, client=pid,
+                                origin=oid, piece=piece,
+                                nbytes=float(self.metainfo.piece_size(piece)),
+                                info="peer",
+                            )
+                    elif self.telemetry.enabled:
+                        self.telemetry.emit(
+                            "piece_failed", t=float(self.rounds),
+                            torrent=self.metainfo.name, client=pid,
+                            origin=oid, piece=piece,
+                            info="verify" if me.last_reject_verify
+                            else "duplicate",
+                        )
                     break
                 if got is None and self.web_origin is not None and http_budget > 0:
                     got = self._http_fetch(me, pid)
@@ -916,6 +1141,11 @@ class LocalSwarm:
         for pid in self.peers:
             if pid not in self.completed_round and self._peer_done(pid):
                 self.completed_round[pid] = self.rounds
+                if self.telemetry.enabled:
+                    self.telemetry.emit(
+                        "peer_complete", t=float(self.rounds),
+                        torrent=self.metainfo.name, client=pid,
+                    )
 
     def completion_percentiles(
         self, ps: Sequence[float] = (50, 95, 99)

@@ -99,6 +99,8 @@ class Tracker:
         self.topology = topology
         self.same_pod_frac = same_pod_frac
         self._swarms: dict[bytes, dict[str, PeerRecord]] = {}
+        # infohash -> peer_id -> live Bitfield view (availability accounting)
+        self._bitfields: dict[bytes, dict[str, object]] = {}
 
     # ------------------------------------------------------------- registration
     def register(self, metainfo: MetaInfo) -> None:
@@ -168,6 +170,43 @@ class Tracker:
             idx = self.rng.choice(len(candidates), size=want_peers, replace=False)
             candidates = [candidates[i] for i in sorted(idx)]
         return candidates
+
+    # ------------------------------------------------------------- availability
+    def attach_bitfield(
+        self, metainfo: MetaInfo, peer_id: str, bitfield
+    ) -> None:
+        """Register a live bitfield view for :meth:`availability_map`.
+
+        Engines attach each agent's :class:`~repro.core.bitfield.Bitfield`
+        at announce time; the tracker reads it in place (no copies), so the
+        availability view tracks the swarm for free. In a real deployment
+        this is the HAVE/bitfield message stream the tracker or a scraping
+        monitor already observes.
+        """
+        self._swarm(metainfo)  # raises KeyError for unknown torrents
+        self._bitfields.setdefault(metainfo.info_hash, {})[peer_id] = bitfield
+
+    def availability_map(
+        self, metainfo: MetaInfo, *, include_origins: bool = True
+    ) -> np.ndarray:
+        """Piece -> live replica count (int64, length ``num_pieces``).
+
+        Counts every attached bitfield whose peer record is present and has
+        not left the swarm. The sampler reads min/mean replication from
+        this; the self-healing roadmap item will drive re-seeding from its
+        minima. Peers announced without an attached bitfield contribute
+        nothing (the tracker cannot see what it was never shown).
+        """
+        swarm = self._swarm(metainfo)
+        out = np.zeros(metainfo.num_pieces, dtype=np.int64)
+        for peer_id, bf in self._bitfields.get(metainfo.info_hash, {}).items():
+            rec = swarm.get(peer_id)
+            if rec is None or rec.left:
+                continue
+            if not include_origins and (rec.is_origin or rec.is_web_seed):
+                continue
+            out += bf.as_array()
+        return out
 
     # ------------------------------------------------------------- mirrors
     def mirror_list(self, metainfo: MetaInfo, peer_id: str) -> list[str]:

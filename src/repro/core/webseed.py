@@ -440,16 +440,18 @@ class WebSeedSwarmSim(SwarmSim):
         shared_nodes: Optional[dict] = None,
         torrent: Optional[str] = None,
         fair_share=None,
+        telemetry=None,
     ):
         """``net``/``tracker``/``shared_nodes`` wire this torrent into a
         multi-torrent fabric (one fluid network; mirror *nodes* shared so
         every torrent's range flows contend on the same physical uplinks);
         ``torrent``/``fair_share`` identify it to the cross-torrent
-        admission arbiter. All default to the single-torrent behaviour."""
+        admission arbiter. ``telemetry`` is a (possibly shared) flight
+        recorder. All default to the single-torrent behaviour."""
         super().__init__(
             metainfo, cfg, seed, topology=topology,
             origin_payload=origin_payload, same_pod_frac=same_pod_frac,
-            net=net, tracker=tracker,
+            net=net, tracker=tracker, telemetry=telemetry,
         )
         self.policy = policy or OriginPolicy()
         self.origin_set = OriginSet(metainfo, policy=self.policy)
@@ -462,6 +464,7 @@ class WebSeedSwarmSim(SwarmSim):
             origin_set=self.origin_set,
             torrent=torrent, fair_share=fair_share,
         )
+        self.scheduler.telemetry = self.telemetry
         self.caches: dict[int, PodCacheOrigin] = {}
         self._cache_by_name: dict[str, PodCacheOrigin] = {}
         self.origin_id: Optional[str] = None      # primary mirror (back-compat)
@@ -506,6 +509,7 @@ class WebSeedSwarmSim(SwarmSim):
             event="started", now=self.net.now, is_origin=True,
             is_web_seed=True, peer_protocol=pol.serve_peer_protocol,
         )
+        self.tracker.attach_bitfield(self.metainfo, spec.name, agent.bitfield)
         return agent
 
     def add_mirrors(self, specs: Sequence[MirrorSpec]) -> list[PeerAgent]:
@@ -564,6 +568,12 @@ class WebSeedSwarmSim(SwarmSim):
         mirror; the tracker stops handing it out."""
         if name not in self.origin_set.origins:
             raise KeyError(f"unknown mirror {name!r}")
+        if self.telemetry.enabled:
+            # before the flow aborts: the trace reads fail -> failovers
+            self.telemetry.emit(
+                "mirror_fail", t=self.net.now, torrent=self.metainfo.name,
+                origin=name,
+            )
         self.scheduler.on_origin_dead(name)
         agent = self.agents.get(name)
         if agent is not None and not agent.departed:
@@ -577,6 +587,11 @@ class WebSeedSwarmSim(SwarmSim):
         scenario event timeline exercise)."""
         if name not in self.origin_set.origins:
             raise KeyError(f"unknown mirror {name!r}")
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "mirror_heal", t=self.net.now, torrent=self.metainfo.name,
+                origin=name,
+            )
         self.origin_set.heal(name)
         agent = self.agents.get(name)
         if agent is not None:
@@ -694,8 +709,23 @@ class WebSeedSwarmSim(SwarmSim):
             if origin.name in bad:
                 continue
             servable = True
+            size = float(self.metainfo.piece_size(piece))
             if isinstance(origin, PodCacheOrigin):
                 if not origin.try_admit():
+                    if self.telemetry.enabled:
+                        self.telemetry.emit(
+                            "admission_deferred", t=now,
+                            torrent=self.metainfo.name,
+                            client=agent.peer_id, origin=origin.name,
+                            piece=piece, nbytes=size, info="capacity",
+                        )
+                        if self.policy.cache_spillover:
+                            self.telemetry.emit(
+                                "cache_spill", t=now,
+                                torrent=self.metainfo.name,
+                                client=agent.peer_id, origin=origin.name,
+                                piece=piece, nbytes=size,
+                            )
                     continue
                 if not origin.holds(piece) and piece not in origin.fill_from:
                     if not self._start_fill(origin, piece, now):
@@ -707,6 +737,12 @@ class WebSeedSwarmSim(SwarmSim):
                 self._http_outstanding[agent.peer_id] = (
                     self._http_outstanding.get(agent.peer_id, 0) + 1
                 )
+                if self.telemetry.enabled:
+                    self.telemetry.emit(
+                        "request_issued", t=now, torrent=self.metainfo.name,
+                        client=agent.peer_id, origin=origin.name,
+                        piece=piece, nbytes=size, info="http",
+                    )
                 if origin.holds(piece):
                     self._start_http_flow(origin, agent, piece, now)
                 else:
@@ -720,6 +756,12 @@ class WebSeedSwarmSim(SwarmSim):
             self._http_outstanding[agent.peer_id] = (
                 self._http_outstanding.get(agent.peer_id, 0) + 1
             )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "request_issued", t=now, torrent=self.metainfo.name,
+                    client=agent.peer_id, origin=origin.name, piece=piece,
+                    nbytes=size, info="http",
+                )
             self._start_http_flow(origin, agent, piece, now)
             hedge = self.scheduler.plan_hedge(agent, piece, origin, targets)
             if hedge is not None:
@@ -833,6 +875,12 @@ class WebSeedSwarmSim(SwarmSim):
             self._http_outstanding[dst.peer_id] = (
                 self._http_outstanding.get(dst.peer_id, 0) + 1
             )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "hedge_fired", t=t, torrent=self.metainfo.name,
+                    client=dst.peer_id, origin=hedge.name, piece=piece,
+                    nbytes=float(self.metainfo.piece_size(piece)),
+                )
             self._start_http_flow(hedge, dst, piece, t, expect=primary_tag)
 
         if self.policy.hedge_delay > 0:
@@ -889,11 +937,23 @@ class WebSeedSwarmSim(SwarmSim):
                 continue
             cache.fill_from[piece] = name
             spec = self.origin_set.specs[name]
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "request_issued", t=now, torrent=self.metainfo.name,
+                    client=cache.name, origin=name, piece=piece,
+                    nbytes=float(size), info="fill",
+                )
 
             def _start(t: float, name=name, magent=magent, mirror=mirror) -> None:
                 if magent.node.failed:
                     mirror.release()
                     cache.fill_from.pop(piece, None)
+                    if self.telemetry.enabled:
+                        self.telemetry.emit(
+                            "mirror_failover", t=t,
+                            torrent=self.metainfo.name, client=cache.name,
+                            origin=name, piece=piece, info="death",
+                        )
                     if piece in cache.filling and \
                             not self._start_fill(cache, piece, t):
                         self._drop_fill_waiters(cache, piece, t)
@@ -947,11 +1007,23 @@ class WebSeedSwarmSim(SwarmSim):
             # re-fetch from the next ranked mirror (verified failover)
             cache.fill_wasted += self.metainfo.piece_size(piece)
             cache.bad_mirrors.setdefault(piece, set()).add(mname)
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "mirror_failover", t=now, torrent=self.metainfo.name,
+                    client=cache.name, origin=mname, piece=piece,
+                    info="verify",
+                )
             if piece in cache.filling and \
                     not self._start_fill(cache, piece, now):
                 self._drop_fill_waiters(cache, piece, now)
             return
         cache.commit(piece, data)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "cache_fill", t=now, torrent=self.metainfo.name,
+                client=cache.name, origin=mname, piece=piece,
+                nbytes=float(flow.size),
+            )
         self._announce_cache(cache, now)
         for dst_id in cache.filling.pop(piece, []):
             self._serve_from_cache(cache, dst_id, piece, now)
@@ -964,6 +1036,15 @@ class WebSeedSwarmSim(SwarmSim):
         cache.fill_from.pop(piece, None)
         if cache.holds(piece) or piece not in cache.filling:
             return
+        if self.telemetry.enabled:
+            magent = self.agents.get(mname)
+            if magent is not None and magent.node is not None \
+                    and magent.node.failed:
+                self.telemetry.emit(
+                    "mirror_failover", t=now, torrent=self.metainfo.name,
+                    client=cache.name, origin=mname, piece=piece,
+                    info="death",
+                )
         if not self._start_fill(cache, piece, now):
             self._drop_fill_waiters(cache, piece, now)
 
@@ -988,6 +1069,11 @@ class WebSeedSwarmSim(SwarmSim):
     def _schedule_retry(self, agent: PeerAgent, now: float) -> None:
         if not self.scheduler.schedule_backoff(agent.peer_id):
             return
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "retry", t=now, torrent=self.metainfo.name,
+                client=agent.peer_id, value=self.policy.backoff,
+            )
 
         def _retry(t: float, a: PeerAgent = agent) -> None:
             self.scheduler.backoff_fired(a.peer_id)
@@ -1047,6 +1133,12 @@ class WebSeedSwarmSim(SwarmSim):
             # hedge pair photo-finish: both mirrors delivered in the same
             # tick — the full duplicate is the hedge's cancelled cost
             origin.hedge_cancelled += float(flow.size)
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "hedge_cancelled", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=name, piece=piece,
+                    nbytes=float(flow.size), info="photo_finish",
+                )
         if (
             not accepted and owner not in (None, src_tag)
             and piece not in dst.in_flight
@@ -1077,6 +1169,26 @@ class WebSeedSwarmSim(SwarmSim):
             verify_failed=(not corrupt and dst.last_reject_verify),
             latency=req_latency if accepted else None,
         )
+        if self.telemetry.enabled:
+            if accepted:
+                self.telemetry.emit(
+                    "piece_done", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=name, piece=piece,
+                    nbytes=float(flow.size), info="http",
+                )
+            else:
+                self.telemetry.emit(
+                    "piece_failed", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=name, piece=piece,
+                    info="verify" if dst.last_reject_verify else "duplicate",
+                )
+                if not corrupt and dst.last_reject_verify and cache is None:
+                    # this mirror served bad bytes: the relaunch reroutes
+                    self.telemetry.emit(
+                        "mirror_failover", t=now, torrent=self.metainfo.name,
+                        client=dst_id, origin=name, piece=piece,
+                        info="verify",
+                    )
         if accepted:
             self._on_piece_accepted(dst, piece, now)
         # rejected (corrupt range) pieces are back in the missing set; the
@@ -1095,9 +1207,32 @@ class WebSeedSwarmSim(SwarmSim):
             # the losing half of a hedge pair, cancelled mid-range: its
             # partial bytes are the insurance premium, ledgered separately
             origin.hedge_cancelled += flow.transferred
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "hedge_cancelled", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=name, piece=piece,
+                    nbytes=float(flow.transferred), info="mid_range",
+                )
             if self._cache_by_name.get(name) is None:
                 self._announce_mirror(name, now)
         self.scheduler.on_piece_failed(dst_id, piece)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "piece_failed", t=now, torrent=self.metainfo.name,
+                client=dst_id, origin=name, piece=piece, info="abort",
+            )
+            if self._cache_by_name.get(name) is None \
+                    and not dst.bitfield.has(piece):
+                magent = self.agents.get(name)
+                if magent is not None and magent.node is not None \
+                        and magent.node.failed:
+                    # the serving mirror died under this range request: the
+                    # relaunch below is the client's failover
+                    self.telemetry.emit(
+                        "mirror_failover", t=now, torrent=self.metainfo.name,
+                        client=dst_id, origin=name, piece=piece,
+                        info="death",
+                    )
         if dst.in_flight.get(piece) == src_tag:
             del dst.in_flight[piece]
             if was_hedged and not dst.bitfield.has(piece):

@@ -1,0 +1,352 @@
+"""Flight recorder: recorder/exporters, sampler, checker, engine wiring."""
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArrivalSpec,
+    ContentSpec,
+    EventSpec,
+    FabricSpec,
+    ManifestSpec,
+    MetricsSampler,
+    MirrorSpec,
+    NULL_RECORDER,
+    OriginPolicy,
+    ScenarioSpec,
+    TRACE_EVENT_KINDS,
+    TelemetrySpec,
+    TraceChecker,
+    TraceEvent,
+    TraceRecorder,
+)
+
+SCENARIO_DIR = Path(__file__).resolve().parent.parent / "benchmarks" / "scenarios"
+COMMITTED = [
+    "webseed_hybrid.json", "mirror_fabric.json", "tail_latency.json",
+    "multi_torrent_fairness.json",
+]
+
+
+def webseed_spec(*, payload="size_only", telemetry=None, **over) -> ScenarioSpec:
+    """A tiny two-mirror HTTP+swarm hybrid exercising every tier."""
+    base = dict(
+        name="t",
+        content=ContentSpec(manifests=(
+            ManifestSpec("ds", 16 * 16384, 16384, payload=payload),
+        )),
+        fabric=FabricSpec(mirrors=(
+            MirrorSpec("origin0", up_bps=8e6, weight=2.0),
+            MirrorSpec("origin1", up_bps=8e6, weight=1.0),
+        )),
+        arrivals=(ArrivalSpec(kind="flash", n=6, prefix="peer",
+                              up_bps=4e6, down_bps=8e6),),
+        policy=OriginPolicy(swarm_fraction=0.5, http_fallback=True),
+        seed=5,
+        telemetry=telemetry,
+    )
+    base.update(over)
+    return ScenarioSpec(**base)
+
+
+# ------------------------------------------------------------------- recorder
+
+
+def test_recorder_validates_kind_and_defaults_clock():
+    rec = TraceRecorder(clock=lambda: 7.5)
+    rec.emit("peer_join", torrent="a", client="p0")
+    rec.emit("piece_done", t=9.0, torrent="a", client="p0", piece=3)
+    assert [e.t for e in rec.events] == [7.5, 9.0]
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        rec.emit("not_a_kind")
+
+
+def test_disabled_recorder_is_inert():
+    assert not NULL_RECORDER.enabled
+    NULL_RECORDER.emit("peer_join", client="p0")
+    assert NULL_RECORDER.events == []
+
+
+def test_event_to_dict_omits_none_tags():
+    ev = TraceEvent(t=1.0, kind="mirror_fail", origin="m0")
+    assert ev.to_dict() == {"t": 1.0, "kind": "mirror_fail", "origin": "m0"}
+
+
+def test_empty_trace_export_writes_no_file(tmp_path):
+    rec = TraceRecorder()
+    assert rec.to_jsonl(tmp_path / "x.jsonl") is None
+    assert rec.to_chrome(tmp_path / "x.json") is None
+    assert list(tmp_path.iterdir()) == []
+    sampler = MetricsSampler(lambda: {"g": 0.0}, capacity=4)
+    assert sampler.to_json(tmp_path / "m.json") is None
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_chrome_export_pairs_requests_with_resolutions(tmp_path):
+    rec = TraceRecorder()
+    rec.emit("peer_join", t=0.0, torrent="a", client="p0")
+    rec.emit("request_issued", t=1.0, torrent="a", client="p0",
+             origin="m0", piece=2)
+    rec.emit("piece_done", t=3.0, torrent="a", client="p0",
+             origin="m0", piece=2)
+    rec.emit("request_issued", t=4.0, torrent="a", client="p0",
+             origin="m0", piece=5)   # never resolves
+    path = rec.to_chrome(tmp_path / "trace.json")
+    doc = json.loads(path.read_text())
+    complete = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(complete) == 1
+    assert complete[0]["ts"] == 1.0 * 1e6
+    assert complete[0]["dur"] == 2.0 * 1e6
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert {e["name"] for e in instants} == {"peer_join", "request_issued"}
+
+
+# ------------------------------------------------------------------- spec
+
+
+def test_telemetry_spec_round_trip_and_validation():
+    spec = TelemetrySpec(enabled=True, sample_interval=2.5, capacity=16)
+    assert TelemetrySpec.from_dict(spec.to_dict()) == spec
+    with pytest.raises(ValueError, match="unknown keys"):
+        TelemetrySpec.from_dict({"enabled": True, "bogus": 1})
+    with pytest.raises(ValueError, match="sample_interval"):
+        TelemetrySpec(sample_interval=0.0)
+    with pytest.raises(ValueError, match="capacity"):
+        TelemetrySpec(capacity=1)
+
+
+def test_scenario_spec_carries_telemetry():
+    spec = webseed_spec(telemetry=TelemetrySpec(enabled=True))
+    again = ScenarioSpec.from_json(spec.to_json())
+    assert again == spec and again.telemetry.enabled
+    # absent / null both mean "off"
+    d = spec.to_dict()
+    d["telemetry"] = None
+    assert ScenarioSpec.from_dict(d).telemetry is None
+    d.pop("telemetry")
+    assert ScenarioSpec.from_dict(d).telemetry is None
+
+
+# ------------------------------------------------------------------- sampler
+
+
+def test_sampler_ring_buffer_wraps_chronologically():
+    ticks = iter(range(10))
+    sampler = MetricsSampler(lambda: {"v_bytes": float(next(ticks))},
+                             capacity=4, interval=1.0)
+    for now in range(10):
+        sampler.sample(float(now))
+    assert sampler.samples == 10 and sampler.dropped == 6
+    series = sampler.series()
+    assert list(series["t"]) == [6.0, 7.0, 8.0, 9.0]
+    assert list(series["v_bytes"]) == [6.0, 7.0, 8.0, 9.0]
+    block = sampler.to_block()
+    # derived rate: leading zero then forward differences
+    assert block["series"]["v_rate_bps"] == [0.0, 1.0, 1.0, 1.0]
+
+
+# ------------------------------------------------------------------- checker
+
+
+def _base_events():
+    return [
+        TraceEvent(0.0, "peer_join", torrent="a", client="p0"),
+        TraceEvent(1.0, "request_issued", torrent="a", client="p0",
+                   origin="m0", piece=0),
+        TraceEvent(2.0, "piece_done", torrent="a", client="p0",
+                   origin="m0", piece=0),
+    ]
+
+
+def test_checker_clean_on_well_formed_trace():
+    assert TraceChecker(_base_events()).check() == []
+
+
+def test_checker_flags_traffic_to_dead_mirror():
+    events = _base_events() + [
+        TraceEvent(3.0, "mirror_fail", origin="m0"),
+        TraceEvent(4.0, "request_issued", torrent="a", client="p0",
+                   origin="m0", piece=1),
+    ]
+    problems = TraceChecker(events).check()
+    assert len(problems) == 1 and "dead mirror" in problems[0]
+    # a heal lifts the embargo
+    events.insert(4, TraceEvent(3.5, "mirror_heal", origin="m0"))
+    assert TraceChecker(events).check() == []
+
+
+def test_checker_flags_duplicate_and_unrequested_done():
+    events = _base_events() + [
+        TraceEvent(3.0, "piece_done", torrent="a", client="p0",
+                   origin="m0", piece=0),
+        TraceEvent(4.0, "piece_done", torrent="a", client="p0",
+                   origin="m1", piece=7),
+    ]
+    problems = TraceChecker(events).check()
+    assert any("duplicate piece_done" in p for p in problems)
+    assert any("without a prior request" in p for p in problems)
+
+
+def test_checker_flags_orphan_hedge_cancel_and_ledger_mismatch():
+    events = _base_events() + [
+        TraceEvent(3.0, "hedge_cancelled", torrent="a", client="p0",
+                   origin="m1", piece=0, nbytes=100.0),
+    ]
+    problems = TraceChecker(events).check(hedge_cancelled_bytes=250.0)
+    assert any("without a prior hedge_fired" in p for p in problems)
+    assert any("ledgered" in p for p in problems)
+    events.insert(2, TraceEvent(1.5, "hedge_fired", torrent="a", client="p0",
+                                origin="m1", piece=0, nbytes=100.0))
+    assert TraceChecker(events).check(hedge_cancelled_bytes=100.0) == []
+
+
+def test_checker_flags_fairness_regression_and_pre_join_activity():
+    events = [
+        TraceEvent(0.0, "peer_join", torrent="a", client="p0"),
+        TraceEvent(1.0, "fair_service", torrent="a", origin="m0", value=5.0),
+        TraceEvent(2.0, "fair_service", torrent="a", origin="m0", value=3.0),
+    ]
+    problems = TraceChecker(events).check()
+    assert any("went backwards" in p for p in problems)
+    events = [
+        TraceEvent(5.0, "peer_join", torrent="a", client="p0"),
+        TraceEvent(1.0, "request_issued", torrent="a", client="p0",
+                   origin="m0", piece=0),
+    ]
+    # the request at t=1 is recorded after the join but timestamped before
+    problems = TraceChecker(events).check()
+    assert any("before its peer_join" in p for p in problems)
+
+
+# ------------------------------------------------------------------- engine wiring
+
+
+def test_trace_on_does_not_change_time_engine_results():
+    off = webseed_spec().build("time").run()
+    on = webseed_spec(
+        telemetry=TelemetrySpec(enabled=True, metrics=False)
+    ).build("time").run()
+    assert off.trace is None and off.metrics is None
+    assert on.trace is not None and on.trace.events
+    assert on.to_dict() == off.to_dict()
+
+
+def test_trace_on_does_not_change_byte_engine_results():
+    off = webseed_spec(payload="random").build("byte").run()
+    on = webseed_spec(
+        payload="random", telemetry=TelemetrySpec(enabled=True, metrics=False)
+    ).build("byte").run()
+    assert on.trace.events
+    assert on.to_dict() == off.to_dict()
+
+
+def test_time_and_byte_engines_emit_same_skeleton():
+    tel = TelemetrySpec(enabled=True, metrics=False)
+    time_res = webseed_spec(payload="random", telemetry=tel) \
+        .build("time").run()
+    byte_res = webseed_spec(payload="random", telemetry=tel) \
+        .build("byte").run()
+    sk_time = time_res.trace.skeleton()
+    sk_byte = byte_res.trace.skeleton()
+    assert set(sk_time) == set(sk_byte) and len(sk_time) == 6
+    for client in sk_time:
+        assert sk_time[client] == sk_byte[client]
+        assert sk_time[client][0] == "peer_join"
+        assert sk_time[client][-1] == "peer_complete"
+    # every client accepted exactly num_pieces pieces in both engines
+    for trace in (time_res.trace, byte_res.trace):
+        per_client: dict[str, int] = {}
+        for ev in trace.events:
+            if ev.kind == "piece_done" and ev.client in sk_time:
+                per_client[ev.client] = per_client.get(ev.client, 0) + 1
+        assert set(per_client.values()) == {16}
+
+
+def test_metrics_sampler_tracks_run(tmp_path):
+    res = webseed_spec(
+        telemetry=TelemetrySpec(enabled=True, sample_interval=1.0)
+    ).build("time").run()
+    assert res.metrics is not None and res.metrics.samples >= 2
+    series = res.metrics.series()
+    assert np.all(np.diff(series["t"]) >= 0)
+    # cumulative tier egress never decreases; all bytes were served
+    for gauge in ("origin_bytes", "peer_bytes"):
+        assert np.all(np.diff(series[gauge]) >= -1e-9)
+    assert series["origin_bytes"][-1] > 0
+    assert series["min_replication"][-1] >= 1.0
+    path = res.metrics.to_json(tmp_path / "metrics.json")
+    block = json.loads(path.read_text())
+    assert "origin_rate_bps" in block["series"]
+
+
+def test_first_byte_latency_result_fields():
+    res = webseed_spec(
+        telemetry=TelemetrySpec(enabled=True, metrics=False)
+    ).build("time").run()
+    raw = res.primary
+    assert len(raw.first_byte_latencies) == 6
+    for pid, dt in raw.completion_time.items():
+        assert 0.0 <= raw.first_byte_latencies[pid] <= dt
+    pct = raw.first_byte_percentiles()
+    assert 0.0 <= pct["p50"] <= pct["p99"]
+    size = 16 * 16384
+    plain = raw.mean_download_speed(size)
+    excl = raw.mean_download_speed(size, exclude_first_byte=True)
+    assert excl >= plain
+    # without a trace the derived helpers refuse rather than lie
+    off = webseed_spec().build("time").run().primary
+    assert off.first_byte_latencies == {}
+    with pytest.raises(ValueError):
+        off.mean_download_speed(size, exclude_first_byte=True)
+    with pytest.raises(ValueError):
+        off.first_byte_percentiles()
+
+
+# ------------------------------------------------------------------- scenarios
+
+
+@pytest.mark.parametrize("fname", COMMITTED)
+def test_committed_scenarios_trace_clean(fname):
+    spec = ScenarioSpec.load(SCENARIO_DIR / fname)
+    tel = spec.telemetry or TelemetrySpec()
+    spec = dataclasses.replace(
+        spec, telemetry=dataclasses.replace(tel, enabled=True, metrics=False)
+    )
+    res = spec.build("time").run()
+    hedged = res.stats.hedge_cancelled_bytes if res.stats else 0.0
+    assert TraceChecker(res.trace).check(hedge_cancelled_bytes=hedged) == []
+
+
+def test_mirror_failover_scenario_acceptance(tmp_path):
+    """The acceptance story: mid-sweep mirror kill, trace artifacts on disk,
+    causal failover verified from the trace alone."""
+    spec = ScenarioSpec.load(SCENARIO_DIR / "mirror_failover.json")
+    assert spec.telemetry is not None and spec.telemetry.enabled
+    res = spec.build("time").run()
+    jsonl = res.trace.to_jsonl(tmp_path / "trace.jsonl")
+    chrome = res.trace.to_chrome(tmp_path / "trace.chrome.json")
+    assert jsonl.exists() and chrome.exists()
+    events = [json.loads(line) for line in jsonl.read_text().splitlines()]
+    assert all(e["kind"] in TRACE_EVENT_KINDS for e in events)
+    assert json.loads(chrome.read_text())["traceEvents"]
+
+    checker = TraceChecker(res.trace)
+    assert checker.check(
+        hedge_cancelled_bytes=res.stats.hedge_cancelled_bytes) == []
+    summary = checker.failover_summary()["origin0"]
+    assert summary["failed_at"] == 30.0
+    assert summary["failovers"] >= 1
+    assert summary["requests_after_fail"] == 0
+    # requests flowed to origin0 before the kill, and every client finished
+    before = sum(
+        1 for ev in res.trace.events
+        if ev.kind == "request_issued" and ev.origin == "origin0"
+        and ev.t < 30.0
+    )
+    assert before >= 1
+    out = res.outcomes["dataset"]
+    assert out.completed == out.clients == 12

@@ -57,3 +57,48 @@ def test_tracker_announce_scrape():
 def test_ud_ratio_edge_cases():
     assert ud_ratio(0.0, 0.0) == 0.0
     assert ud_ratio(10.0, 0.0) == float("inf")
+
+
+def test_availability_map_counts_live_replicas():
+    import numpy as np
+
+    from repro.core import Bitfield
+
+    mi = MetaInfo.from_bytes(b"z" * 4096, 1024)          # 4 pieces
+    tr = Tracker()
+    tr.register(mi)
+    tr.announce(mi, "origin", uploaded=0, downloaded=0, event="started",
+                is_origin=True)
+    tr.attach_bitfield(mi, "origin", Bitfield.full(4))
+    tr.announce(mi, "p1", uploaded=0, downloaded=0, event="started")
+    tr.attach_bitfield(mi, "p1", Bitfield.from_indices(4, [0, 2]))
+    tr.announce(mi, "p2", uploaded=0, downloaded=0, event="started")
+    tr.attach_bitfield(mi, "p2", Bitfield.from_indices(4, [0]))
+
+    avail = tr.availability_map(mi)
+    assert avail.tolist() == [3, 1, 2, 1]
+    # infrastructure excluded on request
+    community = tr.availability_map(mi, include_origins=False)
+    assert community.tolist() == [2, 0, 1, 0]
+    # the map is a live view: bitfields mutate in place
+    tr.announce(mi, "p2", uploaded=0, downloaded=4096.0, event="completed")
+    for bf in [tr._bitfields[mi.info_hash]["p2"]]:
+        bf.set(1), bf.set(2), bf.set(3)
+    assert tr.availability_map(mi).tolist() == [3, 2, 3, 2]
+    # departed peers stop counting
+    tr.announce(mi, "p1", uploaded=0, downloaded=0, event="stopped")
+    assert tr.availability_map(mi).tolist() == [2, 2, 2, 2]
+    assert isinstance(avail, np.ndarray) and avail.dtype == np.int64
+
+
+def test_availability_map_unknown_torrent_and_no_bitfields():
+    mi = MetaInfo.from_bytes(b"z" * 4096, 1024)
+    other = MetaInfo.from_bytes(b"q" * 2048, 1024)
+    tr = Tracker()
+    tr.register(mi)
+    # registered but nobody attached a bitfield: all-zero map
+    assert tr.availability_map(mi).tolist() == [0, 0, 0, 0]
+    with pytest.raises(KeyError):
+        tr.availability_map(other)
+    with pytest.raises(KeyError):
+        tr.attach_bitfield(other, "p1", None)
