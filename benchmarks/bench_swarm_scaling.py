@@ -1,15 +1,29 @@
-"""Beyond paper: flash crowds, churn, and endgame straggler insurance."""
+"""Beyond paper: flash crowds, churn, endgame, and fleet-scale sweeps.
+
+The small-N rows (4–64 peers) exercise the per-peer discrete-event
+``SwarmSim`` — the fidelity reference. The fleet rows sweep the batched
+array engine (``FleetSwarmSim``, compiled from the committed
+``benchmarks/scenarios/fleet_scaling.json``) from 2 000 to 100 000
+clients; the headline number is **µs per client-tick** in the row's
+``us_per_call`` column (wall time / (n_clients × ticks)), which the
+``--compare`` gate deliberately ignores so only the simulation outcomes
+(completion time, U/D, origin copies) are pinned.
+"""
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import MetaInfo, SwarmConfig, SwarmSim, flash_crowd
+from repro.core import MetaInfo, ScenarioSpec, SwarmConfig, SwarmSim, flash_crowd
 
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "fleet_scaling.json"
 SIZE = 4e9
 PIECE = 32e6
+FLEET_NS = (2_000, 10_000, 100_000)
 
 
 def flash(n, endgame=True, fail_frac=0.0, seed=0):
@@ -24,7 +38,15 @@ def flash(n, endgame=True, fail_frac=0.0, seed=0):
     return sim.run()
 
 
-def main(report):
+def fleet_point(spec: ScenarioSpec, n: int):
+    """One fleet-engine flash crowd of ``n`` clients from the base spec."""
+    point = dataclasses.replace(
+        spec, arrivals=(dataclasses.replace(spec.arrivals[0], n=n),)
+    )
+    return point.build("fleet").run().primary
+
+
+def main(report, scenario=None):
     # aggregate bandwidth grows with swarm size (self-scaling)
     times = {}
     for n in (4, 16, 64):
@@ -55,6 +77,27 @@ def main(report):
     report("scaling/endgame", 0.0,
            f"tail_on={t_on:.1f}s tail_off={t_off:.1f}s "
            f"waste={waste/1e6:.0f}MB tail_cut={(t_off-t_on)/t_off*100:.0f}%")
+
+    # fleet engine: the same flash-crowd shape at 2k-100k clients. All
+    # numbers in derived are deterministic (pinned at --tolerance 0); the
+    # µs/client-tick headline rides in the wall-time column, which the
+    # compare gate ignores.
+    spec = ScenarioSpec.load(scenario or SCENARIO)
+    t_fleet = {}
+    for n in FLEET_NS:
+        t0 = time.perf_counter()
+        res = fleet_point(spec, n)
+        wall = time.perf_counter() - t0
+        done = np.isfinite(res.completed_at)
+        t_all = float(res.completed_at[done].max())
+        t_fleet[n] = t_all
+        report(f"scaling/fleet_n{n}", wall * 1e6 / (n * res.ticks),
+               f"t_all={t_all:.0f}s ud={res.ud_ratio:.1f} "
+               f"ticks={res.ticks} copies={res.origin_uploaded/SIZE:.2f} "
+               f"done={int(done.sum())}/{res.n}")
+    # self-scaling must survive the array engine: 50x the clients may not
+    # cost anywhere near 50x the completion time
+    assert t_fleet[100_000] < t_fleet[2_000] * 4.0
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only eq1,table1,...] \
         [--json DIR] [--compare DIR [--tolerance REL]] \
-        [--scenario FILE [--engine time|byte]] [--list]
+        [--scenario FILE [--engine time|byte|fleet]] [--profile] [--list]
 
 ``--json DIR`` additionally persists each bench's rows as
 ``BENCH_<name>.json`` under DIR (repo-root convention), so the perf
@@ -27,6 +27,10 @@ runs the scenario generically, exports ``TRACE_<name>.jsonl`` +
 ``TRACE_<name>.chrome.json`` (load in chrome://tracing) +
 ``METRICS_<name>.json`` under DIR, and replays the trace through the
 invariant checker — exits non-zero on any violation.
+
+``--profile`` wraps each selected bench (or the generic scenario run) in
+cProfile and dumps the top of the cumulative-time table — the first stop
+when a per-tick regression trips the scaling-smoke CI job.
 
 ``--list`` prints the registered benchmarks and their scenario files.
 """
@@ -155,7 +159,7 @@ def run_generic_scenario(path: Path, engine: str, report) -> None:
     t0 = time.perf_counter()
     result = spec.build(engine).run()
     wall = (time.perf_counter() - t0) * 1e6
-    unit = "s" if engine == "time" else "rounds"
+    unit = "rounds" if engine == "byte" else "s"
     for name, out in result.outcomes.items():
         size = next(
             m.size_bytes for m in spec.content.manifests if m.name == name
@@ -219,6 +223,25 @@ def compare_rows(
     return problems
 
 
+def maybe_profile(enabled: bool, label: str, fn):
+    """Run ``fn`` (optionally under cProfile, dumping the top of the
+    cumulative-time table) and return its result."""
+    if not enabled:
+        return fn()
+    import cProfile
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        return fn()
+    finally:
+        prof.disable()
+        print(f"--- profile[{label}] top 15 by cumulative time ---",
+              flush=True)
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(15)
+
+
 def bench_file_name(key: str) -> str:
     """BENCH_<module>.json, module name sans the ``bench_`` prefix."""
     mod = SUITES[key].__name__.rsplit(".", 1)[-1]
@@ -255,8 +278,13 @@ def main() -> None:
                     help="run a ScenarioSpec JSON: a registered bench's "
                          "base file runs that whole bench seeded from it; "
                          "any other file runs generically")
-    ap.add_argument("--engine", default="time", choices=["time", "byte"],
+    ap.add_argument("--engine", default="time",
+                    choices=["time", "byte", "fleet"],
                     help="engine for generic --scenario runs")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each selected bench (or the generic "
+                         "--scenario run) and dump the top functions by "
+                         "cumulative time")
     ap.add_argument("--trace", default=None, metavar="DIR",
                     help="flight-recorder run of --scenario: export "
                          "TRACE_/METRICS_ artifacts under DIR and replay "
@@ -299,11 +327,17 @@ def main() -> None:
     rows: list[str] = []
 
     def report(name: str, us: float, derived: str) -> None:
-        line = f"{name},{us:.0f},{derived}"
+        # sub-100µs values keep decimals: the fleet scaling rows report
+        # µs/client-tick here, where integer resolution would erase the
+        # headline metric (wall times are unaffected by the rounding mode)
+        us_txt = f"{us:.0f}" if us >= 100 else f"{us:.3f}"
+        line = f"{name},{us_txt},{derived}"
         rows.append(line)
         print(line, flush=True)
         suite_rows.append(
-            {"name": name, "us_per_call": round(us), "derived": derived}
+            {"name": name,
+             "us_per_call": round(us) if us >= 100 else round(us, 3),
+             "derived": derived}
         )
 
     print("name,us_per_call,derived")
@@ -313,7 +347,10 @@ def main() -> None:
     if scenario_path is not None and not chosen:
         # no bench claims this file: run the scenario itself
         suite_rows: list[dict] = []
-        run_generic_scenario(scenario_path, args.engine, report)
+        maybe_profile(
+            args.profile, scenario_path.stem,
+            lambda: run_generic_scenario(scenario_path, args.engine, report),
+        )
         return
     for key in chosen:
         mod = SUITES[key]
@@ -322,13 +359,21 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             if scenario_path is not None:
-                mod.main(report, scenario=scenario_path)
+                maybe_profile(
+                    args.profile, key,
+                    lambda: mod.main(report, scenario=scenario_path),
+                )
             elif key == "eq1":
-                measured_ud, _ = mod.main(report)
+                measured_ud, _ = maybe_profile(
+                    args.profile, key, lambda: mod.main(report)
+                )
             elif key == "table1":
-                mod.main(report, measured_ud=measured_ud)
+                maybe_profile(
+                    args.profile, key,
+                    lambda: mod.main(report, measured_ud=measured_ud),
+                )
             else:
-                mod.main(report)
+                maybe_profile(args.profile, key, lambda: mod.main(report))
         except Exception as e:  # keep the harness running; record the failure
             error = repr(e)
             failures.append((key, error))

@@ -31,6 +31,7 @@ from .collective_fabric import (
     coldstart_time,
     stripe_shards,
 )
+from .fleet import FleetResult, FleetSpec, FleetSwarmSim, waterfill_rates
 from .http_baseline import HttpResult, analytic_http, simulate_http
 from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
 from .netsim import FluidNetwork, Flow, Link, Node

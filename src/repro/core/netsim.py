@@ -72,9 +72,17 @@ class Flow:
     start_time: float = 0.0
     end_time: float = -1.0
     aborted: bool = False
+    # cached incidence rows: a flow's link set is immutable for its whole
+    # life (flows are aborted and restarted on re-route, never re-linked),
+    # so the link→row indices are computed once here instead of being
+    # rebuilt from Python loops on every rate recompute
+    link_idx: np.ndarray = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         self.remaining = float(self.size)
+        self.link_idx = np.fromiter(
+            (l.index for l in self.links), dtype=np.int64, count=len(self.links)
+        )
 
     @property
     def done(self) -> bool:
@@ -197,10 +205,15 @@ class FluidNetwork:
         down_cap = np.fromiter((n.down_bps for n in self.nodes), dtype=np.float64, count=nn)
         nl = len(self.links) if any(f.links for f in flows) else 0
         if nl:
+            # fancy-indexed build from the per-flow cached index arrays
+            lens = np.fromiter(
+                (f.link_idx.size for f in flows), dtype=np.int64, count=nf
+            )
             incidence = np.zeros((nl, nf), dtype=bool)
-            for j, f in enumerate(flows):
-                for link in f.links:
-                    incidence[link.index, j] = True
+            incidence[
+                np.concatenate([f.link_idx for f in flows]),
+                np.repeat(np.arange(nf), lens),
+            ] = True
             link_cap = np.fromiter(
                 (l.capacity_bps for l in self.links.values()),
                 dtype=np.float64, count=nl,

@@ -95,6 +95,29 @@ def random_first(
     return int(cand[rng.integers(cand.size)])
 
 
+def batched_rarest(
+    cand: np.ndarray, availability: np.ndarray, jitter: np.ndarray
+) -> np.ndarray:
+    """Rarest-first selection for a whole batch of peers at once.
+
+    The fleet engine's vectorized counterpart of :func:`rarest_among`:
+    ``cand`` is a ``(k, P)`` bool matrix (candidate pieces per selecting
+    peer), ``availability`` the shared ``(P,)`` replica counts, ``jitter``
+    a ``(k, P)`` matrix of per-(peer, piece) tie-break values in ``[0, 1)``.
+    Because the jitter is strictly below 1, the winner always has minimal
+    integer availability — only equal-availability ties are broken by it
+    (fixed per peer rather than redrawn, so selection costs no per-tick
+    RNG). Returns a ``(k,)`` piece index vector, ``-1`` where a peer has
+    no candidate.
+    """
+    score = jitter.astype(np.float64)        # the one (k, P) allocation
+    score += availability                    # broadcast, in place
+    np.copyto(score, np.inf, where=~cand)
+    pick = score.argmin(axis=1).astype(np.int64)
+    pick[~cand.any(axis=1)] = -1
+    return pick
+
+
 POLICIES = {
     "rarest_first": rarest_first,
     "sequential": sequential,

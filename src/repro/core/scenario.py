@@ -13,6 +13,9 @@ silently become defaults), and compiles to either engine:
   load, tail latency, the tracker ledger.
 * ``spec.build("byte")`` — the byte-accurate round engine
   (:class:`~repro.core.swarm.LocalSwarm`): real verified bytes end to end.
+* ``spec.build("fleet")`` — the vectorized fluid engine
+  (:class:`~repro.core.fleet.FleetSwarmSim`): peers as rows of arrays, for
+  10k–100k-client populations the object engines cannot reach.
 
 The spec tree mirrors how a dataset host would describe a deployment:
 
@@ -48,6 +51,7 @@ from typing import Optional
 
 import numpy as np
 
+from .fleet import FleetResult, FleetSpec, FleetSwarmSim
 from .metainfo import MetaInfo
 from .netsim import FluidNetwork
 from .scheduler import (
@@ -82,7 +86,7 @@ def _finitize(value):
     return value
 
 
-ENGINES = ("time", "byte")
+ENGINES = ("time", "byte", "fleet")
 ARRIVAL_KINDS = ("flash", "staggered", "poisson")
 EVENT_KINDS = ("mirror_fail", "mirror_heal", "peer_churn", "corrupt_once")
 PAYLOAD_MODES = ("size_only", "random")
@@ -504,6 +508,8 @@ class ScenarioSpec:
     # flight recorder (both engines); None or enabled=False means the run
     # is trace-free and must be bit-identical to a pre-telemetry run
     telemetry: Optional[TelemetrySpec] = None
+    # fleet-engine knobs (ignored by the object engines); None == defaults
+    fleet: Optional[FleetSpec] = None
 
     # ------------------------------------------------------------- validation
     def __post_init__(self) -> None:
@@ -633,6 +639,7 @@ class ScenarioSpec:
             "telemetry": (
                 self.telemetry.to_dict() if self.telemetry else None
             ),
+            "fleet": self.fleet.to_dict() if self.fleet else None,
         }
 
     @classmethod
@@ -640,7 +647,7 @@ class ScenarioSpec:
         known = {
             "name", "seed", "content", "fabric", "policy", "swarm",
             "topology", "arrivals", "events", "byte_upload_slots",
-            "byte_origin_slots", "byte_max_rounds", "telemetry",
+            "byte_origin_slots", "byte_max_rounds", "telemetry", "fleet",
         }
         unknown = sorted(set(data) - known)
         if unknown:
@@ -677,6 +684,9 @@ class ScenarioSpec:
         tel = data.get("telemetry")
         if tel is not None:
             kwargs["telemetry"] = TelemetrySpec.from_dict(tel)
+        fleet = data.get("fleet")
+        if fleet is not None:
+            kwargs["fleet"] = FleetSpec.from_dict(fleet)
         return cls(**kwargs)
 
     def to_json(self, indent: int = 1) -> str:
@@ -707,6 +717,8 @@ class ScenarioSpec:
             raise ValueError(f"unknown engine {engine!r} (valid: {ENGINES})")
         if engine == "time":
             return self._build_time()
+        if engine == "fleet":
+            return self._build_fleet()
         return self._build_byte()
 
     # ---- time domain
@@ -894,6 +906,94 @@ class ScenarioSpec:
             recorder=recorder, sampler=sampler,
         )
 
+    # ---- fleet domain
+    def _build_fleet(self) -> "CompiledScenario":
+        """Compile to the vectorized :class:`~repro.core.fleet
+        .FleetSwarmSim`. Single-manifest only (the fleet hot loop batches
+        one piece space); features the array model does not express yet —
+        pod caches, corrupt_once, hedging, dynamic mirror selection —
+        raise here rather than silently degrade."""
+        if self.content.multi:
+            raise ValueError(
+                "fleet engine is single-torrent (one batched piece space); "
+                "split multi-torrent catalogs across runs"
+            )
+        if self.fabric.pod_caches is not None:
+            raise ValueError("fleet engine does not support pod caches yet")
+        for ev in self.events:
+            if ev.kind == "corrupt_once":
+                raise ValueError(
+                    "corrupt_once is object-engine only (the fleet engine "
+                    "moves no real bytes to corrupt)"
+                )
+        man = self.content.manifests[0]
+        mi, _ = man.build()   # payload bytes unused: fluid pools only
+        tel = self.telemetry
+        recorder = (
+            TraceRecorder(enabled=tel.trace)
+            if tel is not None and tel.enabled else None
+        )
+        topo = self.topology
+        sim = FleetSwarmSim(
+            mi, self.policy, self.swarm, fleet=self.fleet, seed=self.seed,
+            num_pods=topo.num_pods if topo is not None else 0,
+            spine_bps=topo.spine_bps if topo is not None else None,
+            telemetry=recorder, torrent=man.name,
+        )
+        if tel is not None:
+            sim.peer_event_limit = tel.per_peer_events_max
+        sim.add_mirrors(list(self.fabric.mirrors))
+        built_topo = topo.build() if topo is not None else None
+        peer_seq = 0
+        for group in self.arrivals:
+            raw = group.generate()
+            if group.topology_hosts:
+                raw = [
+                    (h.name, t)
+                    for h, (_, t) in zip(built_topo.hosts(), raw)
+                ]
+            pods = None
+            if built_topo is not None:
+                # balanced pod assignment, host-named peers parse exactly
+                # (same rule as the byte engine)
+                pods = []
+                for pid, _ in raw:
+                    addr = (
+                        built_topo.addr_of(pid)
+                        if pid.startswith("pod") else None
+                    )
+                    pods.append(
+                        addr.pod if addr is not None
+                        else peer_seq % built_topo.num_pods
+                    )
+                    peer_seq += 1
+            sim.add_peers(
+                raw, up_bps=group.up_bps, down_bps=group.down_bps,
+                seed_linger=group.seed_linger, pods=pods,
+            )
+        for ev in self.events:
+            sim.schedule_event(ev.at, ev.kind, ev.target)
+        sampler = None
+        if tel is not None and tel.enabled and tel.metrics:
+            sampler = MetricsSampler(
+                _fleet_metrics_source(sim),
+                capacity=tel.capacity, interval=tel.sample_interval,
+            )
+            sim.sampler = sampler
+        return CompiledScenario(
+            spec=self, engine="fleet", sims={man.name: sim},
+            recorder=recorder, sampler=sampler,
+        )
+
+
+def _fleet_metrics_source(sim: FleetSwarmSim):
+    """Aggregate gauge closure for the fleet engine: same schema core as
+    the time/byte sources (seeders/leechers, tier bytes, replication) so
+    metrics blocks stay comparable across engines."""
+    def _source() -> dict[str, float]:
+        return sim.metrics_gauges()
+    return _source
+
 
 def _time_demand_pred(sim: WebSeedSwarmSim):
     """Does this torrent have live demand *right now*? (fairness contender
@@ -1043,6 +1143,8 @@ class CompiledScenario:
     def run(self, until: float = float("inf")) -> ScenarioResult:
         if self.engine == "time":
             return self._run_time(until)
+        if self.engine == "fleet":
+            return self._run_fleet(until)
         return self._run_byte()
 
     # ---- time domain
@@ -1127,6 +1229,36 @@ class CompiledScenario:
             return None
         return jain_index(
             self._concurrent_snapshot[n] / weights[n] for n in self.sims
+        )
+
+    # ---- fleet domain
+    def _run_fleet(self, until: float) -> ScenarioResult:
+        sim = self.sim
+        res: FleetResult = sim.run(until=until)
+        man = self.spec.content.manifests[0]
+        outcomes = {
+            man.name: TorrentOutcome(
+                torrent=man.name, weight=man.weight,
+                clients=res.n, completed=res.completed,
+                duration=(
+                    float(np.max(res.completed_at[
+                        np.isfinite(res.completed_at)
+                    ])) if res.completed else res.sim_time
+                ),
+                origin_uploaded=res.origin_uploaded,
+                origin_http_uploaded=res.origin_http_uploaded,
+                total_downloaded=res.total_downloaded,
+                ud_ratio=res.ud_ratio,
+                completion_percentiles=(
+                    res.completion_percentiles() if res.completed else {}
+                ),
+                raw=res,
+            )
+        }
+        return ScenarioResult(
+            name=self.spec.name, engine="fleet", outcomes=outcomes,
+            sim_time=res.sim_time, stats=None,
+            trace=self.recorder, metrics=self.sampler,
         )
 
     # ---- byte domain

@@ -288,7 +288,10 @@ class TelemetrySpec:
     ``enabled`` is the master switch: when False (the default) the run is
     bit-identical to an untraced run — no recorder, no sampler, no extra
     timer activity. ``sample_interval`` is seconds of sim-time in the time
-    engines and rounds in the byte engine.
+    engines and rounds in the byte engine. ``per_peer_events_max`` bounds
+    per-peer lifecycle tracing in the fleet engine: above that population
+    the engine emits aggregate sampler gauges only (a 100k-peer trace of
+    join/complete events would dwarf the simulation itself).
     """
 
     enabled: bool = False
@@ -296,12 +299,15 @@ class TelemetrySpec:
     metrics: bool = True         # sample per-tick gauges
     sample_interval: float = 5.0
     capacity: int = 4096         # metrics ring-buffer depth
+    per_peer_events_max: int = 256
 
     def __post_init__(self) -> None:
         if self.sample_interval <= 0:
             raise ValueError("sample_interval must be positive")
         if self.capacity < 2:
             raise ValueError("capacity must be >= 2")
+        if self.per_peer_events_max < 0:
+            raise ValueError("per_peer_events_max must be >= 0")
 
     def to_dict(self) -> dict:
         return {f.name: getattr(self, f.name)

@@ -10,6 +10,7 @@ call, not an HTTP long-poll (DESIGN.md §6).
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Optional, Sequence
 
@@ -101,10 +102,26 @@ class Tracker:
         self._swarms: dict[bytes, dict[str, PeerRecord]] = {}
         # infohash -> peer_id -> live Bitfield view (availability accounting)
         self._bitfields: dict[bytes, dict[str, object]] = {}
+        # Handout index, maintained incrementally so announce stays
+        # O(sample) at 100k peers instead of filtering the whole swarm:
+        # _order  — handable pids (peer_protocol, not left) in swarm
+        #           insertion order (exactly the order the old full filter
+        #           produced, so seeded handouts are bit-identical);
+        # _pos    — pid -> index into _order;
+        # _seqno  — pid -> creation sequence, so a stopped peer re-joining
+        #           via "started" is re-inserted at its original relative
+        #           position (dict insertion order never forgets a key).
+        self._order: dict[bytes, list[str]] = {}
+        self._pos: dict[bytes, dict[str, int]] = {}
+        self._seqno: dict[bytes, dict[str, int]] = {}
 
     # ------------------------------------------------------------- registration
     def register(self, metainfo: MetaInfo) -> None:
-        self._swarms.setdefault(metainfo.info_hash, {})
+        ih = metainfo.info_hash
+        self._swarms.setdefault(ih, {})
+        self._order.setdefault(ih, [])
+        self._pos.setdefault(ih, {})
+        self._seqno.setdefault(ih, {})
 
     def _swarm(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:
         if metainfo.info_hash not in self._swarms:
@@ -131,6 +148,10 @@ class Tracker:
         pod: Optional[int] = None,
     ) -> list[str]:
         swarm = self._swarm(metainfo)
+        ih = metainfo.info_hash
+        order = self._order[ih]
+        pos = self._pos[ih]
+        seqno = self._seqno[ih]
         rec = swarm.get(peer_id)
         if rec is None:
             rec = PeerRecord(
@@ -139,6 +160,10 @@ class Tracker:
                 tier=tier or ("origin" if is_origin else "peer"), pod=pod,
             )
             swarm[peer_id] = rec
+            seqno[peer_id] = len(seqno)
+            if peer_protocol:
+                pos[peer_id] = len(order)
+                order.append(peer_id)
         rec.uploaded = float(uploaded)
         rec.downloaded = float(downloaded)
         if http_uploaded is not None:
@@ -150,26 +175,45 @@ class Tracker:
             rec.completed_at = now
         elif event == "stopped":
             rec.left = True
+            k = pos.pop(peer_id, None)
+            if k is not None:
+                order.pop(k)
+                for pid in order[k:]:
+                    pos[pid] -= 1
         elif event == "started":
             # a healed mirror (or a rejoining peer) re-announces: it is
-            # handed out again and counts as live in scrapes
+            # handed out again and counts as live in scrapes — back at its
+            # original insertion-order slot, so handouts after a heal are
+            # identical to the old whole-swarm filter's
             rec.left = False
+            if rec.peer_protocol and peer_id not in pos:
+                k = bisect.bisect_left(
+                    order, seqno[peer_id], key=lambda q: seqno[q]
+                )
+                order.insert(k, peer_id)
+                for pid in order[k:]:
+                    pos[pid] = k
+                    k += 1
 
-        candidates = [
-            pid
-            for pid, r in swarm.items()
-            if pid != peer_id and not r.left and r.peer_protocol
-        ]
         if self.topology is not None:
+            candidates = [pid for pid in order if pid != peer_id]
             candidates = self.topology.rank_peers(
                 peer_id, candidates, rng=self.rng,
                 same_pod_frac=self.same_pod_frac,
             )
             return candidates[:want_peers]
-        if len(candidates) > want_peers:
-            idx = self.rng.choice(len(candidates), size=want_peers, replace=False)
-            candidates = [candidates[i] for i in sorted(idx)]
-        return candidates
+        # O(sample) handout: draw index positions, skip over the announcer
+        # in place. RNG call (args and count) matches the old full-copy
+        # shuffle path exactly — seeded goldens are bit-identical.
+        p = pos.get(peer_id, -1)
+        n_cand = len(order) - (1 if p >= 0 else 0)
+        if n_cand <= want_peers:
+            return [pid for pid in order if pid != peer_id]
+        idx = self.rng.choice(n_cand, size=want_peers, replace=False)
+        idx.sort()
+        if p >= 0:
+            return [order[i if i < p else i + 1] for i in idx]
+        return [order[i] for i in idx]
 
     # ------------------------------------------------------------- availability
     def attach_bitfield(

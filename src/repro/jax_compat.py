@@ -61,6 +61,17 @@ def cost_analysis(compiled) -> dict:
     return c
 
 
+def jit(f, **kwargs):
+    """``jax.jit`` passthrough so accelerator call sites import one shim.
+
+    Exists for symmetry (and as the single place to hook if a future jax
+    line changes jit's surface): modules that already route ``shard_map``
+    / mesh handling through here should not import ``jax`` directly for
+    jit alone.
+    """
+    return jax.jit(f, **kwargs)
+
+
 def set_mesh(mesh):
     """``jax.set_mesh`` context manager; on 0.4.x a concrete ``Mesh`` is
     itself the context manager that installs the ambient resource env."""

@@ -73,3 +73,58 @@ def test_deadlock_detection():
     net.start_flow(a, b, 10.0)
     with pytest.raises(RuntimeError, match="deadlock"):
         net.run()
+
+
+def test_flow_link_idx_cached():
+    # the incidence rows are frozen at flow construction: link sets are
+    # immutable per flow, so _recompute_rates never rebuilds them
+    import numpy as np
+
+    net = FluidNetwork()
+    a = net.add_node("a", 100.0, 1e9)
+    b = net.add_node("b", 1.0, 100.0)
+    l0 = net.add_link("l0", 40.0)
+    l1 = net.add_link("l1", 500.0)
+    f = net.start_flow(a, b, 100.0, links=(l1, l0))
+    assert f.link_idx.dtype == np.int64
+    assert list(f.link_idx) == [l1.index, l0.index]
+    bare = net.start_flow(a, b, 100.0)
+    assert bare.link_idx.size == 0
+
+
+def test_linked_rates_match_loop_reference():
+    # the fancy-indexed incidence build must allocate exactly like a dense
+    # python-loop incidence (the pre-cache construction)
+    import numpy as np
+
+    net = FluidNetwork()
+    src = [net.add_node(f"s{i}", 90.0, 1e9) for i in range(3)]
+    dst = [net.add_node(f"d{i}", 1.0, 70.0) for i in range(4)]
+    links = [net.add_link(f"l{j}", 25.0 + 10 * j) for j in range(3)]
+    flows = []
+    for k in range(10):
+        lk = tuple(links[j] for j in range(3) if (k >> j) & 1)
+        flows.append(net.start_flow(src[k % 3], dst[k % 4], 1e9, links=lk))
+    net._recompute_rates()
+    rates = np.array([f.rate for f in flows])
+
+    # reference incidence from the raw link objects
+    incidence = np.zeros((len(links), len(flows)), dtype=bool)
+    for col, f in enumerate(flows):
+        for link in f.links:
+            incidence[link.index, col] = True
+    rebuilt = np.zeros_like(incidence)
+    lens = np.fromiter((f.link_idx.size for f in flows), dtype=np.int64)
+    rebuilt[
+        np.concatenate([f.link_idx for f in flows]),
+        np.repeat(np.arange(len(flows)), lens),
+    ] = True
+    assert (incidence == rebuilt).all()
+
+    # and the allocation respects every cap, saturating the binding ones
+    for j, link in enumerate(links):
+        through = rates[incidence[j]].sum()
+        assert through <= link.capacity_bps * (1 + 1e-9)
+    for node in src:
+        out = sum(f.rate for f in flows if f.src is node)
+        assert out <= node.up_bps * (1 + 1e-9)

@@ -107,3 +107,42 @@ def test_local_swarm_always_converges_verified(n_pieces, n_peers, seed):
         assert p.bitfield.complete
         for i, data in p.store.items():
             assert mi.verify_piece(i, data)
+
+
+@given(seed=st.integers(0, 10_000), with_links=st.booleans())
+@settings(max_examples=60, **COMMON)
+def test_fleet_waterfill_matches_netsim_any_topology(seed, with_links):
+    """The fleet engine's standalone water-filling must allocate exactly
+    like the netsim reference on any shared topology (flows carry at most
+    one link — the fleet spine constraint)."""
+    from repro.core import waterfill_rates
+
+    rng = np.random.default_rng(seed)
+    nn = int(rng.integers(2, 10))
+    nf = int(rng.integers(1, 30))
+    src = rng.integers(0, nn, size=nf)
+    dst = (src + rng.integers(1, nn, size=nf)) % nn
+    up = rng.uniform(0.5, 200.0, size=nn)
+    dn = rng.uniform(0.5, 200.0, size=nn)
+    link_of = link_cap = None
+    if with_links:
+        nl = int(rng.integers(1, 4))
+        link_cap = rng.uniform(0.5, 80.0, size=nl)
+        link_of = rng.integers(-1, nl, size=nf)
+
+    net = FluidNetwork()
+    nodes = [net.add_node(f"n{i}", up[i], dn[i]) for i in range(nn)]
+    links = ([net.add_link(f"l{j}", c) for j, c in enumerate(link_cap)]
+             if with_links else [])
+    flows = [
+        net.start_flow(
+            nodes[src[k]], nodes[dst[k]], size=1e18,
+            links=(links[link_of[k]],)
+            if with_links and link_of[k] >= 0 else (),
+        )
+        for k in range(nf)
+    ]
+    net._recompute_rates()
+    want = np.array([f.rate for f in flows])
+    got = waterfill_rates(src, dst, up, dn, link_of, link_cap)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)

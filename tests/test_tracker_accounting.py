@@ -102,3 +102,64 @@ def test_availability_map_unknown_torrent_and_no_bitfields():
         tr.availability_map(other)
     with pytest.raises(KeyError):
         tr.attach_bitfield(other, "p1", None)
+
+
+def test_announce_handouts_match_whole_swarm_filter_reference():
+    """The O(sample) handout index must reproduce the old whole-swarm
+    filter bit-for-bit: same eligible ordering (swarm-dict insertion
+    order, stopped peers skipped, re-started peers back at their original
+    slot) and the same seeded RNG draw per announce."""
+    import numpy as np
+
+    mi = MetaInfo.from_sizes_only(int(64e6), int(8e6), name="ref")
+
+    def reference_handout(swarm, rng, peer_id, want_peers):
+        eligible = [
+            pid for pid, rec in swarm.items()
+            if rec.peer_protocol and not rec.left and pid != peer_id
+        ]
+        if len(eligible) <= want_peers:
+            return eligible
+        idx = rng.choice(len(eligible), size=want_peers, replace=False)
+        idx.sort()
+        return [eligible[i] for i in idx]
+
+    tr = Tracker(rng=np.random.default_rng(123))
+    ref_rng = np.random.default_rng(123)
+    tr.register(mi)
+    script_rng = np.random.default_rng(7)
+    alive = set()
+    stopped = set()
+    for step in range(400):
+        roll = script_rng.random()
+        if roll < 0.35 or not alive:
+            pid = f"p{step:03d}"
+            event = "started"
+            pp = bool(script_rng.random() < 0.9)
+        elif roll < 0.5 and alive:
+            pid = sorted(alive)[int(script_rng.integers(len(alive)))]
+            event = "stopped"
+            pp = True
+        elif roll < 0.6 and stopped:
+            pid = sorted(stopped)[int(script_rng.integers(len(stopped)))]
+            event = "started"  # re-join at the original insertion slot
+            pp = True
+        else:
+            pid = sorted(alive)[int(script_rng.integers(len(alive)))]
+            event = "update"
+            pp = True
+        want = int(script_rng.integers(1, 9))
+        got = tr.announce(
+            mi, pid, uploaded=0.0, downloaded=0.0, event=event,
+            peer_protocol=pp, want_peers=want,
+        )
+        want_list = reference_handout(
+            tr._swarm(mi), ref_rng, pid, want,
+        )
+        assert got == want_list, f"step {step} ({event} {pid})"
+        if event == "stopped":
+            alive.discard(pid)
+            stopped.add(pid)
+        else:
+            alive.add(pid)
+            stopped.discard(pid)
