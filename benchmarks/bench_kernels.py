@@ -13,9 +13,15 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.piece_selection import batched_rarest
 from repro.kernels.attention import attention_ref, flash_attention
 from repro.kernels.rglru import rglru_scan, rglru_scan_ref
 from repro.kernels.ssd import ssd_mixer, ssd_ref
+from repro.kernels.swarm import (
+    fleet_waterfill,
+    rarest_argmin,
+    waterfill_jnp_ref,
+)
 
 PEAK, HBM = 197e12, 819e9
 
@@ -64,6 +70,46 @@ def main(report):
     report("kernels/ssd", wall,
            f"err={err:.1e} AI={flops/bytes_:.0f}flop/B "
            f"tpu_chunk={max(flops/PEAK, bytes_/HBM)*1e9:.0f}ns")
+
+    # swarm rarest-argmin tile: 128 rows x 1024 pieces, index-exact vs the
+    # numpy engine hot path (lexicographic (avail, jitter, index) min)
+    cand = rng.random((128, 1024)) < 0.4
+    avail = rng.integers(0, 64, 1024).astype(np.float64)
+    jit_ = rng.random((128, 1024), dtype=np.float32)
+    t0 = time.perf_counter()
+    pick = rarest_argmin(cand, avail, jit_)
+    wall = (time.perf_counter() - t0) * 1e6
+    exact = int(np.array_equal(pick, batched_rarest(cand, avail, jit_)))
+    n_el = 128 * 1024
+    bytes_ = n_el * (1 + 4 + 4) + 1024 * 4  # cand(u8) + jitter + avail in
+    report("kernels/swarm_argmin", wall,
+           f"exact={exact} AI={3*n_el/bytes_:.2f}flop/B "
+           f"tpu_tile={bytes_/HBM*1e9:.0f}ns (bandwidth-bound)")
+
+    # swarm water-filling: 4096 flows over 512 nodes + a spine link,
+    # bit-exact vs the pure-jnp oracle (see kernels/swarm/ref.py)
+    nf, nn = 4096, 512
+    src = rng.integers(0, nn, nf)
+    dst = (src + 1 + rng.integers(0, nn - 1, nf)) % nn
+    up = rng.uniform(1e6, 50e6, nn)
+    dn = rng.uniform(1e6, 50e6, nn)
+    link_of = np.where(rng.random(nf) < 0.5, 0, -1).astype(np.int64)
+    link_cap = np.array([200e6])
+    t0 = time.perf_counter()
+    rate = fleet_waterfill(src, dst, up, dn, link_of, link_cap)
+    wall = (time.perf_counter() - t0) * 1e6
+    exact = int(np.array_equal(
+        rate.astype(np.float32),
+        waterfill_jnp_ref(src, dst, up, dn, link_of, link_cap),
+    ))
+    # one fixed-point round, onehot segment mode: 3 one-hot matmuls of
+    # (block x flows-tile) against the flow tiles, f32 accumulate
+    rounds = 2 * nn + 1 + 2
+    flops = rounds * 3 * 2 * nf * 256          # segment-sum matmuls
+    bytes_ = nf * (3 * 4 + 4) + nn * 2 * 4     # src/dst/lnk + caps + rate
+    report("kernels/swarm_waterfill", wall,
+           f"exact={exact} AI={flops/bytes_:.0f}flop/B "
+           f"tpu_fill={max(flops/PEAK, bytes_/HBM)*1e9:.0f}ns")
 
 
 if __name__ == "__main__":

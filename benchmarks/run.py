@@ -150,15 +150,24 @@ def run_traced_scenario(path: Path, engine: str, trace_dir: Path) -> None:
         raise SystemExit(f"{len(violations)} trace invariant violation(s)")
 
 
-def run_generic_scenario(path: Path, engine: str, report) -> None:
+def run_generic_scenario(path: Path, engine: str, report,
+                         profile: bool = False) -> None:
     """Run one scenario file that no bench claims: one row per torrent,
-    plus the fairness row for multi-torrent scenarios."""
+    plus the fairness row for multi-torrent scenarios. ``profile`` adds
+    the fleet engine's per-phase wall breakdown."""
     from repro.core import ScenarioSpec
 
     spec = ScenarioSpec.load(path)
     t0 = time.perf_counter()
     result = spec.build(engine).run()
     wall = (time.perf_counter() - t0) * 1e6
+    if profile and engine == "fleet":
+        phases = next(iter(result.outcomes.values())).raw.phase_seconds
+        total = max(sum(phases.values()), 1e-12)
+        print("profile: fleet phase breakdown "
+              + " ".join(f"{k}={v:.2f}s({v / total * 100:.0f}%)"
+                         for k, v in sorted(phases.items())),
+              flush=True)
     unit = "rounds" if engine == "byte" else "s"
     for name, out in result.outcomes.items():
         size = next(
@@ -349,7 +358,9 @@ def main() -> None:
         suite_rows: list[dict] = []
         maybe_profile(
             args.profile, scenario_path.stem,
-            lambda: run_generic_scenario(scenario_path, args.engine, report),
+            lambda: run_generic_scenario(
+                scenario_path, args.engine, report, profile=args.profile
+            ),
         )
         return
     for key in chosen:

@@ -18,8 +18,12 @@ to the *whole* hot path:
   structure (and float semantics) of ``_recompute_rates``, so the two are
   equivalence-tested against each other on random topologies;
 * one tick is one synchronous vectorized step of ``dt`` seconds — numpy
-  first, with an optional ``jax.jit`` water-filling path behind
-  ``FleetSpec.jit`` (float32 on accelerators; never used for goldens).
+  first, with device offload behind ``FleetSpec.backend``: ``"jit"``
+  routes water-filling through a ``jax.jit`` float32 kernel, ``"pallas"``
+  makes the tick device-resident — the have matrix, replica counts, and
+  tie-break jitter stay on the accelerator across ticks and selection +
+  water-filling run as Pallas kernels (:mod:`repro.kernels.swarm`).
+  Float32 backends are a throughput choice, never used for goldens.
 
 Fidelity model (the documented small-N equivalence bound)
 ---------------------------------------------------------
@@ -57,6 +61,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
+from time import perf_counter
 from typing import Optional, Sequence
 
 import numpy as np
@@ -249,19 +255,49 @@ class FleetSpec:
     fastest piece service time, clipped to ``[0.05, 60]``. ``fanout``:
     distinct uploaders sampled per leecher; ``None`` derives the time
     engine's effective value ``ceil(pipeline / per_peer_requests)``.
-    ``jit``: route water-filling through the ``jax.jit`` float32 kernel
-    (accelerator throughput; numpy is the reference semantics).
+
+    ``backend`` selects the tick's compute path:
+
+    - ``"numpy"`` — the float64 reference semantics (the goldens path);
+    - ``"jit"`` — water-filling through the ``jax.jit`` float32 kernel
+      (spine-linked topologies still fall back to numpy);
+    - ``"pallas"`` — device-resident tick: Pallas selection + water-fill
+      kernels (``repro.kernels.swarm``), have-matrix / replica counts /
+      jitter held on device across ticks. Falls back to ``"jit"`` with a
+      warning when the installed jax has no Pallas.
+
+    ``None`` normalizes from the deprecated ``jit`` flag (``True`` ->
+    ``"jit"``, else ``"numpy"``); after ``__post_init__`` the two fields
+    are always consistent (``jit == (backend == "jit")``).
     """
 
     dt: Optional[float] = None
     fanout: Optional[int] = None
     jit: bool = False
+    backend: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.dt is not None and self.dt <= 0:
             raise ValueError("fleet dt must be positive (or None for auto)")
         if self.fanout is not None and self.fanout < 1:
             raise ValueError("fleet fanout must be >= 1 (or None for auto)")
+        if self.backend is None:
+            if self.jit:
+                warnings.warn(
+                    "FleetSpec.jit is deprecated; use backend='jit'",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            self.backend = "jit" if self.jit else "numpy"
+        elif self.backend not in ("numpy", "jit", "pallas"):
+            raise ValueError(
+                f"fleet backend must be numpy|jit|pallas (got {self.backend!r})"
+            )
+        elif self.jit and self.backend != "jit":
+            raise ValueError(
+                f"deprecated jit=True conflicts with backend={self.backend!r}"
+            )
+        self.jit = self.backend == "jit"
 
     def to_dict(self) -> dict:
         return spec_to_dict(self)
@@ -297,6 +333,7 @@ class FleetResult:
     sim_time: float
     ticks: int
     dt: float
+    phase_seconds: Optional[dict] = None  # wall s: select/waterfill/bookkeeping/telemetry
 
     @property
     def n(self) -> int:
@@ -555,6 +592,34 @@ class FleetSwarmSim:
         self.rechoke_ticks = max(
             1, int(round(cfg.choke_interval / self.dt))
         )
+        # backend resolution: "pallas" needs the Pallas toolchain; degrade
+        # to the jit water-filling path with a warning rather than fail
+        self._backend = self.fleet_cfg.backend
+        self._dev = None
+        if self._backend == "pallas":
+            from .. import jax_compat
+
+            if not jax_compat.HAS_PALLAS:
+                warnings.warn(
+                    "FleetSpec.backend='pallas' requested but "
+                    "jax.experimental.pallas is unavailable; "
+                    "falling back to backend='jit'",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                self._backend = "jit"
+            else:
+                from ..kernels import swarm as swarm_kernels
+
+                self._dev = swarm_kernels.FleetDeviceState(
+                    self.jitter, self.swarm_class
+                )
+                self._waterfill_dev = swarm_kernels.fleet_waterfill
+        # wall-clock per phase across the whole run (run.py --profile)
+        self.phase_seconds = {
+            "select": 0.0, "waterfill": 0.0,
+            "bookkeeping": 0.0, "telemetry": 0.0,
+        }
         self._events.sort(key=lambda e: (e[0], e[1]))
         self._next_sample = 0.0
 
@@ -594,6 +659,8 @@ class FleetSwarmSim:
             return
         self.departed[rows] = True
         self.replicas -= self.have[rows].sum(axis=0)
+        if self._dev is not None:
+            self._dev.drop_rows(rows)
         if self.telemetry.enabled and self.n <= self.peer_event_limit:
             for i in rows:
                 self.telemetry.emit(
@@ -612,27 +679,40 @@ class FleetSwarmSim:
         """(Re-)select the current piece for ``rows`` on one stream class."""
         if rows.size == 0:
             return
-        missing = ~self.have[rows]
-        if stream == "http":
-            if not live_mirror:
-                return
-            if self.policy.mode == "http_first":
-                cand = missing.copy()
-            else:
-                cand = missing & ~self.swarm_class[None, :]
-                if self.policy.http_fallback:
-                    # origin rescue for swarm-routed pieces nobody serves
-                    cand |= missing & self.swarm_class[None, :] \
-                        & (self.replicas == 0)[None, :]
-            other = self.cur_swarm[rows]
+        if stream == "http" and not live_mirror:
+            return
+        t0 = perf_counter()
+        other = (
+            self.cur_swarm[rows] if stream == "http"
+            else self.cur_http[rows]
+        )
+        if self._dev is not None:
+            # device path: cand mask built on the accelerator, only the
+            # (k,) pick vector crosses back
+            pick = self._dev.select(
+                rows, other, stream=stream,
+                mode=self.policy.mode,
+                fallback=self.policy.http_fallback,
+            )
         else:
-            cand = missing & self.swarm_class[None, :] \
-                & (self.replicas > 0)[None, :]
-            other = self.cur_http[rows]
-        has_other = other >= 0
-        if has_other.any():
-            cand[np.flatnonzero(has_other), other[has_other]] = False
-        pick = batched_rarest(cand, self.replicas, self.jitter[rows])
+            missing = ~self.have[rows]
+            if stream == "http":
+                if self.policy.mode == "http_first":
+                    cand = missing.copy()
+                else:
+                    cand = missing & ~self.swarm_class[None, :]
+                    if self.policy.http_fallback:
+                        # origin rescue for swarm-routed pieces nobody serves
+                        cand |= missing & self.swarm_class[None, :] \
+                            & (self.replicas == 0)[None, :]
+            else:
+                cand = missing & self.swarm_class[None, :] \
+                    & (self.replicas > 0)[None, :]
+            has_other = other >= 0
+            if has_other.any():
+                cand[np.flatnonzero(has_other), other[has_other]] = False
+            pick = batched_rarest(cand, self.replicas, self.jitter[rows])
+        self.phase_seconds["select"] += perf_counter() - t0
         if stream == "http":
             self.cur_http[rows] = pick
             self.prog_http[rows[pick < 0]] = 0.0
@@ -686,8 +766,19 @@ class FleetSwarmSim:
         if self.sampler is not None:
             self.sampler.sample(self.now)
             self._next_sample = self.now + self.sampler.interval
+        # node capacity vectors are tick-invariant: peers 0..n-1, mirrors
+        # n..n+M-1 (hoisted out of the loop; failed mirrors admit nobody)
+        M = len(self.mirror_specs)
+        up_cap = np.concatenate([
+            self.up_bps,
+            [s.up_bps for s in self.mirror_specs],
+        ])
+        down_cap = np.concatenate([self.down_bps, np.full(M, INF)])
+        ph = self.phase_seconds
 
         for _ in range(max_ticks):
+            tick_t0 = perf_counter()
+            snap = ph["select"] + ph["waterfill"] + ph["telemetry"]
             t = self.now
             # events due exactly now (ticks snap onto event times below)
             while ei < len(ev) and ev[ei][0] <= t + 1e-9:
@@ -718,6 +809,7 @@ class FleetSwarmSim:
                 # idle: fast-forward to the next arrival boundary
                 nxt = self.arrive[~arrived].min()
                 self.now = t + dt0 * max(1.0, np.floor((nxt - t) / dt0))
+                ph["bookkeeping"] += perf_counter() - tick_t0
                 continue
             if t >= until:
                 break
@@ -807,12 +899,6 @@ class FleetSwarmSim:
             nsw = s_src.size
 
             if fsrc.size:
-                M = len(self.mirror_specs)
-                up_cap = np.concatenate([
-                    self.up_bps,
-                    [s.up_bps for s in self.mirror_specs],
-                ])
-                down_cap = np.concatenate([self.down_bps, np.full(M, INF)])
                 link_of = link_cap = None
                 if use_spine:
                     pod_src = np.where(
@@ -822,12 +908,19 @@ class FleetSwarmSim:
                     cross = (pod_src != pod_dst) | (pod_src < 0)
                     link_of = np.where(cross, 0, -1).astype(np.int64)
                     link_cap = np.array([self.spine_bps])
-                if self.fleet_cfg.jit and link_of is None:
+                wf_t0 = perf_counter()
+                if self._dev is not None:
+                    # Pallas kernel handles spine links natively
+                    rates = self._waterfill_dev(
+                        fsrc, fdst, up_cap, down_cap, link_of, link_cap
+                    )
+                elif self._backend == "jit" and link_of is None:
                     rates = _jax_waterfill(fsrc, fdst, up_cap, down_cap)
                 else:
                     rates = waterfill_rates(
                         fsrc, fdst, up_cap, down_cap, link_of, link_cap
                     )
+                ph["waterfill"] += perf_counter() - wf_t0
                 # --- advance one tick
                 sw_in = np.bincount(
                     fdst[:nsw], weights=rates[:nsw], minlength=n
@@ -871,6 +964,8 @@ class FleetSwarmSim:
                     self.have[rows, pieces] = True
                     self.nhave[rows] += 1
                     np.add.at(self.replicas, pieces, 1)
+                    if self._dev is not None:
+                        self._dev.add_pieces(rows, pieces)
                     prog[rows] -= sizes
                     self.downloaded[rows] += sizes
                     was_http_class = ~self.swarm_class[pieces]
@@ -914,9 +1009,15 @@ class FleetSwarmSim:
             self.now = t_end
             self.ticks += 1
             if self.sampler is not None:
+                tel_t0 = perf_counter()
                 while self._next_sample <= self.now + 1e-9:
                     self.sampler.sample(self._next_sample)
                     self._next_sample += self.sampler.interval
+                ph["telemetry"] += perf_counter() - tel_t0
+            # bookkeeping = tick wall minus what the timed phases took
+            ph["bookkeeping"] += (perf_counter() - tick_t0) - (
+                ph["select"] + ph["waterfill"] + ph["telemetry"] - snap
+            )
         else:
             raise RuntimeError("max_ticks exceeded — runaway fleet run")
         return self._result()
@@ -938,6 +1039,7 @@ class FleetSwarmSim:
             sim_time=self.now,
             ticks=self.ticks,
             dt=self.dt,
+            phase_seconds=dict(self.phase_seconds),
         )
 
     # ------------------------------------------------------------- gauges

@@ -95,6 +95,13 @@ def random_first(
     return int(cand[rng.integers(cand.size)])
 
 
+#: :func:`batched_rarest` scores in float32, so replica counts must stay
+#: exactly representable there. Counts are integers bounded by the fleet
+#: size, so anything below ``2**24`` round-trips through float32 exactly
+#: (and the 10⁵–10⁶ fleets this engine targets sit well under the bound).
+MAX_EXACT_AVAILABILITY = 1 << 24
+
+
 def batched_rarest(
     cand: np.ndarray, availability: np.ndarray, jitter: np.ndarray
 ) -> np.ndarray:
@@ -103,18 +110,38 @@ def batched_rarest(
     The fleet engine's vectorized counterpart of :func:`rarest_among`:
     ``cand`` is a ``(k, P)`` bool matrix (candidate pieces per selecting
     peer), ``availability`` the shared ``(P,)`` replica counts, ``jitter``
-    a ``(k, P)`` matrix of per-(peer, piece) tie-break values in ``[0, 1)``.
-    Because the jitter is strictly below 1, the winner always has minimal
-    integer availability — only equal-availability ties are broken by it
-    (fixed per peer rather than redrawn, so selection costs no per-tick
-    RNG). Returns a ``(k,)`` piece index vector, ``-1`` where a peer has
+    a ``(k, P)`` float32 matrix of per-(peer, piece) tie-break values in
+    ``[0, 1)``. The winner is the lexicographic minimum of
+    ``(availability, jitter, piece index)`` over the candidate set: the
+    jitter (strictly below 1) only breaks equal-availability ties, and is
+    fixed per peer rather than redrawn, so selection costs no per-tick
+    RNG. Returns a ``(k,)`` piece index vector, ``-1`` where a peer has
     no candidate.
+
+    The whole computation stays in float32 — the one ``(k, P)`` score
+    allocation is half what the former float64 sum cost. That is safe
+    because the two stages never *add* availability to jitter (a float32
+    sum would round the jitter away above small counts): availability is
+    an integer below :data:`MAX_EXACT_AVAILABILITY` (asserted), hence
+    exact in float32, and the jitter matrix is already float32, so the
+    two-stage argmin picks the identical index the exact float64
+    ``availability + jitter`` argmin would — equal-availability and
+    equal-jitter ties still resolve to the lowest piece index.
     """
-    score = jitter.astype(np.float64)        # the one (k, P) allocation
-    score += availability                    # broadcast, in place
-    np.copyto(score, np.inf, where=~cand)
+    assert int(availability.max(initial=0)) < MAX_EXACT_AVAILABILITY, (
+        "replica counts no longer exact in float32 — fleet too large"
+    )
+    score = np.where(
+        cand, availability.astype(np.float32), np.float32(np.inf)
+    )                                        # the one (k, P) allocation
+    rowmin = score.min(axis=1, keepdims=True)
+    empty = ~np.isfinite(rowmin[:, 0])       # before jitter overwrites inf
+    # minimal-availability slots get their jitter (< 1); every other
+    # candidate keeps availability >= rowmin + 1 > jitter, so the argmin
+    # lands on the smallest jitter among the rarest candidates
+    np.copyto(score, jitter, where=score == rowmin)
     pick = score.argmin(axis=1).astype(np.int64)
-    pick[~cand.any(axis=1)] = -1
+    pick[empty] = -1
     return pick
 
 

@@ -72,6 +72,58 @@ def jit(f, **kwargs):
     return jax.jit(f, **kwargs)
 
 
+# --------------------------------------------------------------------------- pallas
+#
+# The Pallas surface moved between jax lines (and some CPU-only installs
+# ship without a working Mosaic lowering), so kernel call sites never touch
+# ``jax.experimental.pallas`` directly: they resolve the modules and the
+# interpret default through these shims, and gate on ``HAS_PALLAS`` to fall
+# back to a plain-XLA path when Pallas is unavailable.
+
+try:  # pragma: no cover - exercised as a whole-module import
+    from jax.experimental import pallas as _pallas
+    from jax.experimental.pallas import tpu as _pallas_tpu
+
+    HAS_PALLAS = True
+except Exception:  # ImportError or a broken backend probe
+    _pallas = _pallas_tpu = None
+    HAS_PALLAS = False
+
+
+def pallas_modules():
+    """``(pl, pltpu)`` or raise — the one place kernels import Pallas from."""
+    if not HAS_PALLAS:
+        raise RuntimeError(
+            "jax.experimental.pallas is unavailable in this jax install; "
+            "gate on jax_compat.HAS_PALLAS and use the jit fallback"
+        )
+    return _pallas, _pallas_tpu
+
+
+def default_pallas_interpret() -> bool:
+    """Interpret-mode default: compile for real only on TPU backends.
+
+    CPU CI (and any non-TPU install) runs every Pallas kernel through the
+    interpreter so parity suites are executable everywhere; callers pass
+    ``interpret=None`` to mean "resolve per platform"."""
+    return jax.default_backend() != "tpu"
+
+
+def pallas_call(kernel, *, interpret=None, **kwargs):
+    """``pl.pallas_call`` with the platform-resolved interpret default.
+
+    Every new Pallas call site routes through here (the ROADMAP
+    compatibility rule): ``interpret=None`` becomes
+    :func:`default_pallas_interpret`, and an install without Pallas fails
+    with the explicit :func:`pallas_modules` error instead of an obscure
+    ImportError mid-trace.
+    """
+    pl, _ = pallas_modules()
+    if interpret is None:
+        interpret = default_pallas_interpret()
+    return pl.pallas_call(kernel, interpret=interpret, **kwargs)
+
+
 def set_mesh(mesh):
     """``jax.set_mesh`` context manager; on 0.4.x a concrete ``Mesh`` is
     itself the context manager that installs the ambient resource env."""

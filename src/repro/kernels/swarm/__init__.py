@@ -1,0 +1,11 @@
+from .ops import FleetDeviceState, fleet_waterfill, rarest_argmin
+from .ref import rarest_argmin_ref, waterfill_f32_ref, waterfill_jnp_ref
+
+__all__ = [
+    "FleetDeviceState",
+    "fleet_waterfill",
+    "rarest_argmin",
+    "rarest_argmin_ref",
+    "waterfill_f32_ref",
+    "waterfill_jnp_ref",
+]

@@ -1,0 +1,290 @@
+"""Pallas swarm kernels: masked rarest-argmin + max-min water-filling.
+
+The fleet engine's two per-tick hot loops, device-shaped:
+
+**Rarest-argmin** — piece selection over the ``(k, P)`` candidate matrix is
+a masked lexicographic argmin of ``(availability, jitter, piece index)``.
+The kernel tiles rows and pieces on a ``(row_blocks, piece_blocks)`` grid
+(pieces innermost) and carries per-row running minima ``(min_avail,
+min_jitter, min_index)`` in VMEM scratch across piece tiles. Availability
+and jitter are never *added* (a float32 sum would quantize the jitter away
+at large replica counts — see ``piece_selection.batched_rarest``); the
+cross-tile merge is strictly-less lexicographic, so an earlier tile wins
+exact ties and the result is the global first-occurrence argmin, making
+parity with the numpy engine *index-exact*, not a tolerance band.
+
+**Water-filling** — max-min progressive filling as a fixed-point
+``lax.while_loop`` (all unfrozen flows grow equally until a node or
+spine-link constraint saturates; flows through it freeze; repeat — at
+least one constraint binds per round, so ``2*nodes + links + 2`` rounds
+bound the loop and the early-exit fires long before). Per-round
+segment-sums (active flows per node/link) and per-flow saturation gathers
+run in flow tiles of ``block`` using one-hot matmuls — MXU-shaped, and
+exact even under bfloat16 MXU inputs because every operand is 0/1 or a
+small integer count with float32 accumulation. ``segments="scatter"``
+swaps in ``.at[].add`` / direct gathers for interpret-mode CI speed; both
+produce bit-identical float32 results (all segment values are exact
+integers, gathers touch one element), pinned by the parity suite.
+
+Exactness contract: the bit-for-bit oracle is ``ref.waterfill_jnp_ref``
+(a plain unpadded jnp loop compiled through the same XLA pipeline), which
+pins everything the kernel adds — tiling, padding, the dummy link slot,
+one-hot segment math. The numpy transliteration ``ref.waterfill_f32_ref``
+is ulp-close but *not* bitwise: XLA:CPU unconditionally contracts the
+``alloc + count * delta`` multiply-adds into single-rounded FMAs
+(``lax.optimization_barrier`` does not reach LLVM's codegen), while numpy
+rounds the multiply and add separately.
+
+Padding conventions (``ops.py`` supplies them): argmin pads rows/pieces
+with ``cand=False``; water-filling pads flows with ``src = dst = -1``
+(pre-frozen at rate 0, matching one-hot rows of zeros), nodes with zero
+capacity and zero degree, and maps unlinked flows to a dummy link slot of
+infinite capacity so the link channel always exists and the kernel takes
+the same branches with and without a spine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ... import jax_compat
+
+# plain-float inf stays a weakly-typed literal (folds to float32 in
+# kernel bodies without becoming a captured traced constant)
+F32_INF = jnp.inf
+
+
+# --------------------------------------------------------------------------- rarest-argmin
+
+
+def _rarest_argmin_kernel(
+    cand_ref, avail_ref, jit_ref, pick_ref, a_min, j_min, i_min,
+    *, npb: int, bp: int
+):
+    pl, _ = jax_compat.pallas_modules()
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        a_min[...] = jnp.full_like(a_min, F32_INF)
+        j_min[...] = jnp.full_like(j_min, F32_INF)
+        i_min[...] = jnp.full_like(i_min, -1)
+
+    c = cand_ref[...]
+    # stage 1: masked availability minimum per row within this piece tile
+    a = jnp.where(c, avail_ref[...][None, :], F32_INF)
+    tile_a = a.min(axis=1)
+    # stage 2: jitter among this tile's minimal-availability candidates
+    # (the `c &` guard keeps inf==inf rows of all-masked tiles out)
+    jm = jnp.where(c & (a == tile_a[:, None]), jit_ref[...], F32_INF)
+    tile_j = jm.min(axis=1)
+    # argmin returns the first occurrence -> lowest piece index in the tile
+    tile_i = jnp.argmin(jm, axis=1).astype(jnp.int32) + jnp.int32(j * bp)
+    prev_a = a_min[...]
+    prev_j = j_min[...]
+    # strictly-less merge: on exact (avail, jitter) ties the earlier tile
+    # (lower piece index) wins, matching the global first-occurrence argmin
+    better = (tile_a < prev_a) | ((tile_a == prev_a) & (tile_j < prev_j))
+    a_min[...] = jnp.where(better, tile_a, prev_a)
+    j_min[...] = jnp.where(better, tile_j, prev_j)
+    i_min[...] = jnp.where(better, tile_i, i_min[...])
+
+    @pl.when(j == npb - 1)
+    def _emit():
+        pick_ref[...] = i_min[...]  # rows never updated keep the -1 init
+
+
+def rarest_argmin_call(
+    cand: jax.Array,
+    avail: jax.Array,
+    jitter: jax.Array,
+    *,
+    block_rows: int = 128,
+    block_pieces: int = 256,
+    interpret=None,
+):
+    """``(k, P)`` bool candidates + ``(P,)`` float32 availability + ``(k, P)``
+    float32 jitter -> ``(k,)`` int32 picks (``-1`` = no candidate).
+
+    Shapes must already be multiples of the block sizes (``ops.py`` pads);
+    traceable, so it composes under ``jax.jit``.
+    """
+    k, P = cand.shape
+    assert k % block_rows == 0 and P % block_pieces == 0
+    nkb, npb = k // block_rows, P // block_pieces
+    pl, pltpu = jax_compat.pallas_modules()
+    kernel = functools.partial(
+        _rarest_argmin_kernel, npb=npb, bp=block_pieces
+    )
+    return jax_compat.pallas_call(
+        kernel,
+        grid=(nkb, npb),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_pieces), lambda i, j: (i, j)),
+            pl.BlockSpec((block_pieces,), lambda i, j: (j,)),
+            pl.BlockSpec((block_rows, block_pieces), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand, avail, jitter)
+
+
+# --------------------------------------------------------------------------- water-filling
+
+
+def _waterfill_kernel(
+    src_ref, dst_ref, lnk_ref, up_ref, dn_ref, lcap_ref,
+    rate_ref, iters_ref,
+    *, n_iter: int, block: int, pn: int, pnl: int, segments: str
+):
+    src = src_ref[...]
+    dst = dst_ref[...]
+    lnk = lnk_ref[...]
+    up = up_ref[...]
+    dn = dn_ref[...]
+    lcap = lcap_ref[...]
+    pf = src.shape[0]
+    ntiles = pf // block
+
+    def tile(vec, t):
+        return lax.dynamic_slice(vec, (t * block,), (block,))
+
+    def onehot(idx_tile, width):
+        iota = lax.broadcasted_iota(jnp.int32, (block, width), 1)
+        return (idx_tile[:, None] == iota).astype(jnp.float32)
+
+    if segments == "onehot":
+
+        def counts(act):
+            def body(t, accs):
+                nu, nd, nl = accs
+                w = tile(act, t)
+                nu = nu + w @ onehot(tile(src, t), pn)
+                nd = nd + w @ onehot(tile(dst, t), pn)
+                nl = nl + w @ onehot(tile(lnk, t), pnl)
+                return (nu, nd, nl)
+
+            zn = jnp.zeros(pn, jnp.float32)
+            return lax.fori_loop(
+                0, ntiles, body, (zn, zn, jnp.zeros(pnl, jnp.float32))
+            )
+
+        def flow_hits(sat_u, sat_d, sat_l):
+            def body(t, out):
+                hit = (
+                    onehot(tile(src, t), pn) @ sat_u
+                    + onehot(tile(dst, t), pn) @ sat_d
+                    + onehot(tile(lnk, t), pnl) @ sat_l
+                )
+                return lax.dynamic_update_slice(out, hit > 0, (t * block,))
+
+            return lax.fori_loop(0, ntiles, body, jnp.zeros(pf, bool))
+
+    else:  # "scatter": interpret-mode fast path, bit-identical results
+
+        def counts(act):
+            safe_s = jnp.where(src < 0, pn - 1, src)  # -1 pads carry act=0
+            safe_d = jnp.where(dst < 0, pn - 1, dst)
+            nu = jnp.zeros(pn, jnp.float32).at[safe_s].add(act)
+            nd = jnp.zeros(pn, jnp.float32).at[safe_d].add(act)
+            nl = jnp.zeros(pnl, jnp.float32).at[lnk].add(act)
+            return (nu, nd, nl)
+
+        def flow_hits(sat_u, sat_d, sat_l):
+            safe_s = jnp.where(src < 0, pn - 1, src)
+            safe_d = jnp.where(dst < 0, pn - 1, dst)
+            return (sat_u[safe_s] + sat_d[safe_d] + sat_l[lnk]) > 0
+
+    def body(state):
+        rate, frozen, up_a, dn_a, lk_a, it, done = state
+        act = (~frozen).astype(jnp.float32)
+        n_up, n_dn, n_lk = counts(act)
+        du = jnp.where(n_up > 0, (up - up_a) / n_up, F32_INF)
+        dd = jnp.where(n_dn > 0, (dn - dn_a) / n_dn, F32_INF)
+        dl = jnp.where(n_lk > 0, (lcap - lk_a) / n_lk, F32_INF)
+        delta = jnp.minimum(jnp.minimum(du.min(), dd.min()), dl.min())
+        ok = jnp.isfinite(delta)
+        # a non-finite delta means no active flow touches any finite
+        # capacity; the reference breaks before updating -- delta = 0 makes
+        # every update below an exact no-op and `done` exits the loop
+        delta = jnp.where(ok, jnp.maximum(delta, jnp.float32(0.0)), 0.0)
+        rate = rate + act * delta
+        up_a = up_a + n_up * delta
+        dn_a = dn_a + n_dn * delta
+        lk_a = lk_a + n_lk * delta
+        tol = delta + jnp.float32(1e-6)
+        sat_u = ((du <= tol) & (n_up > 0)).astype(jnp.float32)
+        sat_d = ((dd <= tol) & (n_dn > 0)).astype(jnp.float32)
+        sat_l = ((dl <= tol) & (n_lk > 0)).astype(jnp.float32)
+        newly = (~frozen) & flow_hits(sat_u, sat_d, sat_l)
+        done = ~(ok & newly.any())
+        return (rate, frozen | newly, up_a, dn_a, lk_a, it + 1, done)
+
+    def cond(state):
+        _, frozen, _, _, _, it, done = state
+        return (~done) & (it < n_iter) & (~frozen.all())
+
+    init = (
+        jnp.zeros(pf, jnp.float32),
+        src < 0,  # padded flows pre-frozen at rate 0
+        jnp.zeros(pn, jnp.float32),
+        jnp.zeros(pn, jnp.float32),
+        jnp.zeros(pnl, jnp.float32),
+        jnp.int32(0),
+        jnp.asarray(False),
+    )
+    out = lax.while_loop(cond, body, init)
+    rate_ref[...] = out[0]
+    iters_ref[0] = out[5]
+
+
+def waterfill_call(
+    src: jax.Array,
+    dst: jax.Array,
+    lnk: jax.Array,
+    up_cap: jax.Array,
+    down_cap: jax.Array,
+    link_cap: jax.Array,
+    *,
+    n_iter: int,
+    block: int = 256,
+    segments: str = "onehot",
+    interpret=None,
+):
+    """Padded flow table -> ``((pf,) float32 rates, (1,) int32 rounds)``.
+
+    ``src``/``dst``/``lnk`` are int32 node/link indices per flow (``-1``
+    src/dst = padding; ``lnk`` already maps unlinked flows to the dummy
+    slot). The fixed point is sequential, so the kernel is single-program
+    (no pallas grid) and tiles the flow axis internally; see the module
+    docstring for the ``segments`` modes.
+    """
+    assert segments in ("onehot", "scatter")
+    pf = src.shape[0]
+    assert pf % block == 0
+    kernel = functools.partial(
+        _waterfill_kernel,
+        n_iter=n_iter,
+        block=block,
+        pn=up_cap.shape[0],
+        pnl=link_cap.shape[0],
+        segments=segments,
+    )
+    return jax_compat.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((pf,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(src, dst, lnk, up_cap, down_cap, link_cap)

@@ -1,0 +1,317 @@
+"""Host-facing wrappers for the swarm kernels + device-resident fleet state.
+
+Three layers, mirroring the checksum/attention packages:
+
+- :func:`rarest_argmin` / :func:`fleet_waterfill` — numpy-in/numpy-out
+  convenience wrappers that pad to kernel tile multiples (rows/pieces with
+  ``cand=False``; flows to a power of two with ``src = dst = -1``
+  pre-frozen padding; unlinked flows onto the infinite-capacity dummy link
+  slot) and cache one ``jax.jit`` entry point per static configuration.
+
+- :class:`FleetDeviceState` — what ``FleetSpec.backend = "pallas"`` hangs
+  onto: the ``(n, P)`` have-matrix, the fixed float32 jitter, and the
+  replica counts live on device across ticks. Per-tick selection builds
+  the candidate mask *on device* (the dominant ``(k, P)`` traffic never
+  leaves the accelerator) and transfers back only the ``(k,)`` pick
+  vector; completions/departures are incremental scatter updates sized by
+  the number of finished pieces, not by ``n * P``. Padding rows use
+  out-of-bounds indices, which jax scatter semantics drop (``mode="drop"``
+  made explicit below), so variable-size updates reuse a handful of
+  power-of-two traces.
+
+Everything resolves ``interpret`` through :mod:`repro.jax_compat` so the
+same code path is CPU-testable in CI and compiled on TPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+from ... import jax_compat
+from ...core.piece_selection import MAX_EXACT_AVAILABILITY
+from .kernel import rarest_argmin_call, waterfill_call
+
+BLOCK_ROWS = 128
+BLOCK_PIECES = 256
+BLOCK_FLOWS = 256
+
+
+def _next_pow2(x: int, lo: int = 0) -> int:
+    return 1 << max(lo, int(x - 1).bit_length() if x > 1 else 0)
+
+
+def _resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax_compat.default_pallas_interpret()
+    return bool(interpret)
+
+
+# --------------------------------------------------------------------------- rarest-argmin
+
+
+@functools.lru_cache(maxsize=None)
+def _rarest_jit(bk: int, bp: int, interpret: bool):
+    import jax.numpy as jnp  # noqa: F401  (deferred: numpy engine stays jax-free)
+
+    def fn(cand, avail, jitter):
+        return rarest_argmin_call(
+            cand, avail, jitter,
+            block_rows=bk, block_pieces=bp, interpret=interpret,
+        )
+
+    return jax_compat.jit(fn)
+
+
+def rarest_argmin(
+    cand: np.ndarray,
+    availability: np.ndarray,
+    jitter: np.ndarray,
+    *,
+    interpret=None,
+) -> np.ndarray:
+    """Kernel-backed :func:`~repro.core.piece_selection.batched_rarest`:
+    identical signature and index-exact results (``-1`` = no candidate)."""
+    cand = np.asarray(cand, dtype=bool)
+    k, P = cand.shape
+    if k == 0:
+        return np.zeros(0, dtype=np.int64)
+    avail = np.asarray(availability)
+    assert int(avail.max(initial=0)) < MAX_EXACT_AVAILABILITY, (
+        "replica counts no longer exact in float32 — fleet too large"
+    )
+    interpret = _resolve_interpret(interpret)
+    bk = min(BLOCK_ROWS, _next_pow2(k, 3))
+    bp = min(BLOCK_PIECES, _next_pow2(P, 3))
+    kp = -(-k // bk) * bk
+    Pp = -(-P // bp) * bp
+    candp = np.zeros((kp, Pp), dtype=bool)
+    candp[:k, :P] = cand
+    availp = np.zeros(Pp, dtype=np.float32)
+    availp[:P] = avail
+    jitp = np.zeros((kp, Pp), dtype=np.float32)
+    jitp[:k, :P] = jitter
+    out = _rarest_jit(bk, bp, interpret)(candp, availp, jitp)
+    return np.asarray(out)[:k].astype(np.int64)
+
+
+# --------------------------------------------------------------------------- water-filling
+
+
+@functools.lru_cache(maxsize=None)
+def _waterfill_jit(n_iter: int, block: int, segments: str, interpret: bool):
+    def fn(s, d, lk, up, dn, lc):
+        return waterfill_call(
+            s, d, lk, up, dn, lc,
+            n_iter=n_iter, block=block, segments=segments,
+            interpret=interpret,
+        )
+
+    return jax_compat.jit(fn)
+
+
+def fleet_waterfill(
+    src: np.ndarray,
+    dst: np.ndarray,
+    up_cap: np.ndarray,
+    down_cap: np.ndarray,
+    link_of: Optional[np.ndarray] = None,
+    link_cap: Optional[np.ndarray] = None,
+    *,
+    segments: Optional[str] = None,
+    interpret=None,
+    block: int = BLOCK_FLOWS,
+) -> np.ndarray:
+    """Kernel-backed :func:`~repro.core.fleet.waterfill_rates` (float32;
+    spine links supported). Bit-identical to ``ref.waterfill_f32_ref``;
+    within a band of the float64 goldens path.
+
+    ``segments=None`` picks ``"scatter"`` in interpret mode (CPU CI speed)
+    and ``"onehot"`` (MXU tiles) when compiling — the two are bit-identical
+    (integer segment sums, one-hot gathers).
+    """
+    import jax.numpy as jnp  # deferred: numpy engine stays jax-free
+
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    nf = src.size
+    if nf == 0:
+        return np.zeros(0, dtype=np.float64)
+    interpret = _resolve_interpret(interpret)
+    if segments is None:
+        segments = "scatter" if interpret else "onehot"
+    nn = np.asarray(up_cap).size
+    nl = 0
+    if link_of is not None and link_cap is not None:
+        link_of = np.asarray(link_of, dtype=np.int64)
+        if (link_of >= 0).any():
+            nl = np.asarray(link_cap).size
+    pf = _next_pow2(nf, 3)
+    block = min(block, pf)
+    pn = _next_pow2(nn, 3)
+    pnl = _next_pow2(nl + 1)
+    n_iter = 2 * nn + nl + 2  # real constraint count bounds the fixed point
+
+    s = np.full(pf, -1, dtype=np.int32)
+    d = np.full(pf, -1, dtype=np.int32)
+    s[:nf] = src
+    d[:nf] = dst
+    lk = np.full(pf, nl, dtype=np.int32)  # dummy slot (also for padding)
+    if nl:
+        lk[:nf] = np.where(link_of >= 0, link_of, nl)
+    up = np.zeros(pn, dtype=np.float32)
+    dn = np.zeros(pn, dtype=np.float32)
+    up[:nn] = up_cap
+    dn[:nn] = down_cap
+    lc = np.zeros(pnl, dtype=np.float32)
+    lc[nl] = np.inf
+    if nl:
+        lc[:nl] = link_cap
+    rate, _ = _waterfill_jit(n_iter, block, segments, interpret)(
+        jnp.asarray(s), jnp.asarray(d), jnp.asarray(lk),
+        jnp.asarray(up), jnp.asarray(dn), jnp.asarray(lc),
+    )
+    return np.asarray(rate[:nf], dtype=np.float64)
+
+
+# --------------------------------------------------------------------------- device state
+
+
+@functools.lru_cache(maxsize=None)
+def _select_jit(
+    stream_http: bool, http_first: bool, fallback: bool,
+    bk: int, bp: int, interpret: bool,
+):
+    import jax.numpy as jnp
+
+    def fn(have, jitter, repl, swarm_class, rows, other):
+        _, P = have.shape
+        miss = ~have[rows]  # (k, P) — built and consumed on device
+        if stream_http:
+            if http_first:
+                cand = miss
+            else:
+                cand = miss & ~swarm_class[None, :]
+                if fallback:
+                    # origin rescue for swarm-routed pieces nobody serves
+                    cand = cand | (
+                        miss & swarm_class[None, :] & (repl == 0)[None, :]
+                    )
+        else:
+            cand = miss & swarm_class[None, :] & (repl > 0)[None, :]
+        # a peer's two streams exclude each other's current piece
+        pid = jnp.arange(P, dtype=other.dtype)[None, :]
+        cand = cand & ~((other[:, None] >= 0) & (pid == other[:, None]))
+        k = rows.shape[0]
+        kp = -(-k // bk) * bk
+        Pp = -(-P // bp) * bp
+        cand = jnp.pad(cand, ((0, kp - k), (0, Pp - P)))
+        avail = jnp.pad(repl.astype(jnp.float32), (0, Pp - P))
+        jit_rows = jnp.pad(jitter[rows], ((0, kp - k), (0, Pp - P)))
+        return rarest_argmin_call(
+            cand, avail, jit_rows,
+            block_rows=bk, block_pieces=bp, interpret=interpret,
+        )
+
+    return jax_compat.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _add_pieces_jit():
+    def fn(have, repl, rows, pieces):
+        # out-of-bounds padding indices are dropped, so one trace serves
+        # every power-of-two batch size
+        have = have.at[rows, pieces].set(True, mode="drop")
+        repl = repl.at[pieces].add(1, mode="drop")
+        return have, repl
+
+    return jax_compat.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _drop_rows_jit():
+    def fn(have, repl, rows):
+        got = have.at[rows].get(mode="fill", fill_value=False)
+        return repl - got.sum(axis=0).astype(repl.dtype)
+
+    return jax_compat.jit(fn)
+
+
+class FleetDeviceState:
+    """Device-resident selection state for ``FleetSpec.backend="pallas"``.
+
+    Holds the have-matrix, fixed jitter, replica counts, and the static
+    swarm-routing class on device across ticks. The engine keeps its numpy
+    mirrors for scalar control flow (leech masks, host-RNG source
+    sampling); the ``O(n * P)`` candidate-mask + argmin traffic — the
+    fleet tick's dominant term — happens here, and only ``(k,)`` pick
+    vectors cross back per call.
+    """
+
+    def __init__(self, jitter: np.ndarray, swarm_class: np.ndarray,
+                 *, interpret=None) -> None:
+        import jax.numpy as jnp
+
+        self._jnp = jnp
+        n, P = jitter.shape
+        assert n < MAX_EXACT_AVAILABILITY, (
+            "replica counts no longer exact in float32 — fleet too large"
+        )
+        self.n, self.P = n, P
+        self.interpret = _resolve_interpret(interpret)
+        self.have = jnp.zeros((n, P), dtype=bool)
+        self.jitter = jnp.asarray(jitter, dtype=jnp.float32)
+        self.repl = jnp.zeros(P, dtype=jnp.int32)
+        self.swarm_class = jnp.asarray(swarm_class, dtype=bool)
+        self.bk = min(BLOCK_ROWS, _next_pow2(n, 3))
+        self.bp = min(BLOCK_PIECES, _next_pow2(P, 3))
+
+    def select(self, rows: np.ndarray, other: np.ndarray, *,
+               stream: str, mode: str, fallback: bool) -> np.ndarray:
+        """Device cand-build + rarest-argmin for ``rows`` on one stream.
+
+        Semantics mirror ``FleetSwarmSim._select`` exactly (index-exact
+        parity is pinned by the engine-equivalence test).
+        """
+        jnp = self._jnp
+        k = rows.size
+        kp = _next_pow2(k, 3)  # pad row batches to bound retraces
+        rows_p = np.zeros(kp, dtype=np.int32)
+        rows_p[:k] = rows
+        other_p = np.full(kp, -1, dtype=np.int32)
+        other_p[:k] = other
+        fn = _select_jit(
+            stream == "http", mode == "http_first", bool(fallback),
+            self.bk, self.bp, self.interpret,
+        )
+        out = fn(
+            self.have, self.jitter, self.repl, self.swarm_class,
+            jnp.asarray(rows_p), jnp.asarray(other_p),
+        )
+        return np.asarray(out)[:k].astype(np.int64)
+
+    def add_pieces(self, rows: np.ndarray, pieces: np.ndarray) -> None:
+        """Piece completions: scatter ``have[rows, pieces] = True`` and
+        bump replica counts (padded with out-of-bounds drops)."""
+        jnp = self._jnp
+        k = rows.size
+        kp = _next_pow2(k, 3)
+        r = np.full(kp, self.n, dtype=np.int32)
+        p = np.full(kp, self.P, dtype=np.int32)
+        r[:k] = rows
+        p[:k] = pieces
+        self.have, self.repl = _add_pieces_jit()(
+            self.have, self.repl, jnp.asarray(r), jnp.asarray(p)
+        )
+
+    def drop_rows(self, rows: np.ndarray) -> None:
+        """Departures: remove the rows' held pieces from the replica
+        counts (the have rows themselves stay, as on the host)."""
+        jnp = self._jnp
+        k = rows.size
+        kp = _next_pow2(k, 3)
+        r = np.full(kp, self.n, dtype=np.int32)  # OOB gather -> fill False
+        r[:k] = rows
+        self.repl = _drop_rows_jit()(self.have, self.repl, jnp.asarray(r))

@@ -1,0 +1,211 @@
+"""Reference implementations for the swarm kernels.
+
+Three oracles, three exactness contracts:
+
+- :func:`rarest_argmin_ref` — piece selection is *index-exact*: the fixed
+  per-(peer, piece) jitter makes ties deterministic, so the Pallas kernel
+  must return the identical index vector, not an approximation. The oracle
+  is :func:`repro.core.piece_selection.batched_rarest` itself (the engine
+  hot path), re-exported so the parity suite pins kernel == engine.
+
+- :func:`waterfill_jnp_ref` — the *bit-for-bit* water-filling oracle
+  (checksum-idiom pure-jnp): the same fixed point as the kernel, but
+  unpadded, untiled, scatter-based, compiled through the same XLA
+  pipeline. Comparing the kernel against it pins exactly what the kernel
+  adds — flow tiling, the padding conventions, the dummy link slot, and
+  the one-hot segment math — with zero tolerance.
+
+- :func:`waterfill_f32_ref` — a float32 numpy transliteration of
+  :func:`repro.core.fleet.waterfill_rates` (same bincount / min ordering,
+  same ``newly``-freeze rule, ``1e-6`` saturation tolerance in place of
+  the float64 path's ``1e-12``). It is ulp-close to the kernel but not
+  bitwise: XLA:CPU unconditionally contracts ``alloc + count * delta``
+  into single-rounded FMAs, numpy rounds multiply and add separately, so
+  cross-domain parity is pinned at a tight relative band instead. The
+  float64 ``waterfill_rates`` remains the goldens semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+from ... import jax_compat
+from ...core.piece_selection import batched_rarest
+
+F32 = np.float32
+F32_INF = np.float32(np.inf)
+
+
+def rarest_argmin_ref(
+    cand: np.ndarray, availability: np.ndarray, jitter: np.ndarray
+) -> np.ndarray:
+    """The engine's masked rarest-first argmin (lexicographic minimum of
+    ``(availability, jitter, piece index)`` over candidates; ``-1`` for
+    all-masked rows)."""
+    return batched_rarest(cand, availability, jitter)
+
+
+def _link_channel(nf, link_of, link_cap):
+    """Unlinked flows map onto a dummy slot of infinite capacity, so the
+    link channel always exists and every path takes identical branches."""
+    nl = 0
+    if link_of is not None and link_cap is not None:
+        link_of = np.asarray(link_of, dtype=np.int64)
+        if (link_of >= 0).any():
+            nl = np.asarray(link_cap).size
+    if nl:
+        lnk = np.where(link_of >= 0, link_of, nl)
+        lcap = np.concatenate([np.asarray(link_cap, dtype=F32), [F32_INF]])
+    else:
+        lnk = np.zeros(nf, dtype=np.int64)
+        lcap = np.array([F32_INF], dtype=F32)
+    return nl, lnk, lcap
+
+
+def waterfill_f32_ref(
+    src: np.ndarray,
+    dst: np.ndarray,
+    up_cap: np.ndarray,
+    down_cap: np.ndarray,
+    link_of: Optional[np.ndarray] = None,
+    link_cap: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Float32 numpy max-min progressive filling (algorithmic reference).
+
+    Returns the ``(nf,)`` float32 rate vector. See the module docstring
+    for the exactness contract; ``tests/test_fleet.py`` separately pins
+    the float64 :func:`~repro.core.fleet.waterfill_rates` to the netsim.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    nf = src.size
+    if nf == 0:
+        return np.zeros(0, dtype=F32)
+    up = np.asarray(up_cap, dtype=F32)
+    dn = np.asarray(down_cap, dtype=F32)
+    nn = up.size
+    nl, lnk, lcap = _link_channel(nf, link_of, link_cap)
+
+    rate = np.zeros(nf, dtype=F32)
+    frozen = np.zeros(nf, dtype=bool)
+    up_a = np.zeros(nn, dtype=F32)
+    dn_a = np.zeros(nn, dtype=F32)
+    lk_a = np.zeros(nl + 1, dtype=F32)
+
+    for _ in range(2 * nn + nl + 2):  # each round saturates >= 1 constraint
+        active = ~frozen
+        if not active.any():
+            break
+        n_up = np.bincount(src[active], minlength=nn).astype(F32)
+        n_dn = np.bincount(dst[active], minlength=nn).astype(F32)
+        n_lk = np.bincount(lnk[active], minlength=nl + 1).astype(F32)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            du = np.where(n_up > 0, (up - up_a) / n_up, F32_INF)
+            dd = np.where(n_dn > 0, (dn - dn_a) / n_dn, F32_INF)
+            dl = np.where(n_lk > 0, (lcap - lk_a) / n_lk, F32_INF)
+        delta = min(du.min(), dd.min(), dl.min())
+        if not np.isfinite(delta):
+            break
+        delta = max(delta, F32(0.0))
+        rate[active] += delta
+        up_a += n_up * delta
+        dn_a += n_dn * delta
+        lk_a += n_lk * delta
+        tol = F32(delta + F32(1e-6))
+        sat_u = (du <= tol) & (n_up > 0)
+        sat_d = (dd <= tol) & (n_dn > 0)
+        sat_l = (dl <= tol) & (n_lk > 0)
+        newly = active & (sat_u[src] | sat_d[dst] | sat_l[lnk])
+        if not newly.any():
+            break
+        frozen |= newly
+    return rate
+
+
+@functools.lru_cache(maxsize=None)
+def _jnp_fill(n_iter: int):
+    import jax.numpy as jnp
+    from jax import lax
+
+    def fn(src, dst, lnk, up, dn, lcap):
+        nn = up.shape[0]
+        pnl = lcap.shape[0]
+
+        def body(state):
+            rate, frozen, up_a, dn_a, lk_a, it, done = state
+            act = (~frozen).astype(jnp.float32)
+            n_up = jnp.zeros(nn, jnp.float32).at[src].add(act)
+            n_dn = jnp.zeros(nn, jnp.float32).at[dst].add(act)
+            n_lk = jnp.zeros(pnl, jnp.float32).at[lnk].add(act)
+            du = jnp.where(n_up > 0, (up - up_a) / n_up, jnp.inf)
+            dd = jnp.where(n_dn > 0, (dn - dn_a) / n_dn, jnp.inf)
+            dl = jnp.where(n_lk > 0, (lcap - lk_a) / n_lk, jnp.inf)
+            delta = jnp.minimum(jnp.minimum(du.min(), dd.min()), dl.min())
+            ok = jnp.isfinite(delta)
+            delta = jnp.where(ok, jnp.maximum(delta, jnp.float32(0.0)), 0.0)
+            rate = rate + act * delta
+            up_a = up_a + n_up * delta
+            dn_a = dn_a + n_dn * delta
+            lk_a = lk_a + n_lk * delta
+            tol = delta + jnp.float32(1e-6)
+            sat_u = ((du <= tol) & (n_up > 0)).astype(jnp.float32)
+            sat_d = ((dd <= tol) & (n_dn > 0)).astype(jnp.float32)
+            sat_l = ((dl <= tol) & (n_lk > 0)).astype(jnp.float32)
+            newly = (~frozen) & ((sat_u[src] + sat_d[dst] + sat_l[lnk]) > 0)
+            done = ~(ok & newly.any())
+            return (rate, frozen | newly, up_a, dn_a, lk_a, it + 1, done)
+
+        def cond(state):
+            _, frozen, _, _, _, it, done = state
+            return (~done) & (it < n_iter) & (~frozen.all())
+
+        nf = src.shape[0]
+        init = (
+            jnp.zeros(nf, jnp.float32),
+            jnp.zeros(nf, dtype=bool),
+            jnp.zeros(nn, jnp.float32),
+            jnp.zeros(nn, jnp.float32),
+            jnp.zeros(pnl, jnp.float32),
+            jnp.int32(0),
+            jnp.asarray(False),
+        )
+        return lax.while_loop(cond, body, init)[0]
+
+    return jax_compat.jit(fn)
+
+
+def waterfill_jnp_ref(
+    src: np.ndarray,
+    dst: np.ndarray,
+    up_cap: np.ndarray,
+    down_cap: np.ndarray,
+    link_of: Optional[np.ndarray] = None,
+    link_cap: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Pure-jnp water-filling oracle: unpadded, untiled, scatter-based.
+
+    The kernel must match this *bit for bit* in both segment modes — the
+    diff between the two is precisely the machinery under test (tiling,
+    padding, dummy slots, one-hot segment sums).
+    """
+    import jax.numpy as jnp
+
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    nf = src.size
+    if nf == 0:
+        return np.zeros(0, dtype=F32)
+    nn = np.asarray(up_cap).size
+    nl, lnk, lcap = _link_channel(nf, link_of, link_cap)
+    out = _jnp_fill(2 * nn + nl + 2)(
+        jnp.asarray(src, dtype=jnp.int32),
+        jnp.asarray(dst, dtype=jnp.int32),
+        jnp.asarray(lnk, dtype=jnp.int32),
+        jnp.asarray(np.asarray(up_cap, dtype=F32)),
+        jnp.asarray(np.asarray(down_cap, dtype=F32)),
+        jnp.asarray(lcap),
+    )
+    return np.asarray(out)

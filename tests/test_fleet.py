@@ -149,8 +149,31 @@ def test_fleet_spec_validation_and_roundtrip():
         FleetSpec(dt=0.0)
     with pytest.raises(ValueError):
         FleetSpec(fanout=0)
-    spec = FleetSpec(dt=0.5, fanout=3, jit=True)
+    with pytest.warns(DeprecationWarning, match="backend='jit'"):
+        spec = FleetSpec(dt=0.5, fanout=3, jit=True)
     assert FleetSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_fleet_spec_backend_knob():
+    # normalization: the deprecated jit flag and the backend knob stay
+    # consistent in both directions
+    assert FleetSpec().backend == "numpy"
+    assert FleetSpec(backend="jit").jit is True
+    with pytest.warns(DeprecationWarning, match="backend='jit'"):
+        legacy = FleetSpec(jit=True)
+    assert legacy.backend == "jit"
+    assert legacy == FleetSpec(backend="jit")
+    with pytest.raises(ValueError, match="numpy|jit|pallas"):
+        FleetSpec(backend="cuda")
+    with pytest.raises(ValueError, match="conflicts"):
+        FleetSpec(jit=True, backend="numpy")
+    for backend in ("numpy", "jit", "pallas"):
+        spec = FleetSpec(backend=backend)
+        assert FleetSpec.from_dict(spec.to_dict()) == spec
+        assert spec.to_dict()["backend"] == backend
+    # pre-backend dicts (no "backend" key) still load
+    old = FleetSpec.from_dict({"dt": 1.0, "fanout": None, "jit": False})
+    assert old.backend == "numpy"
 
 
 def test_fleet_rejects_unsupported_policies():

@@ -1,0 +1,300 @@
+"""Swarm kernels (rarest-argmin + water-filling) vs their oracles.
+
+Three exactness tiers (see ``repro/kernels/swarm/ref.py``):
+
+- rarest-argmin is *index-exact* against the numpy engine hot path;
+- the water-filling kernel is *bit-exact* against the pure-jnp oracle in
+  both segment modes (tiling / padding / dummy-slot machinery adds
+  nothing);
+- against numpy references it holds a tight relative band (XLA:CPU fuses
+  ``alloc + count * delta`` into FMAs; numpy rounds twice), and the
+  engine-level test pins that the band never moves a piece completion on
+  the smoke scenario — piece-granular ledgers match the numpy engine
+  exactly.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import jax_compat
+from repro.core.fleet import waterfill_rates
+from repro.core.piece_selection import batched_rarest
+from repro.kernels.swarm import (
+    FleetDeviceState,
+    fleet_waterfill,
+    rarest_argmin,
+    waterfill_f32_ref,
+    waterfill_jnp_ref,
+)
+
+pytestmark = pytest.mark.skipif(
+    not jax_compat.HAS_PALLAS, reason="jax.experimental.pallas unavailable"
+)
+
+RNG = np.random.default_rng(7)
+SCENARIOS = pathlib.Path(__file__).parent.parent / "benchmarks" / "scenarios"
+
+
+# ------------------------------------------------------------------ rarest-argmin
+
+
+def _random_selection(k, P, density):
+    cand = RNG.random((k, P)) < density
+    avail = RNG.integers(0, 50, P).astype(np.float64)
+    jitter = RNG.random((k, P), dtype=np.float32)
+    return cand, avail, jitter
+
+
+@pytest.mark.parametrize(
+    "k,P,density",
+    [
+        (1, 1, 1.0),         # minimum everything
+        (3, 5, 0.6),         # tiny, non-pow2
+        (17, 100, 0.3),      # non-multiples of both block dims
+        (128, 256, 0.5),     # exactly one tile
+        (130, 300, 0.1),     # spills into partial tiles, sparse
+        (64, 1000, 0.9),     # many piece tiles, dense
+        (200, 37, 0.4),      # more rows than pieces
+    ],
+)
+def test_rarest_argmin_index_exact(k, P, density):
+    cand, avail, jitter = _random_selection(k, P, density)
+    np.testing.assert_array_equal(
+        rarest_argmin(cand, avail, jitter),
+        batched_rarest(cand, avail, jitter),
+    )
+
+
+def test_rarest_argmin_all_masked_rows():
+    cand, avail, jitter = _random_selection(40, 90, 0.5)
+    cand[::3] = False  # every third row has no candidate -> -1
+    out = rarest_argmin(cand, avail, jitter)
+    assert (out[::3] == -1).all()
+    np.testing.assert_array_equal(out, batched_rarest(cand, avail, jitter))
+
+
+def test_rarest_argmin_single_candidate_rows():
+    k, P = 31, 70
+    cand = np.zeros((k, P), dtype=bool)
+    only = RNG.integers(0, P, k)
+    cand[np.arange(k), only] = True
+    avail = RNG.integers(0, 9, P).astype(np.float64)
+    jitter = RNG.random((k, P), dtype=np.float32)
+    np.testing.assert_array_equal(rarest_argmin(cand, avail, jitter), only)
+
+
+def test_rarest_argmin_forced_ties():
+    # constant availability and heavily quantized jitter force both
+    # tie-break stages: the lexicographic (avail, jitter, index) order and
+    # first-occurrence argmin must match the numpy engine across tiles
+    k, P = 64, 520
+    cand = RNG.random((k, P)) < 0.8
+    avail = np.full(P, 3.0)
+    jitter = (RNG.integers(0, 4, (k, P)) / 4.0).astype(np.float32)
+    np.testing.assert_array_equal(
+        rarest_argmin(cand, avail, jitter),
+        batched_rarest(cand, avail, jitter),
+    )
+
+
+# ------------------------------------------------------------------ water-filling
+
+
+def _random_topology(nf, nn, spine=False, inf_caps=False):
+    src = RNG.integers(0, nn, nf)
+    dst = RNG.integers(0, nn, nf)
+    dst = np.where(dst == src, (dst + 1) % nn, dst)
+    up = RNG.uniform(1.0, 100.0, nn)
+    dn = RNG.uniform(1.0, 100.0, nn)
+    if inf_caps:
+        dn[RNG.random(nn) < 0.3] = np.inf
+    link_of = link_cap = None
+    if spine:
+        link_of = np.where(RNG.random(nf) < 0.5, 0, -1).astype(np.int64)
+        link_cap = np.array([RNG.uniform(5.0, 60.0)])
+    return src, dst, up, dn, link_of, link_cap
+
+
+@pytest.mark.parametrize("nf,nn", [(1, 2), (5, 3), (37, 10), (300, 40)])
+@pytest.mark.parametrize("spine", [False, True])
+@pytest.mark.parametrize("segments", ["scatter", "onehot"])
+def test_waterfill_bit_exact_vs_jnp_oracle(nf, nn, spine, segments):
+    src, dst, up, dn, lof, lcap = _random_topology(nf, nn, spine=spine)
+    out = fleet_waterfill(src, dst, up, dn, lof, lcap, segments=segments)
+    ref = waterfill_jnp_ref(src, dst, up, dn, lof, lcap)
+    np.testing.assert_array_equal(out.astype(np.float32), ref)
+
+
+def test_waterfill_bit_exact_with_inf_caps():
+    src, dst, up, dn, lof, lcap = _random_topology(80, 12, inf_caps=True)
+    for segments in ("scatter", "onehot"):
+        out = fleet_waterfill(src, dst, up, dn, segments=segments)
+        np.testing.assert_array_equal(
+            out.astype(np.float32), waterfill_jnp_ref(src, dst, up, dn)
+        )
+
+
+def test_waterfill_band_vs_numpy_refs():
+    # cross-domain (XLA vs numpy) parity is a band, not bitwise: XLA:CPU
+    # emits FMAs for the allocation updates. Observed max ~1.3e-6 relative.
+    for trial in range(10):
+        spine = trial % 2 == 1
+        src, dst, up, dn, lof, lcap = _random_topology(
+            16 * (trial + 1), 3 * (trial + 1), spine=spine
+        )
+        out = fleet_waterfill(src, dst, up, dn, lof, lcap)
+        f32 = waterfill_f32_ref(src, dst, up, dn, lof, lcap)
+        f64 = waterfill_rates(src, dst, up, dn, lof, lcap)
+        np.testing.assert_allclose(out, f32, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out, f64, rtol=1e-3, atol=1e-3)
+
+
+def test_waterfill_empty_and_zero_cap():
+    assert fleet_waterfill(
+        np.zeros(0, np.int64), np.zeros(0, np.int64),
+        np.ones(2), np.ones(2),
+    ).size == 0
+    # zero-capacity uplink: all its flows freeze at 0 immediately
+    out = fleet_waterfill(
+        np.zeros(4, np.int64), np.arange(1, 5),
+        np.array([0.0, 10, 10, 10, 10]), np.full(5, 10.0),
+    )
+    np.testing.assert_array_equal(out, np.zeros(4))
+
+
+# ------------------------------------------------------------------ device state
+
+
+def test_device_state_tracks_incremental_updates():
+    n, P = 50, 30
+    jitter = RNG.random((n, P), dtype=np.float32)
+    swarm_class = RNG.random(P) < 0.7
+    dev = FleetDeviceState(jitter, swarm_class)
+    have = np.zeros((n, P), dtype=bool)
+    repl = np.zeros(P, dtype=np.int64)
+    for _ in range(6):
+        # unique (row, piece) pairs not yet held — the engine's completion
+        # batches are duplicate-free by construction
+        flat = np.unique(RNG.integers(0, n * P, RNG.integers(1, 12)))
+        rows, pieces = flat // P, flat % P
+        newly = ~have[rows, pieces]
+        rows, pieces = rows[newly], pieces[newly]
+        have[rows, pieces] = True
+        np.add.at(repl, pieces, 1)
+        dev.add_pieces(rows, pieces)
+    np.testing.assert_array_equal(np.asarray(dev.have), have)
+    np.testing.assert_array_equal(np.asarray(dev.repl), repl)
+    # departures subtract the rows' held pieces
+    drop = np.unique(RNG.integers(0, n, 7))
+    repl -= have[drop].sum(axis=0)
+    dev.drop_rows(drop)
+    np.testing.assert_array_equal(np.asarray(dev.repl), repl)
+
+
+@pytest.mark.parametrize("stream,mode,fallback", [
+    ("http", "swarm_first", True),
+    ("http", "swarm_first", False),
+    ("http", "http_first", False),
+    ("swarm", "swarm_first", True),
+])
+def test_device_select_matches_engine_cand_build(stream, mode, fallback):
+    n, P = 60, 45
+    jitter = RNG.random((n, P), dtype=np.float32)
+    swarm_class = RNG.random(P) < 0.6
+    dev = FleetDeviceState(jitter, swarm_class)
+    flat = np.unique(RNG.integers(0, n * P, 200))  # unique (row, piece)
+    have_rows, have_pieces = flat // P, flat % P
+    dev.add_pieces(have_rows, have_pieces)
+    have = np.zeros((n, P), dtype=bool)
+    have[have_rows, have_pieces] = True
+    repl = have.sum(axis=0)
+
+    rows = np.unique(RNG.integers(0, n, 20))
+    other = np.where(RNG.random(rows.size) < 0.5,
+                     RNG.integers(0, P, rows.size), -1)
+    # the engine's numpy cand build (FleetSwarmSim._select)
+    missing = ~have[rows]
+    if stream == "http":
+        if mode == "http_first":
+            cand = missing.copy()
+        else:
+            cand = missing & ~swarm_class[None, :]
+            if fallback:
+                cand |= missing & swarm_class[None, :] & (repl == 0)[None, :]
+    else:
+        cand = missing & swarm_class[None, :] & (repl > 0)[None, :]
+    has_other = other >= 0
+    cand[np.flatnonzero(has_other), other[has_other]] = False
+    np.testing.assert_array_equal(
+        dev.select(rows, other, stream=stream, mode=mode, fallback=fallback),
+        batched_rarest(cand, repl, jitter[rows]),
+    )
+
+
+# ------------------------------------------------------------------ engine parity
+
+
+def test_fleet_backend_pallas_falls_back_without_pallas(monkeypatch):
+    # no Pallas in the installed jax -> warn once and degrade to the jit
+    # water-filling path instead of failing the run
+    from repro.core.fleet import FleetSpec, FleetSwarmSim
+    from repro.core.metainfo import MetaInfo
+    from repro.core.webseed import MirrorSpec
+
+    monkeypatch.setattr("repro.jax_compat.HAS_PALLAS", False)
+    mi = MetaInfo.from_sizes_only(int(64e6), int(8e6), name="x")
+    sim = FleetSwarmSim(mi, fleet=FleetSpec(backend="pallas"))
+    sim.add_mirrors([MirrorSpec("origin", up_bps=50e6)])
+    sim.add_peers([("p0", 0.0)], up_bps=25e6, down_bps=50e6)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        res = sim.run()
+    assert sim._backend == "jit" and sim._dev is None
+    assert res.completed == 1
+
+
+def test_fleet_backend_pallas_matches_numpy_engine():
+    """backend="pallas" (interpret) reproduces the numpy engine on the
+    (downsized) smoke scenario.
+
+    Piece selection is index-exact, so the *byte ledgers* — who downloaded
+    what, piece-granular — match exactly. Completion *times* are compared
+    at the distribution level: the float32 water-fill rates sit ~1e-7
+    relative off the float64 path, which integrates to tens of bytes per
+    piece — more than the 1e-6-byte completion tolerance — so a piece
+    landing within that sliver of a tick boundary can quantize one tick
+    differently; the first such shift changes which rows hit the host-RNG
+    rechoke draws, after which individual trajectories decorrelate while
+    the aggregate completion profile stays tight.
+    """
+    from repro.core.scenario import ScenarioSpec
+
+    spec = json.loads((SCENARIOS / "fleet_smoke.json").read_text())
+    spec["arrivals"][0]["n"] = 200
+    results = {}
+    for backend in ("numpy", "pallas"):
+        spec["fleet"] = {"dt": 1.0, "fanout": None, "backend": backend}
+        compiled = ScenarioSpec.from_dict(spec).build("fleet")
+        sim = next(iter(compiled.sims.values()))
+        results[backend] = sim.run()
+    ref, dev = results["numpy"], results["pallas"]
+    assert ref.completed == dev.completed == dev.n == 200
+    assert abs(dev.ticks - ref.ticks) <= max(5, 0.02 * ref.ticks)
+    # piece-granular ledgers: every peer fetched every piece exactly once
+    np.testing.assert_array_equal(dev.downloaded, ref.downloaded)
+    np.testing.assert_allclose(
+        dev.mirror_uploaded, ref.mirror_uploaded,
+        atol=2 * 32e6, rtol=0.02,  # at most a couple of rescue pieces
+    )
+    # completion profile: distribution-level band (see docstring)
+    for q in (50, 90, 99):
+        lo = np.percentile(ref.durations, q)
+        hi = np.percentile(dev.durations, q)
+        assert abs(hi - lo) <= max(5 * dev.dt, 0.03 * lo), (q, lo, hi)
+    assert abs(dev.uploaded_wire.sum() - ref.uploaded_wire.sum()) \
+        <= 0.02 * ref.uploaded_wire.sum()
+    assert set(dev.phase_seconds) == {
+        "select", "waterfill", "bookkeeping", "telemetry"
+    }
