@@ -1,0 +1,243 @@
+"""Self-healing durability tier — pod loss, churn storms, repair ledger.
+
+The paper's availability story assumes replicas persist; in practice they
+walk out the door — a session ends, a pod loses power, a disk flips a
+bit. The repair controller (``core/repair.py``) watches the tracker's
+piece->replica map and re-seeds under-replicated pieces from the
+surviving tiers (mirrors -> pod caches -> peers). Four claims, each a
+declarative scenario derived from the committed
+``benchmarks/scenarios/durability.json``:
+
+  (a) **pod loss mid-flash-crowd**: a whole pod (cache + every homed
+      client) dies while the crowd is downloading. Zero corrupt bytes are
+      delivered, the repair episode closes (min replication back at
+      target), and time-to-repair beats the no-repair organic recovery.
+  (b) **no-repair counterfactual**: the same fault with the controller
+      off — the fleet still converges (rarest-first is itself a healer)
+      but spends strictly more time below the replication target, and no
+      repair traffic appears in any ledger.
+  (c) **tier ladder**: with the cache tier removed and both mirrors dead,
+      repairs ride the peer tier — the ladder's last rung — and the
+      repair ledger pins bytes by serving tier.
+  (d) **churn storm**: a burst of session-end departures
+      (``seed_linger=0`` — completed peers leave immediately) with the
+      controller re-seeding against the shrinking population.
+
+Plus a byte-engine row: the same pod-loss fault on the byte-accurate
+engine, where every repaired replica is real verified bytes.
+
+All rows are deterministic (seeded RNGs, fluid network) and pinned at
+``--tolerance 0`` in CI via the committed ``BENCH_durability.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    EventSpec, RepairSpec, ScenarioSpec, TelemetrySpec,
+)
+
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "durability.json"
+
+TELEMETRY = TelemetrySpec(
+    enabled=True, trace=False, metrics=True, sample_interval=1.0
+)
+
+
+def _corrupt_replicas(sim) -> int:
+    """Stored pieces (peers + caches) that fail hash verification."""
+    mi = sim.metainfo
+    bad = 0
+    for pid, agent in sim.agents.items():
+        if pid in sim.origin_set.origins or agent.store is None:
+            continue
+        bad += sum(1 for i, d in agent.store.items()
+                   if not mi.verify_piece(i, d))
+    for cache in sim.caches.values():
+        bad += sum(1 for i, d in cache.store.items()
+                   if not mi.verify_piece(i, d))
+    return bad
+
+
+def _below_target_s(metrics, target: float) -> float:
+    """Seconds the fleet-wide min replication spent below ``target``."""
+    s = metrics.series()
+    t, m = s["t"], s["min_replication"]
+    if len(t) < 2:
+        return 0.0
+    return float(np.diff(t)[m[:-1] < target].sum())
+
+
+def _run_time(spec: ScenarioSpec):
+    compiled = spec.build("time")
+    result = compiled.run()
+    return compiled, result
+
+
+def pod_loss(report, spec: ScenarioSpec) -> float:
+    """(a) headline: pod dies mid-crowd; repair closes the episode."""
+    target = spec.repair.target_replication
+    t0 = time.perf_counter()
+    compiled, result = _run_time(dataclasses.replace(spec, telemetry=TELEMETRY))
+    wall = (time.perf_counter() - t0) * 1e6
+    sim, raw = compiled.sim, result.primary
+    ctrl = compiled.repairs[sim.metainfo.name]
+    summ = ctrl.summary()
+    below = _below_target_s(result.metrics, target)
+    assert _corrupt_replicas(sim) == 0, "corrupt replica delivered"
+    assert summ["episodes"] >= 1, summ
+    assert summ["min_replication_final"] >= target, summ
+    assert summ["repairs_done"] == summ["repairs_scheduled"], summ
+    survivors = [a for pid, a in sim.agents.items()
+                 if not a.is_origin and not a.departed]
+    assert all(a.is_seed for a in survivors), "survivor left incomplete"
+    rb = summ["repair_bytes"]
+    report(
+        "durability/pod_loss/repair", wall,
+        f"done={len(raw.completion_time)}/18 "
+        f"min_low={summ['min_replication_low']:.0f} "
+        f"ttr={summ['time_to_repair']:.0f}s below_target={below:.0f}s "
+        f"repaired={summ['repairs_done']} "
+        f"bytes origin={rb['origin'] / 1e6:.2f}MB "
+        f"cache={rb['pod_cache'] / 1e6:.2f}MB peer={rb['peer'] / 1e6:.2f}MB "
+        f"corrupt=0",
+    )
+    return below
+
+
+def no_repair(report, spec: ScenarioSpec, below_with: float) -> None:
+    """(b) counterfactual: controller off, same fault."""
+    target = spec.repair.target_replication
+    t0 = time.perf_counter()
+    compiled, result = _run_time(
+        dataclasses.replace(spec, repair=None, telemetry=TELEMETRY)
+    )
+    wall = (time.perf_counter() - t0) * 1e6
+    sim, raw = compiled.sim, result.primary
+    below = _below_target_s(result.metrics, target)
+    assert not compiled.repairs, "repair controller wired while disabled"
+    assert _corrupt_replicas(sim) == 0
+    # repair must strictly shorten the fleet's time at risk
+    assert below_with < below, (below_with, below)
+    report(
+        "durability/pod_loss/no_repair", wall,
+        f"done={len(raw.completion_time)}/18 below_target={below:.0f}s "
+        f"repaired=0 advantage={below - below_with:.0f}s",
+    )
+
+
+def tier_ladder(report, spec: ScenarioSpec) -> None:
+    """(c) cache tier removed + both mirrors dead: peer-tier repair."""
+    point = dataclasses.replace(
+        spec,
+        telemetry=TELEMETRY,
+        fabric=dataclasses.replace(spec.fabric, pod_caches=None),
+        events=(
+            EventSpec(kind="mirror_fail", at=8.0, target="origin0"),
+            EventSpec(kind="mirror_fail", at=8.0, target="origin1"),
+            EventSpec(kind="pod_fail", at=10.0, pod=2),
+        ),
+    )
+    t0 = time.perf_counter()
+    compiled, result = _run_time(point)
+    wall = (time.perf_counter() - t0) * 1e6
+    sim, raw = compiled.sim, result.primary
+    ctrl = compiled.repairs[sim.metainfo.name]
+    summ = ctrl.summary()
+    rb = summ["repair_bytes"]
+    assert _corrupt_replicas(sim) == 0
+    assert rb["peer"] > 0, rb   # the ladder reached its last rung
+    assert rb["pod_cache"] == 0, rb
+    report(
+        "durability/tier_ladder/blackout", wall,
+        f"done={len(raw.completion_time)}/18 "
+        f"repaired={summ['repairs_done']} "
+        f"bytes origin={rb['origin'] / 1e6:.2f}MB "
+        f"cache={rb['pod_cache'] / 1e6:.2f}MB peer={rb['peer'] / 1e6:.2f}MB",
+    )
+
+
+def churn_storm(report, spec: ScenarioSpec) -> None:
+    """(d) burst departures over a linger-free population."""
+    point = dataclasses.replace(
+        spec,
+        telemetry=TELEMETRY,
+        arrivals=(
+            dataclasses.replace(spec.arrivals[0], seed_linger=0.0),
+        ),
+        events=(
+            EventSpec(kind="churn_storm", at=8.0, count=6, spread=2.0,
+                      seed=23),
+        ),
+    )
+    t0 = time.perf_counter()
+    compiled, result = _run_time(point)
+    wall = (time.perf_counter() - t0) * 1e6
+    sim, raw = compiled.sim, result.primary
+    ctrl = compiled.repairs[sim.metainfo.name]
+    summ = ctrl.summary()
+    assert _corrupt_replicas(sim) == 0
+    assert summ["repairs_done"] > 0, summ
+    report(
+        "durability/churn_storm/repair", wall,
+        f"done={len(raw.completion_time)}/18 "
+        f"min_low={summ['min_replication_low']:.0f} "
+        f"repaired={summ['repairs_done']} "
+        f"failed={summ['repairs_failed']}",
+    )
+
+
+def byte_pod_loss(report, spec: ScenarioSpec) -> None:
+    """Byte engine: the pod-loss fault over real verified bytes."""
+    point = dataclasses.replace(
+        spec,
+        telemetry=None,
+        events=(EventSpec(kind="pod_fail", at=3, pod=2),),
+        repair=RepairSpec(
+            target_replication=5, scan_interval=1.0, budget_bps=4e6,
+            hysteresis=0,
+        ),
+    )
+    t0 = time.perf_counter()
+    compiled = point.build("byte")
+    result = compiled.run()
+    wall = (time.perf_counter() - t0) * 1e6
+    swarm = compiled.sim
+    mi = swarm.metainfo
+    ctrl = compiled.repairs[mi.name]
+    summ = ctrl.summary()
+    bad = sum(1 for pid, a in swarm.peers.items()
+              for p, d in (a.store or {}).items()
+              if not mi.verify_piece(p, d))
+    bad += sum(1 for cache in swarm.pod_caches.values()
+               for p, d in (cache.store or {}).items()
+               if not mi.verify_piece(p, d))
+    assert bad == 0, f"{bad} corrupt replicas"
+    assert summ["episodes"] >= 1, summ
+    assert summ["min_replication_final"] >= 5, summ
+    out = next(iter(result.outcomes.values()))
+    report(
+        "durability/byte/pod_loss", wall,
+        f"done={out.completed}/{out.clients} t={result.sim_time:.0f}rounds "
+        f"min_low={summ['min_replication_low']:.0f} "
+        f"ttr={summ['time_to_repair']:.0f}rounds "
+        f"repaired={summ['repairs_done']} corrupt=0",
+    )
+
+
+def main(report, scenario=None):
+    spec = ScenarioSpec.load(scenario or SCENARIO)
+    below = pod_loss(report, spec)
+    no_repair(report, spec, below)
+    tier_ladder(report, spec)
+    churn_storm(report, spec)
+    byte_pod_loss(report, spec)
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

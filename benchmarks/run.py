@@ -48,6 +48,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from benchmarks import (  # noqa: E402
     bench_cluster_coldstart,
+    bench_durability,
     bench_eq1_ud_ratio,
     bench_fabric_hillclimb,
     bench_fig1_server_load,
@@ -72,6 +73,7 @@ SUITES = {
     "mirror_fabric": bench_mirror_fabric,
     "tail_latency": bench_tail_latency,
     "multi_torrent": bench_multi_torrent,
+    "durability": bench_durability,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -190,6 +192,30 @@ def run_generic_scenario(path: Path, engine: str, report,
 
 # every float in a derived string, sign/decimal/exponent included
 _NUM_RE = re.compile(r"-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")
+_LABEL_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _labeled_metrics(derived: str) -> list[tuple[str, float]]:
+    """(label, value) pairs for every number in a ``derived`` string.
+
+    Positional extraction is unchanged from the raw ``_NUM_RE`` scan (the
+    metric *count* is what baselines pin); the label is the last
+    identifier-ish token before each number — ``"done=12/14 ud=3.1"``
+    yields ``[("done", 12), ("done#2", 14), ("ud", 3.1)]`` — so a diff can
+    name the diverging metric instead of reporting a bare float."""
+    out: list[tuple[str, float]] = []
+    seen: dict[str, int] = {}
+    label = "value"
+    last = 0
+    for m in _NUM_RE.finditer(derived):
+        words = _LABEL_RE.findall(derived, last, m.start())
+        if words:
+            label = words[-1]
+        last = m.end()
+        n = seen.get(label, 0) + 1
+        seen[label] = n
+        out.append((label if n == 1 else f"{label}#{n}", float(m.group())))
+    return out
 
 
 def compare_rows(
@@ -201,7 +227,8 @@ def compare_rows(
     of metrics in its ``derived`` string, and match each metric within
     ``tolerance`` relative error (new rows in the fresh run are fine —
     they become baselines when committed). Returns human-readable problem
-    strings, empty when the run is clean.
+    strings — each naming the diverging metric with its expected and
+    actual values — empty when the run is clean.
     """
     problems: list[str] = []
     if baseline.get("failed"):
@@ -213,20 +240,20 @@ def compare_rows(
             problems.append(f"{name}: row missing from fresh run")
             continue
         got = fresh[name]
-        want_nums = [float(x) for x in _NUM_RE.findall(want)]
-        got_nums = [float(x) for x in _NUM_RE.findall(got)]
-        if len(want_nums) != len(got_nums):
+        want_metrics = _labeled_metrics(want)
+        got_metrics = _labeled_metrics(got)
+        if len(want_metrics) != len(got_metrics):
             problems.append(
                 f"{name}: metric count changed ({want!r} -> {got!r})"
             )
             continue
-        for w, g in zip(want_nums, got_nums):
+        for (label, w), (_, g) in zip(want_metrics, got_metrics):
             scale = max(abs(w), abs(g), 1e-12)
             if abs(w - g) / scale > tolerance:
                 problems.append(
-                    f"{name}: {w} -> {g} "
-                    f"(rel err {abs(w - g) / scale:.3f} > {tolerance}) "
-                    f"in {got!r}"
+                    f"{name}: metric {label!r} diverged — expected {w:g}, "
+                    f"got {g:g} (rel err {abs(w - g) / scale:.3f} > "
+                    f"{tolerance}); baseline {want!r} vs fresh {got!r}"
                 )
                 break
     return problems

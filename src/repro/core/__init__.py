@@ -36,6 +36,7 @@ from .http_baseline import HttpResult, analytic_http, simulate_http
 from .metainfo import FileEntry, MetaInfo, assemble, piece_hash
 from .netsim import FluidNetwork, Flow, Link, Node
 from .peer import Ledger, PeerAgent
+from .repair import REPAIR_TIERS, RepairController, RepairSpec
 from .scenario import (
     ArrivalSpec,
     CompiledScenario,

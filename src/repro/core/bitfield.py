@@ -14,7 +14,7 @@ import numpy as np
 
 
 class Bitfield:
-    __slots__ = ("_bits",)
+    __slots__ = ("_bits", "version")
 
     def __init__(self, num_pieces: int, bits: np.ndarray | None = None):
         if bits is not None:
@@ -23,6 +23,9 @@ class Bitfield:
             self._bits = bits.astype(bool).copy()
         else:
             self._bits = np.zeros(num_pieces, dtype=bool)
+        # bumped on every mutation; lets observers (the tracker's
+        # incremental availability map) detect in-place changes cheaply
+        self.version = 0
 
     # ------------------------------------------------------------- constructors
     @classmethod
@@ -45,9 +48,11 @@ class Bitfield:
     # ------------------------------------------------------------- mutation
     def set(self, index: int) -> None:
         self._bits[index] = True
+        self.version += 1
 
     def clear(self, index: int) -> None:
         self._bits[index] = False
+        self.version += 1
 
     # ------------------------------------------------------------- queries
     def __contains__(self, index: int) -> bool:

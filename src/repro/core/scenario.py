@@ -54,6 +54,7 @@ import numpy as np
 from .fleet import FleetResult, FleetSpec, FleetSwarmSim
 from .metainfo import MetaInfo
 from .netsim import FluidNetwork
+from .repair import RepairController, RepairSpec
 from .scheduler import (
     FairShareLedger,
     OriginPolicy,
@@ -68,7 +69,12 @@ from .swarm import (
     poisson_arrivals,
     staggered_arrivals,
 )
-from .telemetry import MetricsSampler, TelemetrySpec, TraceRecorder
+from .telemetry import (
+    MetricsSampler,
+    NULL_RECORDER,
+    TelemetrySpec,
+    TraceRecorder,
+)
 from .topology import ClusterTopology
 from .tracker import SwarmStats, Tracker
 from .webseed import MirrorSpec, WebSeedSwarmSim
@@ -88,7 +94,12 @@ def _finitize(value):
 
 ENGINES = ("time", "byte", "fleet")
 ARRIVAL_KINDS = ("flash", "staggered", "poisson")
-EVENT_KINDS = ("mirror_fail", "mirror_heal", "peer_churn", "corrupt_once")
+EVENT_KINDS = (
+    "mirror_fail", "mirror_heal", "peer_churn", "corrupt_once",
+    "churn_storm", "pod_fail",
+)
+# kinds that act on a population, not a named box/client: target must be empty
+UNTARGETED_EVENT_KINDS = ("churn_storm", "pod_fail")
 PAYLOAD_MODES = ("size_only", "random")
 
 # --------------------------------------------------------------------------- content
@@ -372,6 +383,12 @@ class EventSpec:
     * ``peer_churn`` — depart client ``target`` (time engine only).
     * ``corrupt_once`` — mirror ``target`` serves ``piece`` corrupted once,
       then heals (applied at build time; ``at`` must be 0).
+    * ``churn_storm`` — ``count`` live clients depart in a burst, each
+      offset by an Exponential(``spread``) session-tail draw from a
+      dedicated RNG seeded with ``seed`` (no target: victims are drawn,
+      not named).
+    * ``pod_fail`` — correlated loss of pod ``pod``: its cache dies with
+      its contents and every client homed there departs (no target).
 
     Two events with the same ``at`` fire in their listed order.
     """
@@ -381,6 +398,12 @@ class EventSpec:
     target: str = ""
     piece: int = -1
     torrent: Optional[str] = None
+    # churn_storm knobs
+    count: int = 0
+    spread: float = 0.0
+    seed: int = 0
+    # pod_fail knob
+    pod: int = -1
 
     def __post_init__(self) -> None:
         if self.kind not in EVENT_KINDS:
@@ -389,7 +412,12 @@ class EventSpec:
             )
         if self.at < 0:
             raise ValueError("event time must be >= 0")
-        if not self.target:
+        if self.kind in UNTARGETED_EVENT_KINDS:
+            if self.target:
+                raise ValueError(
+                    f"{self.kind} events take no target (got {self.target!r})"
+                )
+        elif not self.target:
             raise ValueError(f"{self.kind} event needs a target")
         if self.kind == "corrupt_once":
             if self.piece < 0:
@@ -398,6 +426,13 @@ class EventSpec:
                 raise ValueError(
                     "corrupt_once is applied at build time; at must be 0"
                 )
+        if self.kind == "churn_storm":
+            if self.count < 1:
+                raise ValueError("churn_storm needs count >= 1")
+            if self.spread < 0:
+                raise ValueError("churn_storm needs spread >= 0")
+        if self.kind == "pod_fail" and self.pod < 0:
+            raise ValueError("pod_fail needs pod >= 0")
 
     def to_dict(self) -> dict:
         return spec_to_dict(self)
@@ -508,6 +543,10 @@ class ScenarioSpec:
     # flight recorder (both engines); None or enabled=False means the run
     # is trace-free and must be bit-identical to a pre-telemetry run
     telemetry: Optional[TelemetrySpec] = None
+    # self-healing durability tier (time + byte engines); None or
+    # enabled=False means no repair controller is wired and the run is
+    # bit-identical to a repair-free build
+    repair: Optional[RepairSpec] = None
     # fleet-engine knobs (ignored by the object engines); None == defaults
     fleet: Optional[FleetSpec] = None
 
@@ -550,7 +589,16 @@ class ScenarioSpec:
             raise ValueError(
                 "multi-torrent scenarios do not support pod caches yet"
             )
+        seen_events: set[tuple] = set()
         for ev in self.events:
+            key = (ev.kind, ev.at, ev.target, ev.piece, ev.torrent,
+                   ev.count, ev.spread, ev.seed, ev.pod)
+            if key in seen_events:
+                raise ValueError(
+                    f"duplicate {ev.kind} event at t={ev.at} "
+                    "(identical timeline entries fire twice — drop one)"
+                )
+            seen_events.add(key)
             self._check_torrent_ref(ev.torrent, f"{ev.kind} event")
             if ev.kind in ("mirror_fail", "mirror_heal", "corrupt_once") \
                     and ev.target not in mirror_names:
@@ -575,6 +623,14 @@ class ScenarioSpec:
                     f"peer_churn event targets unknown client {ev.target!r} "
                     "(no arrival group generates that id)"
                 )
+            if ev.kind == "pod_fail":
+                if self.topology is None:
+                    raise ValueError("pod_fail events need a topology")
+                if ev.pod >= self.topology.num_pods:
+                    raise ValueError(
+                        f"pod_fail event targets undeclared pod {ev.pod} "
+                        f"(topology has {self.topology.num_pods} pods)"
+                    )
         if self.content.multi:
             for group in self.arrivals:
                 if group.torrent is None:
@@ -639,6 +695,7 @@ class ScenarioSpec:
             "telemetry": (
                 self.telemetry.to_dict() if self.telemetry else None
             ),
+            "repair": self.repair.to_dict() if self.repair else None,
             "fleet": self.fleet.to_dict() if self.fleet else None,
         }
 
@@ -647,7 +704,8 @@ class ScenarioSpec:
         known = {
             "name", "seed", "content", "fabric", "policy", "swarm",
             "topology", "arrivals", "events", "byte_upload_slots",
-            "byte_origin_slots", "byte_max_rounds", "telemetry", "fleet",
+            "byte_origin_slots", "byte_max_rounds", "telemetry", "repair",
+            "fleet",
         }
         unknown = sorted(set(data) - known)
         if unknown:
@@ -684,6 +742,9 @@ class ScenarioSpec:
         tel = data.get("telemetry")
         if tel is not None:
             kwargs["telemetry"] = TelemetrySpec.from_dict(tel)
+        rep = data.get("repair")
+        if rep is not None:
+            kwargs["repair"] = RepairSpec.from_dict(rep)
         fleet = data.get("fleet")
         if fleet is not None:
             kwargs["fleet"] = FleetSpec.from_dict(fleet)
@@ -796,9 +857,10 @@ class ScenarioSpec:
                 continue
             if ev.kind == "peer_churn":
                 targets = [sims[self._torrent_of_peer(ev.target)]]
-            elif ev.kind in ("mirror_fail", "mirror_heal"):
-                # mirrors are shared boxes: the event hits every torrent's
-                # view of the fabric (failover state, tracker, hedges)
+            elif ev.kind in ("mirror_fail", "mirror_heal", "pod_fail"):
+                # mirrors and pods are shared boxes: the event hits every
+                # torrent's view of the fabric (failover state, tracker,
+                # hedges, pod membership)
                 targets = list(sims.values())
             else:
                 targets = [sims[self._manifest(ev.torrent).name]]
@@ -807,6 +869,23 @@ class ScenarioSpec:
         shared_tracker = (
             tracker if multi else next(iter(sims.values())).tracker
         )
+        if self.repair is not None and self.repair.enabled:
+            for name, sim in sims.items():
+                ctrl = RepairController(
+                    self.repair, sim.metainfo,
+                    availability=(
+                        lambda s=sim: s.tracker.availability_map(s.metainfo)
+                    ),
+                    fetch=sim.repair_fetch,
+                    telemetry=(
+                        recorder if recorder is not None else NULL_RECORDER
+                    ),
+                    torrent=name,
+                )
+                sim.repair = ctrl
+                _install_repair_timer(
+                    sim, ctrl, shared_net, self.repair.scan_interval
+                )
         sampler = None
         if tel is not None and tel.enabled and tel.metrics:
             sampler = MetricsSampler(
@@ -832,8 +911,9 @@ class ScenarioSpec:
         for ev in self.events:
             if ev.kind == "peer_churn":
                 raise ValueError(
-                    "peer_churn events are time-engine only (the byte "
-                    "engine has no departures)"
+                    "peer_churn events are time-engine only (byte-domain "
+                    "departures come from churn_storm/pod_fail, which "
+                    "quantize to round boundaries)"
                 )
         fair = (
             FairShareLedger()
@@ -895,6 +975,17 @@ class ScenarioSpec:
             if ev.kind == "corrupt_once":
                 swarm = sims[self._manifest(ev.torrent).name]
                 swarm.origin_set.origins[ev.target].corrupt_once.add(ev.piece)
+        if self.repair is not None and self.repair.enabled:
+            for name, swarm in sims.items():
+                swarm.repair = RepairController(
+                    self.repair, swarm.metainfo,
+                    availability=swarm.repair_availability,
+                    fetch=swarm.repair_fetch,
+                    telemetry=(
+                        recorder if recorder is not None else NULL_RECORDER
+                    ),
+                    torrent=name,
+                )
         sampler = None
         if tel is not None and tel.enabled and tel.metrics:
             sampler = MetricsSampler(
@@ -920,11 +1011,21 @@ class ScenarioSpec:
             )
         if self.fabric.pod_caches is not None:
             raise ValueError("fleet engine does not support pod caches yet")
+        if self.repair is not None and self.repair.enabled:
+            raise ValueError(
+                "fleet engine does not support the repair tier yet (the "
+                "array model has no per-replica stores to re-seed)"
+            )
         for ev in self.events:
             if ev.kind == "corrupt_once":
                 raise ValueError(
                     "corrupt_once is object-engine only (the fleet engine "
                     "moves no real bytes to corrupt)"
+                )
+            if ev.kind in UNTARGETED_EVENT_KINDS:
+                raise ValueError(
+                    f"{ev.kind} events are object-engine only (the fleet "
+                    "engine models churn through seed_linger)"
                 )
         man = self.content.manifests[0]
         mi, _ = man.build()   # payload bytes unused: fluid pools only
@@ -1017,7 +1118,51 @@ def _time_event_cb(sim: WebSeedSwarmSim, ev: EventSpec):
             sim.heal_mirror(ev.target)
         elif ev.kind == "peer_churn":
             sim.fail_peer(ev.target)
+        elif ev.kind == "churn_storm":
+            sim.churn_storm(ev.count, ev.spread, ev.seed, now)
+        elif ev.kind == "pod_fail":
+            sim.fail_pod(ev.pod, now)
+        # faults change the replica map: restart the repair scan timer if
+        # it had wound down on a quiescent swarm
+        ensure = getattr(sim, "_repair_ensure", None)
+        if ensure is not None:
+            ensure(now)
     return _fire
+
+
+def _install_repair_timer(sim, ctrl, net, interval: float) -> None:
+    """Self-rescheduling repair scan on the shared event loop.
+
+    The timer must not pin the network alive forever (``net.run`` ends
+    when flows and timers drain), so each scan re-arms only while the
+    swarm can still make repair progress: clients pending or mid-download,
+    repairs in flight, or re-seeds just scheduled. Fault events restart a
+    wound-down timer through ``sim._repair_ensure``."""
+    state = {"stopped": False}
+
+    def _scan(now: float) -> None:
+        scheduled = ctrl.scan(now)
+        active = (
+            scheduled > 0
+            or ctrl.pending_count > 0
+            or sim._pending_arrivals > 0
+            or any(
+                not a.is_origin and not a.departed and not a.is_seed
+                for a in sim.agents.values()
+            )
+        )
+        if active:
+            net.schedule(now + interval, _scan)
+        else:
+            state["stopped"] = True
+
+    def _ensure(now: float) -> None:
+        if state["stopped"]:
+            state["stopped"] = False
+            net.schedule(now + interval, _scan)
+
+    sim._repair_ensure = _ensure
+    net.schedule(interval, _scan)
 
 
 def _time_metrics_source(sims, net, tracker):
@@ -1050,6 +1195,7 @@ def _time_metrics_source(sims, net, tracker):
         gauges["mean_replication"] = (
             float(np.mean(means)) if means else 0.0
         )
+        _repair_gauges(gauges, sims)
         for lname, link in net.links.items():
             rate = net.link_rate(link)
             cap = link.capacity_bps
@@ -1063,7 +1209,9 @@ def _time_metrics_source(sims, net, tracker):
 
 def _byte_metrics_source(sims):
     """Per-round gauge closure for the byte engine (same schema core as the
-    time source so metrics blocks are comparable across engines)."""
+    time source so metrics blocks are comparable across engines). Departed
+    peers stop counting everywhere: their replicas left with them, and a
+    mid-download victim is neither a seeder nor live demand."""
     def _source() -> dict[str, float]:
         gauges = {
             "seeders": 0.0, "leechers": 0.0,
@@ -1081,16 +1229,12 @@ def _byte_metrics_source(sims):
             gauges["peer_bytes"] += sum(
                 a.ledger.uploaded for a in s.peers.values()
             )
-            done = sum(1 for pid in s.peers if s._peer_done(pid))
+            alive = [pid for pid in s.peers if pid not in s.departed]
+            done = sum(1 for pid in alive if s._peer_done(pid))
             gauges["seeders"] += done
-            gauges["leechers"] += len(s.peers) - done
+            gauges["leechers"] += len(alive) - done
             gauges["inflight_hedges"] += len(s.scheduler.hedges)
-            base = (
-                len(s.origin_set.live()) if s.origin_set is not None else 1
-            )
-            avail = np.full(s.metainfo.num_pieces, base, dtype=np.int64)
-            for a in s.peers.values():
-                avail += a.bitfield.as_array()
+            avail = s.repair_availability()
             if avail.size:
                 mins.append(float(avail.min()))
                 means.append(float(avail.mean()))
@@ -1098,8 +1242,28 @@ def _byte_metrics_source(sims):
         gauges["mean_replication"] = (
             float(np.mean(means)) if means else 0.0
         )
+        _repair_gauges(gauges, sims)
         return gauges
     return _source
+
+
+def _repair_gauges(gauges: dict[str, float], sims) -> None:
+    """Availability gauge family, added only when a repair controller is
+    wired (repair-off metrics blocks keep their pre-repair schema)."""
+    ctrls = [
+        s.repair for s in sims.values()
+        if getattr(s, "repair", None) is not None
+    ]
+    if not ctrls:
+        return
+    for tier in ("origin", "pod_cache", "peer"):
+        gauges[f"repair_{tier}_bytes"] = float(
+            sum(c.repair_bytes.get(tier, 0.0) for c in ctrls)
+        )
+    gauges["repairs_pending"] = float(sum(c.pending_count for c in ctrls))
+    gauges["degraded_pieces"] = float(
+        sum(c.degraded_count() for c in ctrls)
+    )
 
 
 # --------------------------------------------------------------------------- compiled
@@ -1138,6 +1302,14 @@ class CompiledScenario:
                 f"scenario has {sorted(self.sims)}"
             )
         return next(iter(self.sims.values()))
+
+    @property
+    def repairs(self):
+        """torrent name -> RepairController (empty when repair is off)."""
+        return {
+            n: s.repair for n, s in self.sims.items()
+            if getattr(s, "repair", None) is not None
+        }
 
     # ------------------------------------------------------------- run
     def run(self, until: float = float("inf")) -> ScenarioResult:
@@ -1277,19 +1449,32 @@ class CompiledScenario:
                 raise RuntimeError("scenario did not converge (byte engine)")
             still = [e for e in pending if e.at <= rounds]
             for ev in still:
-                # mirrors are shared boxes: fail/heal applies to every
-                # torrent's origin set (matching the time engine, where the
+                if ev.kind == "churn_storm":
+                    # churn is torrent-scoped: each swarm owns its peers
+                    self.sims[
+                        spec._manifest(ev.torrent).name
+                    ].churn_storm(ev.count, ev.spread, ev.seed)
+                    pending.remove(ev)
+                    continue
+                # mirrors and pods are shared boxes: fail/heal applies to
+                # every torrent's view (matching the time engine, where the
                 # shared netsim node goes down for the whole fleet)
                 for swarm in self.sims.values():
                     if ev.kind == "mirror_fail":
                         swarm.fail_mirror(ev.target)
                     elif ev.kind == "mirror_heal":
                         swarm.heal_mirror(ev.target)
+                    elif ev.kind == "pod_fail":
+                        swarm.fail_pod(ev.pod)
                 pending.remove(ev)
             moved = 0
             for swarm in self.sims.values():
                 if not swarm.complete:
                     moved += swarm.step()
+                # the repair scan runs after organic trading so re-seeds
+                # only fill the deficit the round left behind; repairs
+                # count as movement (a repairing swarm is not stalled)
+                moved += swarm.repair_scan()
             rounds += 1
             if self.sampler is not None and rounds % every == 0:
                 self.sampler.sample(float(rounds))

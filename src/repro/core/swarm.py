@@ -257,6 +257,10 @@ class SwarmSim:
         if self.telemetry.enabled:
             self.telemetry.clock = lambda: self.net.now
         self.scheduler.telemetry = self.telemetry
+        # self-healing hook: a RepairController wired by the scenario
+        # builder (None => every repair code path is inert and the run is
+        # bit-identical to a repair-free build)
+        self.repair = None
         self.agents: dict[str, PeerAgent] = {}
         self._origin_payload = origin_payload
         self._tick_scheduled = False
@@ -453,6 +457,24 @@ class SwarmSim:
             dst_id, piece, accepted=accepted,
             latency=(now - flow.start_time) if accepted else None,
         )
+        if self.repair is not None:
+            if accepted:
+                tier = "origin" if (src is not None and src.is_origin) \
+                    else "peer"
+                self.repair.note_done(dst_id, piece, tier, float(flow.size),
+                                      now)
+            elif (
+                not corrupt and dst.last_reject_verify
+                and src is not None and not src.is_origin
+            ):
+                # read-repair: the data was bad at rest (no in-flight
+                # injection), so the serving replica is poisoned — evict
+                # it before it spreads; the next scan restores the deficit
+                if src.store is not None:
+                    src.store.pop(piece, None)
+                if piece in src.bitfield:
+                    src.bitfield.clear(piece)
+                self.repair.note_evict(src_id, piece, now)
         if self.telemetry.enabled:
             if accepted:
                 self.telemetry.emit(
@@ -517,6 +539,8 @@ class SwarmSim:
     def _on_piece_abort(self, flow: Flow, now: float) -> None:
         src_id, dst_id, piece = flow.tag
         dst = self.agents.get(dst_id)
+        if self.repair is not None:
+            self.repair.note_failed(dst_id, piece)
         if dst is None or dst.departed:
             return
         self.scheduler.on_piece_failed(dst_id, piece)
@@ -563,12 +587,98 @@ class SwarmSim:
             if other is not None:
                 other.disconnect(agent.peer_id)
             agent.disconnect(pid)
+        if self.repair is not None:
+            # repairs destined to the departed client can never settle
+            for dst, piece in [k for k in self.repair.pending
+                               if k[0] == agent.peer_id]:
+                self.repair.note_failed(dst, piece)
 
     def fail_peer(self, peer_id: str) -> None:
         """External fault injection: hard-kill a live peer (node failure)."""
         agent = self.agents.get(peer_id)
         if agent is not None and not agent.departed:
             self._depart(agent, self.net.now)
+
+    def churn_storm(self, count: int, spread: float, seed: int,
+                    now: float) -> list[str]:
+        """Burst departure: ``count`` live non-origin peers leave, each at
+        ``now`` plus an Exponential(``spread``) session-tail draw (all at
+        once when ``spread`` is 0). Victims and offsets come from a
+        dedicated RNG seeded with ``seed``, so a run without the event
+        draws nothing extra from the engine RNG (golden bit-identity)."""
+        rng = np.random.default_rng(seed)
+        live = sorted(
+            pid for pid, a in self.agents.items()
+            if not a.is_origin and not a.departed
+        )
+        if not live:
+            return []
+        k = min(int(count), len(live))
+        idx = rng.choice(len(live), size=k, replace=False)
+        idx.sort()
+        victims = [live[i] for i in idx]
+        for pid in victims:
+            delay = float(rng.exponential(spread)) if spread > 0 else 0.0
+            if delay <= 0:
+                self.fail_peer(pid)
+            else:
+                self.net.schedule(
+                    now + delay, lambda t, p=pid: self.fail_peer(p)
+                )
+        return victims
+
+    # ------------------------------------------------------------- repair
+    def repair_fetch(self, piece: int, now: float) -> "Optional[str]":
+        """Repair-controller hook: start one re-seed transfer of ``piece``.
+
+        The peer-only engine has a single serving tier; the web-seed
+        subclass overrides this to prefer mirrors and pod caches. Returns
+        the destination client id, or None when no transfer can start."""
+        dst = self._repair_dst(piece)
+        if dst is None:
+            return None
+        return self._repair_from_peer(dst, piece, now)
+
+    def _repair_dst(self, piece: int):
+        """Lexicographically first live non-origin client that lacks
+        ``piece`` and has no transfer of it in flight (deterministic)."""
+        for pid in sorted(self.agents):
+            a = self.agents[pid]
+            if a.is_origin or a.departed or a.node is None:
+                continue
+            if piece in a.bitfield or piece in a.in_flight:
+                continue
+            return a
+        return None
+
+    def _repair_from_peer(self, dst, piece: int, now: float) -> "Optional[str]":
+        """Peer-tier re-seed: first (sorted) live holder serves ``dst``."""
+        size = self.metainfo.piece_size(piece)
+        for sid in sorted(self.agents):
+            src = self.agents[sid]
+            if sid == dst.peer_id or src.departed or src.node is None \
+                    or src.node.failed:
+                continue
+            if piece not in src.bitfield:
+                continue
+            dst.in_flight[piece] = sid
+            self.net.start_flow(
+                src.node,
+                dst.node,
+                size,
+                tag=(sid, dst.peer_id, piece),
+                on_complete=self._on_piece_done,
+                on_abort=self._on_piece_abort,
+                links=self._links_between(sid, dst.peer_id),
+            )
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "request_issued", t=now, torrent=self.metainfo.name,
+                    client=dst.peer_id, origin=sid, piece=piece,
+                    nbytes=float(size), info="repair",
+                )
+            return dst.peer_id
+        return None
 
     # ------------------------------------------------------------- run
     def run(self, until: float = float("inf")) -> SwarmResult:
@@ -685,6 +795,15 @@ class LocalSwarm:
         self.pod_caches: dict[int, "PodCacheOrigin"] = {}
         self.cross_pod_bytes = 0.0
         self._pod_have: Optional[dict[int, np.ndarray]] = None
+        # fault-injection state: departed peers stop trading/counting and
+        # a failed pod's cache is dead (contents lost)
+        self.departed: set[str] = set()
+        self._failed_pods: set[int] = set()
+        self._deferred_departures: dict[int, list[str]] = {}
+        # self-healing hook (a RepairController, wired by the scenario
+        # builder; None => all repair paths inert)
+        self.repair = None
+        self._repair_settle: list[tuple[str, int, str, float]] = []
         if mirrors is not None and webseed is None:
             raise ValueError("mirrors requires a webseed OriginPolicy")
         if pod_caches and webseed is None:
@@ -775,6 +894,176 @@ class LocalSwarm:
             )
         self.origin_set.heal(name)
 
+    def fail_peer(self, pid: str) -> None:
+        """Fault injection: a peer departs mid-run — it stops trading,
+        its replicas stop counting, and its mesh links are torn down."""
+        if pid not in self.peers or pid in self.departed:
+            return
+        self.departed.add(pid)
+        me = self.peers[pid]
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_churn", t=float(self.rounds),
+                torrent=self.metainfo.name, client=pid,
+                info="post_complete" if pid in self.completed_round
+                else "mid_download",
+            )
+        if self._pod_have is not None:
+            pod = self.pod_of.get(pid)
+            if pod is not None and pod in self._pod_have:
+                self._pod_have[pod] -= me.bitfield.as_array()
+        everyone = {**self.peers, "origin": self.origin}
+        for oid, other in everyone.items():
+            if oid != pid and pid in other.neighbors:
+                other.disconnect(pid)
+        for oid in list(me.neighbors):
+            me.disconnect(oid)
+
+    def churn_storm(self, count: int, spread: float, seed: int) -> list[str]:
+        """Burst departure of ``count`` live peers. The byte engine has no
+        future-event queue, so the Exponential(``spread``) session-tail
+        draws quantize to whole rounds: a victim with offset d departs at
+        round ``rounds + floor(d)`` (immediately when that is now).
+        Victims/offsets come from a dedicated RNG seeded with ``seed``."""
+        rng = np.random.default_rng(seed)
+        live = sorted(p for p in self.peers if p not in self.departed)
+        if not live:
+            return []
+        k = min(int(count), len(live))
+        idx = rng.choice(len(live), size=k, replace=False)
+        idx.sort()
+        victims = [live[i] for i in idx]
+        for pid in victims:
+            delay = int(rng.exponential(spread)) if spread > 0 else 0
+            if delay <= 0:
+                self.fail_peer(pid)
+            else:
+                self._deferred_departures.setdefault(
+                    self.rounds + delay, []
+                ).append(pid)
+        return victims
+
+    def fail_pod(self, pod: int) -> list[str]:
+        """Correlated loss of a whole pod: the pod cache dies with its
+        contents and every peer homed in the pod departs (sorted order)."""
+        self._failed_pods.add(pod)
+        cache = self.pod_caches.get(pod)
+        if cache is not None:
+            cache.have[:] = False
+            if cache.store is not None:
+                cache.store.clear()
+        victims = sorted(
+            p for p in self.peers
+            if p not in self.departed and self.pod_of.get(p) == pod
+        )
+        for pid in victims:
+            self.fail_peer(pid)
+        return victims
+
+    # ------------------------------------------------------------- repair
+    def repair_availability(self) -> np.ndarray:
+        """Live replica count per piece: the live origin tier (mirrors, or
+        the bare origin without one) plus every non-departed peer. Pod
+        caches are transient infrastructure and do not count — mirroring
+        the tracker map the time engine repairs against."""
+        base = (
+            len(self.origin_set.live()) if self.origin_set is not None else 1
+        )
+        out = np.full(self.metainfo.num_pieces, base, dtype=np.int64)
+        for pid, a in self.peers.items():
+            if pid not in self.departed:
+                out += a.bitfield.as_array()
+        return out
+
+    def repair_fetch(self, piece: int, now: float) -> Optional[str]:
+        """Repair-controller hook: synchronously re-seed one replica.
+
+        Byte-domain rounds have no in-flight window, so the fetch walks
+        the durability ladder (ranked mirrors -> the destination's pod
+        cache when it holds the piece -> a live peer replica), verifies,
+        commits, and queues the settlement ``repair_scan`` flushes after
+        the controller registers the schedule."""
+        dst = None
+        for pid in sorted(self.peers):
+            if pid in self.departed or piece in self.peers[pid].bitfield:
+                continue
+            dst = pid
+            break
+        if dst is None:
+            return None
+        me = self.peers[dst]
+        size = float(self.metainfo.piece_size(piece))
+        t = float(self.rounds)
+        tel = self.telemetry
+        data, tier, src_name = None, None, None
+        if self.origin_set is not None:
+            for name in self.origin_set.ranked():
+                d = self.origin_set.origins[name].read_piece(piece)
+                self.origin.record_served(piece, dst, t)
+                self._count_cross_pod(name, dst, size)
+                if d is not None and self.metainfo.verify_piece(piece, d):
+                    data, tier, src_name = d, "origin", name
+                    break
+        else:
+            d = self.origin.read_piece(piece)
+            if d is not None and self.metainfo.verify_piece(piece, d):
+                data, tier, src_name = d, "origin", "origin"
+                self.origin.record_served(piece, dst, t)
+                self._count_cross_pod("origin", dst, size)
+        if data is None and self.pod_caches:
+            pod = self.pod_of.get(dst)
+            cache = self.pod_caches.get(pod)
+            if cache is not None and pod not in self._failed_pods \
+                    and cache.holds(piece):
+                d = cache.read_piece(piece)
+                if d is not None and self.metainfo.verify_piece(piece, d):
+                    data, tier, src_name = d, "pod_cache", cache.name
+        if data is None:
+            for sid in sorted(self.peers):
+                if sid == dst or sid in self.departed:
+                    continue
+                src = self.peers[sid]
+                if piece not in src.bitfield:
+                    continue
+                d = src.read_piece(piece)
+                if d is not None and self.metainfo.verify_piece(piece, d):
+                    data, tier, src_name = d, "peer", sid
+                    src.record_served(piece, dst, t)
+                    self._count_cross_pod(sid, dst, size)
+                    break
+        if data is None:
+            return None
+        if tel.enabled:
+            tel.emit(
+                "request_issued", t=t, torrent=self.metainfo.name,
+                client=dst, origin=src_name, piece=piece, nbytes=size,
+                info="repair",
+            )
+        if not me.accept_piece(piece, f"{src_name}::repair", data, t):
+            return None
+        if tel.enabled:
+            tel.emit(
+                "piece_done", t=t, torrent=self.metainfo.name, client=dst,
+                origin=src_name, piece=piece, nbytes=size, info="repair",
+            )
+        self._commit_gain(dst, piece)
+        self._repair_settle.append((dst, piece, tier, size))
+        return dst
+
+    def repair_scan(self) -> int:
+        """One controller scan at a round boundary. Byte-domain re-seeds
+        complete within the scan, so the queued settlements flush as soon
+        as the controller has registered them; returns pieces repaired."""
+        if self.repair is None:
+            return 0
+        self.repair.scan(float(self.rounds))
+        settled = len(self._repair_settle)
+        for dst, piece, tier, size in self._repair_settle:
+            self.repair.note_done(dst, piece, tier, size,
+                                  float(self.rounds))
+        self._repair_settle.clear()
+        return settled
+
     def _agent(self, pid: str) -> PeerAgent:
         return self.origin if pid == "origin" else self.peers[pid]
 
@@ -796,7 +1085,10 @@ class LocalSwarm:
 
     @property
     def complete(self) -> bool:
-        return all(self._peer_done(pid) for pid in self.peers)
+        return all(
+            self._peer_done(pid) for pid in self.peers
+            if pid not in self.departed
+        )
 
     def _local_availability(self, me: PeerAgent) -> np.ndarray:
         """Per-piece holder count within ``me``'s pod — the availability the
@@ -895,6 +1187,8 @@ class LocalSwarm:
             self.pod_caches.get(self.pod_of.get(pid))
             if self.pod_caches else None
         )
+        if cache is not None and cache.pod in self._failed_pods:
+            cache = None  # a failed pod's cache serves nothing
         req = next(
             (a for a in self.scheduler.next_actions(ClientView(
                 agent=me, peer_path=False, http_slots=1, cache=cache,
@@ -979,7 +1273,15 @@ class LocalSwarm:
                     info="verify" if me.last_reject_verify else "duplicate",
                 )
             if me.last_reject_verify:
-                if tel.enabled and not isinstance(origin, PodCacheOrigin):
+                if isinstance(origin, PodCacheOrigin):
+                    if self.repair is not None:
+                        # read-repair: the cache replica is poisoned —
+                        # evict so the next miss refills from a mirror
+                        origin.evict(piece)
+                        self.repair.note_evict(
+                            origin.name, piece, float(self.rounds)
+                        )
+                elif tel.enabled:
                     tel.emit(
                         "mirror_failover", t=float(self.rounds),
                         torrent=self.metainfo.name, client=pid,
@@ -1041,6 +1343,8 @@ class LocalSwarm:
     def step(self) -> int:
         """One round; returns number of pieces moved."""
         self.rounds += 1
+        for pid in self._deferred_departures.pop(self.rounds, []):
+            self.fail_peer(pid)
         budget = {pid: self.upload_slots for pid in self.peers}
         budget["origin"] = self.origin_slots
         http_budget = self.webseed.max_concurrent if self.webseed else 0
@@ -1050,7 +1354,7 @@ class LocalSwarm:
 
         for pid in order:
             me = self.peers[pid]
-            if self._peer_done(pid):
+            if pid in self.departed or self._peer_done(pid):
                 continue
             mask = self.needed.get(pid)
             peer_mask = mask
@@ -1115,14 +1419,30 @@ class LocalSwarm:
                                 nbytes=float(self.metainfo.piece_size(piece)),
                                 info="peer",
                             )
-                    elif self.telemetry.enabled:
-                        self.telemetry.emit(
-                            "piece_failed", t=float(self.rounds),
-                            torrent=self.metainfo.name, client=pid,
-                            origin=oid, piece=piece,
-                            info="verify" if me.last_reject_verify
-                            else "duplicate",
-                        )
+                    else:
+                        if self.repair is not None \
+                                and me.last_reject_verify and oid != "origin":
+                            # read-repair: the peer's at-rest replica is
+                            # poisoned — evict it before it spreads
+                            if src.store is not None:
+                                src.store.pop(piece, None)
+                            if piece in src.bitfield:
+                                src.bitfield.clear(piece)
+                                spod = self.pod_of.get(oid)
+                                if self._pod_have is not None \
+                                        and spod in self._pod_have:
+                                    self._pod_have[spod][piece] -= 1
+                            self.repair.note_evict(
+                                oid, piece, float(self.rounds)
+                            )
+                        if self.telemetry.enabled:
+                            self.telemetry.emit(
+                                "piece_failed", t=float(self.rounds),
+                                torrent=self.metainfo.name, client=pid,
+                                origin=oid, piece=piece,
+                                info="verify" if me.last_reject_verify
+                                else "duplicate",
+                            )
                     break
                 if got is None and self.web_origin is not None and http_budget > 0:
                     got = self._http_fetch(me, pid)

@@ -65,6 +65,9 @@ TRACE_EVENT_KINDS: tuple[str, ...] = (
     "peer_join",          # a client joined the swarm
     "peer_churn",         # a client departed (info: mid_download / post_complete)
     "peer_complete",      # a client finished its download
+    "repair_scheduled",   # the repair controller queued a re-seed of a piece
+    "repair_done",        # a scheduled re-seed landed (info: serving tier)
+    "repair_evict",       # read-repair evicted a corrupt replica (info: holder)
 )
 
 # Kinds that constitute the engine-independent "skeleton" of a download:
@@ -437,6 +440,8 @@ class TraceChecker:
       ``request_issued`` or ``hedge_fired`` for the same key.
     - **I6 join-first** — a client's events never precede its
       ``peer_join`` (clients without one, e.g. pod caches, are exempt).
+    - **I7 repair causality** — every ``repair_done`` has a prior
+      ``repair_scheduled`` for the same (torrent, client, piece).
     """
 
     def __init__(self, trace: "TraceRecorder | Iterable[TraceEvent]") -> None:
@@ -453,6 +458,7 @@ class TraceChecker:
         done: set[tuple] = set()
         fired: set[tuple] = set()
         fair_last: dict[tuple, float] = {}
+        repair_sched: set[tuple] = set()
         cancelled_total = 0.0
 
         for i, ev in enumerate(self.events):
@@ -502,6 +508,15 @@ class TraceChecker:
                     problems.append(
                         f"{where}: hedge_cancelled without a prior "
                         f"hedge_fired (client {ev.client!r} piece {ev.piece})"
+                    )
+            elif ev.kind == "repair_scheduled":
+                repair_sched.add(key)
+            elif ev.kind == "repair_done":
+                if key not in repair_sched:
+                    problems.append(
+                        f"{where}: repair_done without a prior "
+                        f"repair_scheduled (client {ev.client!r} "
+                        f"piece {ev.piece})"
                     )
             elif ev.kind == "fair_service":
                 fkey = (ev.torrent, ev.origin)

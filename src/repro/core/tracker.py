@@ -114,6 +114,18 @@ class Tracker:
         self._order: dict[bytes, list[str]] = {}
         self._pos: dict[bytes, dict[str, int]] = {}
         self._seqno: dict[bytes, dict[str, int]] = {}
+        # Incremental availability accounting. The map is still a live view
+        # of in-place bitfield mutation (attach_bitfield's contract), but
+        # each read is O(peers) version checks + O(pieces) per *changed*
+        # bitfield instead of an O(peers × pieces) resum — the repair scan
+        # and the metrics sampler both poll it every tick.
+        # _avail      — running all-counted replica sums (int64, per ih)
+        # _avail_comm — running community sums (origins/web-seeds excluded)
+        # _counted    — per counted peer: (bitfield version at last sync,
+        #               bits snapshot, infrastructure flag)
+        self._avail: dict[bytes, np.ndarray] = {}
+        self._avail_comm: dict[bytes, np.ndarray] = {}
+        self._counted: dict[bytes, dict[str, tuple[int, np.ndarray, bool]]] = {}
 
     # ------------------------------------------------------------- registration
     def register(self, metainfo: MetaInfo) -> None:
@@ -122,6 +134,10 @@ class Tracker:
         self._order.setdefault(ih, [])
         self._pos.setdefault(ih, {})
         self._seqno.setdefault(ih, {})
+        if ih not in self._avail:
+            self._avail[ih] = np.zeros(metainfo.num_pieces, dtype=np.int64)
+            self._avail_comm[ih] = np.zeros(metainfo.num_pieces, dtype=np.int64)
+            self._counted[ih] = {}
 
     def _swarm(self, metainfo: MetaInfo) -> dict[str, PeerRecord]:
         if metainfo.info_hash not in self._swarms:
@@ -228,7 +244,53 @@ class Tracker:
         monitor already observes.
         """
         self._swarm(metainfo)  # raises KeyError for unknown torrents
-        self._bitfields.setdefault(metainfo.info_hash, {})[peer_id] = bitfield
+        ih = metainfo.info_hash
+        bfs = self._bitfields.setdefault(ih, {})
+        if bfs.get(peer_id) is not bitfield:
+            # re-attach with a new object: the old snapshot is stale and
+            # the new object's version counter is unrelated to it
+            self._uncount(ih, peer_id)
+        bfs[peer_id] = bitfield
+
+    def _uncount(self, ih: bytes, peer_id: str) -> None:
+        entry = self._counted.get(ih, {}).pop(peer_id, None)
+        if entry is not None:
+            _, snap, infra = entry
+            self._avail[ih] -= snap
+            if not infra:
+                self._avail_comm[ih] -= snap
+
+    def _sync_availability(self, metainfo: MetaInfo) -> None:
+        """Bring the running replica sums up to date with the live swarm.
+
+        For each attached bitfield: peers that joined/changed since the
+        last sync have their old snapshot subtracted and the current bits
+        added; departed peers are uncounted. Unchanged peers cost one dict
+        lookup and a version compare.
+        """
+        swarm = self._swarm(metainfo)
+        ih = metainfo.info_hash
+        avail, comm = self._avail[ih], self._avail_comm[ih]
+        counted = self._counted[ih]
+        for peer_id, bf in self._bitfields.get(ih, {}).items():
+            rec = swarm.get(peer_id)
+            live = rec is not None and not rec.left
+            entry = counted.get(peer_id)
+            if not live:
+                if entry is not None:
+                    self._uncount(ih, peer_id)
+                continue
+            infra = rec.is_origin or rec.is_web_seed
+            if entry is not None and entry[0] == bf.version \
+                    and entry[2] == infra:
+                continue
+            if entry is not None:
+                self._uncount(ih, peer_id)
+            snap = bf.as_array().astype(np.int64)
+            avail += snap
+            if not infra:
+                comm += snap
+            counted[peer_id] = (bf.version, snap, infra)
 
     def availability_map(
         self, metainfo: MetaInfo, *, include_origins: bool = True
@@ -236,11 +298,22 @@ class Tracker:
         """Piece -> live replica count (int64, length ``num_pieces``).
 
         Counts every attached bitfield whose peer record is present and has
-        not left the swarm. The sampler reads min/mean replication from
-        this; the self-healing roadmap item will drive re-seeding from its
-        minima. Peers announced without an attached bitfield contribute
-        nothing (the tracker cannot see what it was never shown).
+        not left the swarm. The repair controller schedules re-seeds from
+        its minima and the sampler reads min/mean replication from it.
+        Peers announced without an attached bitfield contribute nothing
+        (the tracker cannot see what it was never shown). Maintained
+        incrementally; :meth:`availability_recompute` is the O(peers ×
+        pieces) reference it must always agree with.
         """
+        self._sync_availability(metainfo)
+        ih = metainfo.info_hash
+        src = self._avail[ih] if include_origins else self._avail_comm[ih]
+        return src.copy()
+
+    def availability_recompute(
+        self, metainfo: MetaInfo, *, include_origins: bool = True
+    ) -> np.ndarray:
+        """Reference full recompute of :meth:`availability_map` (tests)."""
         swarm = self._swarm(metainfo)
         out = np.zeros(metainfo.num_pieces, dtype=np.int64)
         for peer_id, bf in self._bitfields.get(metainfo.info_hash, {}).items():

@@ -303,6 +303,13 @@ class PodCacheOrigin(WebSeedOrigin):
         if data is not None and self.store is not None:
             self.store[piece] = data
 
+    def evict(self, piece: int) -> None:
+        """Drop one replica (read-repair traced a verify failure to this
+        cache); the next miss re-fills it from the mirror tier."""
+        self.have[piece] = False
+        if self.store is not None:
+            self.store.pop(piece, None)
+
 
 # --------------------------------------------------------------------------- origin set
 
@@ -608,6 +615,59 @@ class WebSeedSwarmSim(SwarmSim):
             hedge_cancelled=mirror.hedge_cancelled,
         )
 
+    def fail_pod(self, pod: int, now: Optional[float] = None) -> list[str]:
+        """Correlated loss of a whole pod: the pod cache dies with its
+        contents and every peer homed in the pod departs (sorted order,
+        deterministic). Returns the departed peer ids."""
+        if now is None:
+            now = self.net.now
+        cache = self.caches.get(pod)
+        if cache is not None and not cache.node.failed:
+            self.net.fail_node(cache.node)
+            cache.have[:] = False
+            if cache.store is not None:
+                cache.store.clear()
+            self.tracker.announce(
+                self.metainfo, cache.name, uploaded=0.0,
+                downloaded=cache.fill_downloaded, event="stopped", now=now,
+                http_uploaded=cache.http_uploaded, tier="pod_cache",
+                pod=pod,
+            )
+        victims = sorted(
+            pid for pid, a in self.agents.items()
+            if not a.is_origin and not a.departed and self._pod(pid) == pod
+        )
+        for pid in victims:
+            self.fail_peer(pid)
+        return victims
+
+    # ------------------------------------------------------------- repair
+    def repair_fetch(self, piece: int, now: float) -> Optional[str]:
+        """Repair-controller hook: start one re-seed of ``piece``.
+
+        Destination: first (sorted) live non-origin client lacking the
+        piece with nothing in flight for it. Source tier preference
+        follows the durability ladder — ranked live mirrors, then the
+        destination's pod cache when it already holds the piece, then a
+        live peer replica — all priced through the normal admission path
+        so repair traffic contends fairly with foreground transfers."""
+        dst = self._repair_dst(piece)
+        if dst is None:
+            return None
+        targets: list[WebSeedOrigin] = list(self.scheduler.ranked_origins(
+            dst.peer_id,
+            names=self.tracker.mirror_list(self.metainfo, dst.peer_id),
+            live=self._origin_live,
+        ))
+        cache = self._live_cache(dst)
+        if cache is not None and cache.holds(piece):
+            targets.append(cache)
+        if targets:
+            started = self._request_http(dst, piece, targets, now)
+            if started:
+                return dst.peer_id
+        return self._repair_from_peer(dst, piece, now)
+
     # ------------------------------------------------------------- scheduling
     def _filter_peer_list(self, agent: PeerAgent, peer_list: list[str]) -> list[str]:
         """With a cache tier, the peer mesh goes pod-local: the cache is the
@@ -909,10 +969,13 @@ class WebSeedSwarmSim(SwarmSim):
     ) -> bool:
         """Start (or restart after failover) the spine fill for one piece.
 
-        Returns False only when the live mirror tier is empty; admission
-        rejections — and the corner where every live mirror has served bad
-        bytes for this piece (exclusions heal: corrupt-once recovers) — are
-        retried after the policy backoff."""
+        Returns False only when the live mirror tier is empty (or the
+        cache itself died: a failed pod's cache must not start fills);
+        admission rejections — and the corner where every live mirror has
+        served bad bytes for this piece (exclusions heal: corrupt-once
+        recovers) — are retried after the policy backoff."""
+        if cache.node is not None and cache.node.failed:
+            return False
         live = [
             (o.name, self.agents[o.name])
             for o in self.scheduler.ranked_origins(
@@ -945,6 +1008,11 @@ class WebSeedSwarmSim(SwarmSim):
                 )
 
             def _start(t: float, name=name, magent=magent, mirror=mirror) -> None:
+                if cache.node.failed:
+                    # the pod died during the mirror's latency window
+                    mirror.release()
+                    cache.fill_from.pop(piece, None)
+                    return
                 if magent.node.failed:
                     mirror.release()
                     cache.fill_from.pop(piece, None)
@@ -986,6 +1054,8 @@ class WebSeedSwarmSim(SwarmSim):
         src_tag = f"{cache.name}::http"
         for dst_id in cache.filling.pop(piece, []):
             dst = self._finish_http_request(cache, dst_id, piece)
+            if self.repair is not None:
+                self.repair.note_failed(dst_id, piece)
             if dst is None or dst.departed:
                 continue
             if dst.in_flight.get(piece) == src_tag:
@@ -1169,6 +1239,20 @@ class WebSeedSwarmSim(SwarmSim):
             verify_failed=(not corrupt and dst.last_reject_verify),
             latency=req_latency if accepted else None,
         )
+        if self.repair is not None:
+            if accepted:
+                self.repair.note_done(
+                    dst_id, piece,
+                    "pod_cache" if cache is not None else "origin",
+                    float(flow.size), now,
+                )
+            elif not corrupt and dst.last_reject_verify \
+                    and cache is not None:
+                # read-repair: the cache's at-rest replica is poisoned —
+                # evict it so the next miss refills from a mirror instead
+                # of re-serving bad bytes to the whole pod
+                cache.evict(piece)
+                self.repair.note_evict(name, piece, now)
         if self.telemetry.enabled:
             if accepted:
                 self.telemetry.emit(
@@ -1201,6 +1285,9 @@ class WebSeedSwarmSim(SwarmSim):
         origin = self._origin_by_name(name)
         dst = self._finish_http_request(origin, dst_id, piece)
         was_hedged = self.scheduler.hedge_loser(dst_id, piece, name)
+        if self.repair is not None and (dst is None or not
+                                        dst.bitfield.has(piece)):
+            self.repair.note_failed(dst_id, piece)
         if dst is None or dst.departed:
             return
         if was_hedged and dst.bitfield.has(piece) and flow.transferred > 0:

@@ -1,0 +1,401 @@
+"""Durability tier: RepairController semantics, churn events, availability.
+
+Covers the repair controller in isolation (hysteresis dead band, per-scan
+budget, settlement/ledger accounting), read-repair end-to-end on the byte
+engine (a poisoned at-rest replica is evicted — exactly that one), the
+TraceChecker repair-causality invariant, the hardened EventSpec/ScenarioSpec
+validation for ``churn_storm``/``pod_fail``, and the incremental tracker
+availability map against its full-recompute reference under randomized
+churn.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArrivalSpec,
+    Bitfield,
+    ContentSpec,
+    EventSpec,
+    ManifestSpec,
+    MirrorSpec,
+    FabricSpec,
+    OriginPolicy,
+    PodCacheSpec,
+    RepairController,
+    RepairSpec,
+    ScenarioSpec,
+    TopologySpec,
+    TraceChecker,
+    TraceEvent,
+    Tracker,
+)
+
+MI, _ = ManifestSpec("unit", 1 << 20, 1 << 18, payload="size_only").build()
+PIECE = float(1 << 18)
+
+
+def controller(spec: RepairSpec, avail, fetched: list):
+    """Controller over a mutable availability list and a fetch recorder."""
+    seq = iter(range(10_000))
+
+    def fetch(piece, now):
+        fetched.append(piece)
+        return f"dst{next(seq)}"
+
+    return RepairController(
+        spec, MI, availability=lambda: np.asarray(avail, dtype=np.int64),
+        fetch=fetch,
+    )
+
+
+# ------------------------------------------------------------------ spec
+
+
+def test_repair_spec_round_trip_including_inf_budget():
+    spec = RepairSpec(target_replication=5, scan_interval=2.0,
+                      budget_bps=12e6, hysteresis=1)
+    assert RepairSpec.from_dict(spec.to_dict()) == spec
+    # default budget is infinite: serialized as the string "inf" (strict
+    # RFC 8259 — no Infinity token), parsed back to float('inf')
+    d = RepairSpec().to_dict()
+    assert d["budget_bps"] == "inf"
+    json.dumps(d)  # must be plain JSON
+    assert RepairSpec.from_dict(d) == RepairSpec()
+
+
+@pytest.mark.parametrize("over", [
+    dict(target_replication=0),
+    dict(scan_interval=0.0),
+    dict(budget_bps=0.0),
+    dict(target_replication=2, hysteresis=2),
+    dict(hysteresis=-1),
+])
+def test_repair_spec_validation(over):
+    with pytest.raises(ValueError):
+        RepairSpec(**over)
+
+
+def test_scenario_spec_repair_round_trip():
+    spec = ScenarioSpec(
+        content=ContentSpec(manifests=(
+            ManifestSpec("ds", 1 << 20, 1 << 17, payload="random"),
+        )),
+        fabric=FabricSpec(mirrors=(MirrorSpec("m0", up_bps=4e6),)),
+        arrivals=(ArrivalSpec(kind="flash", n=4, up_bps=2e6, down_bps=4e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
+        repair=RepairSpec(target_replication=3, scan_interval=1.5),
+        seed=3,
+    )
+    again = ScenarioSpec.from_json(spec.to_json())
+    assert again == spec and again.repair.target_replication == 3
+    # absent / null both mean "no repair tier"
+    d = spec.to_dict()
+    d["repair"] = None
+    assert ScenarioSpec.from_dict(d).repair is None
+    d.pop("repair")
+    assert ScenarioSpec.from_dict(d).repair is None
+
+
+# ------------------------------------------------------------- controller
+
+
+def test_hysteresis_dead_band_no_thrash():
+    # trigger is target - hysteresis: replication sitting inside the dead
+    # band must not schedule anything, scan after scan
+    fetched: list = []
+    ctrl = controller(RepairSpec(target_replication=4, hysteresis=2),
+                      [2, 3, 4], fetched)
+    for t in range(5):
+        assert ctrl.scan(float(t)) == 0
+    assert fetched == [] and ctrl.pending_count == 0
+    # ...but once a piece breaches the band it is restored all the way to
+    # target (not just back inside the band), so it cannot re-trigger soon
+    fetched.clear()
+    ctrl = controller(RepairSpec(target_replication=4, hysteresis=2),
+                      [1, 3, 4], fetched)
+    assert ctrl.scan(0.0) == 3
+    assert fetched == [0, 0, 0]
+
+
+def test_most_degraded_piece_first():
+    fetched: list = []
+    ctrl = controller(RepairSpec(target_replication=3), [2, 0, 1], fetched)
+    ctrl.scan(0.0)
+    # piece 1 (avail 0) before piece 2 (avail 1) before piece 0 (avail 2)
+    assert fetched == [1, 1, 1, 2, 2, 0]
+
+
+def test_budget_caps_each_scan_without_carry_over():
+    # allowance = budget_bps * scan_interval = 2 pieces per scan
+    spec = RepairSpec(target_replication=6, scan_interval=1.0,
+                      budget_bps=2 * PIECE)
+    fetched: list = []
+    ctrl = controller(spec, [0, 6, 6, 6], fetched)
+    assert ctrl.scan(0.0) == 2          # capped by budget, not by deficit
+    assert ctrl.scan(1.0) == 2          # in-flight counted, still capped
+    assert len(fetched) == 4
+    # an idle scan does not bank its unused allowance for the next one
+    ctrl2 = controller(spec, [6, 6, 6, 6], fetched)
+    assert ctrl2.scan(0.0) == 0
+    ctrl2.availability = lambda: np.asarray([0, 6, 6, 6], dtype=np.int64)
+    assert ctrl2.scan(1.0) == 2
+
+
+def test_settlement_ledgers_by_tier_and_ignores_organic_transfers():
+    fetched: list = []
+    ctrl = controller(RepairSpec(target_replication=2), [0], fetched)
+    assert ctrl.scan(0.0) == 2
+    dsts = [k[0] for k in ctrl.pending]
+    # an organic transfer (never scheduled) settles as a no-op
+    assert ctrl.note_done("bystander", 0, "peer", PIECE, 1.0) is False
+    assert ctrl.repairs_done == 0 and sum(ctrl.repair_bytes.values()) == 0
+    # scheduled repairs settle and ledger bytes under their serving tier
+    assert ctrl.note_done(dsts[0], 0, "origin", PIECE, 1.0) is True
+    assert ctrl.note_done(dsts[1], 0, "pod_cache", PIECE, 1.5) is True
+    assert ctrl.repairs_done == 2 and ctrl.pending_count == 0
+    assert ctrl.repair_bytes == {"origin": PIECE, "pod_cache": PIECE,
+                                 "peer": 0.0}
+
+
+def test_failed_repair_is_rescheduled_by_the_next_scan():
+    fetched: list = []
+    ctrl = controller(RepairSpec(target_replication=1), [0, 1], fetched)
+    assert ctrl.scan(0.0) == 1
+    (dst, piece), = ctrl.pending
+    assert ctrl.note_failed(dst, piece) is True
+    assert ctrl.repairs_failed == 1 and ctrl.pending_count == 0
+    # deficit still live, in-flight credit released: scheduled again
+    assert ctrl.scan(1.0) == 1
+
+
+def test_episode_tracking_measures_time_to_repair():
+    avail = [[2, 2], [0, 2], [1, 2], [2, 2]]
+    it = iter(avail)
+    ctrl = RepairController(
+        RepairSpec(target_replication=2), MI,
+        availability=lambda: np.asarray(next(it), dtype=np.int64),
+        fetch=lambda piece, now: None,   # nothing schedulable
+    )
+    for t in range(4):
+        ctrl.scan(float(t))
+    summ = ctrl.summary()
+    assert summ["episodes"] == 1
+    assert summ["time_to_repair"] == 2.0   # breached at t=1, healed at t=3
+    assert summ["min_replication_low"] == 0.0
+    assert summ["min_replication_final"] == 2.0
+
+
+# ------------------------------------------------------------ read-repair
+
+
+def byte_spec(**over) -> ScenarioSpec:
+    base = dict(
+        content=ContentSpec(manifests=(
+            ManifestSpec("ds", 1 << 20, 1 << 17, payload="random"),
+        )),
+        fabric=FabricSpec(mirrors=(MirrorSpec("origin0", up_bps=8e6),)),
+        arrivals=(ArrivalSpec(kind="flash", n=4, up_bps=2e6, down_bps=4e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=8e6),
+        repair=RepairSpec(target_replication=2, scan_interval=1.0),
+        seed=5,
+    )
+    base.update(over)
+    return ScenarioSpec(**base)
+
+
+def test_read_repair_evicts_exactly_the_poisoned_replica():
+    compiled = byte_spec().build("byte")
+    sw = compiled.sim
+    mi = sw.metainfo
+    # step until some peer's replica is wanted by another peer
+    poisoned = None
+    for _ in range(50):
+        sw.step()
+        sw.repair_scan()
+        for pid in sorted(sw.peers):
+            me = sw.peers[pid]
+            if me.store is None:
+                continue
+            for piece in sorted(me.store):
+                if any(oid != pid and piece not in sw.peers[oid].bitfield
+                       for oid in sw.peers):
+                    poisoned = (pid, piece)
+                    break
+            if poisoned:
+                break
+        if poisoned:
+            break
+    assert poisoned is not None, "no shareable replica ever appeared"
+    pid, piece = poisoned
+    holder = sw.peers[pid]
+    good = holder.store[piece]
+    holder.store[piece] = bytes([good[0] ^ 0xFF]) + good[1:]
+    before = dict(holder.store)
+    while not sw.complete:
+        if sw.step() == 0 and sw.repair_scan() == 0:
+            break
+        sw.repair_scan()
+    ctrl = sw.repair
+    # the poisoned replica was detected and evicted — and only it; the
+    # holder may legitimately re-fetch a *verified* copy afterward (it
+    # still needs the piece), so assert on bytes, not on presence
+    assert ctrl.evictions == 1
+    if piece in holder.store:
+        assert mi.verify_piece(piece, holder.store[piece])
+    assert all(p in holder.store for p in before if p != piece)
+    # nobody stored a corrupt piece, and every peer still completed
+    for oid, agent in sw.peers.items():
+        assert all(mi.verify_piece(i, d) for i, d in agent.store.items())
+        assert sw._peer_done(oid)
+
+
+# ----------------------------------------------------------- trace checker
+
+
+def test_checker_flags_repair_done_without_schedule():
+    events = [
+        TraceEvent(0.0, "peer_join", torrent="a", client="p0"),
+        TraceEvent(2.0, "repair_done", torrent="a", client="p0", piece=4,
+                   nbytes=100.0, info="origin"),
+    ]
+    problems = TraceChecker(events).check()
+    assert any("repair_done without a prior" in p for p in problems)
+    events.insert(1, TraceEvent(
+        1.0, "repair_scheduled", torrent="a", client="p0", piece=4,
+        nbytes=100.0,
+    ))
+    assert TraceChecker(events).check() == []
+
+
+# ------------------------------------------------------- event validation
+
+
+def fabric_spec(**over) -> ScenarioSpec:
+    base = dict(
+        content=ContentSpec(manifests=(
+            ManifestSpec("ds", 1 << 20, 1 << 17, payload="random"),
+        )),
+        fabric=FabricSpec(mirrors=(MirrorSpec("m0", up_bps=4e6),),
+                          pod_caches=PodCacheSpec(up_bps=8e6)),
+        topology=TopologySpec(num_pods=2, hosts_per_pod=4,
+                              host_up_bps=2e6, host_down_bps=4e6,
+                              spine_bps=float("inf")),
+        arrivals=(ArrivalSpec(kind="flash", n=6, up_bps=2e6, down_bps=4e6,
+                              topology_hosts=True),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=4e6),
+        seed=2,
+    )
+    base.update(over)
+    return ScenarioSpec(**base)
+
+
+def test_churn_storm_and_pod_fail_round_trip():
+    spec = fabric_spec(events=(
+        EventSpec(kind="churn_storm", at=5.0, count=3, spread=2.0, seed=9),
+        EventSpec(kind="pod_fail", at=8.0, pod=1),
+    ))
+    again = ScenarioSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.events[0].count == 3 and again.events[1].pod == 1
+
+
+@pytest.mark.parametrize("kwargs,msg", [
+    (dict(kind="meteor_strike", at=1.0), "unknown event kind"),
+    (dict(kind="churn_storm", at=1.0, count=0), "count"),
+    (dict(kind="churn_storm", at=1.0, count=2, spread=-1.0), "spread"),
+    (dict(kind="churn_storm", at=1.0, count=2, target="p0"), "target"),
+    (dict(kind="pod_fail", at=1.0), "pod"),
+    (dict(kind="pod_fail", at=1.0, pod=0, target="m0"), "target"),
+    (dict(kind="mirror_fail", at=1.0), "target"),
+])
+def test_event_spec_rejects_malformed_events(kwargs, msg):
+    with pytest.raises(ValueError, match=msg):
+        EventSpec(**kwargs)
+
+
+def test_scenario_rejects_undeclared_targets_and_duplicates():
+    with pytest.raises(ValueError, match="unknown mirror"):
+        fabric_spec(events=(EventSpec(kind="mirror_fail", at=1.0,
+                                      target="ghost"),))
+    with pytest.raises(ValueError, match="undeclared pod"):
+        fabric_spec(events=(EventSpec(kind="pod_fail", at=1.0, pod=7),))
+    ev = EventSpec(kind="pod_fail", at=1.0, pod=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        fabric_spec(events=(ev, EventSpec(kind="pod_fail", at=1.0, pod=0)))
+    # same kind at a different time is a legitimate schedule, not a dup
+    fabric_spec(events=(ev, EventSpec(kind="pod_fail", at=2.0, pod=0)))
+
+
+def test_fleet_engine_rejects_repair_and_storm_events():
+    with pytest.raises(ValueError, match="repair"):
+        byte_spec().build("fleet")
+    storm = byte_spec(repair=None, events=(
+        EventSpec(kind="churn_storm", at=1.0, count=2),
+    ))
+    with pytest.raises(ValueError, match="object-engine only"):
+        storm.build("fleet")
+
+
+def test_repair_disabled_matches_repair_absent_exactly():
+    base = byte_spec(repair=None).build("byte").run()
+    off = byte_spec(repair=RepairSpec(enabled=False)).build("byte").run()
+    a = next(iter(base.outcomes.values()))
+    b = next(iter(off.outcomes.values()))
+    assert base.sim_time == off.sim_time
+    assert a.completed == b.completed and a.clients == b.clients
+
+
+# ------------------------------------------------- incremental availability
+
+
+def test_tracker_incremental_availability_matches_recompute_randomized():
+    rng = np.random.default_rng(17)
+    mi, _ = ManifestSpec("rand", 1 << 20, 1 << 17, payload="size_only").build()
+    tracker = Tracker()
+    tracker.register(mi)
+    bitfields: dict[str, Bitfield] = {}
+    alive: dict[str, bool] = {}
+
+    def check():
+        for inc in (True, False):
+            got = tracker.availability_map(mi, include_origins=inc)
+            want = tracker.availability_recompute(mi, include_origins=inc)
+            np.testing.assert_array_equal(got, want)
+
+    for step in range(300):
+        op = rng.integers(0, 5)
+        pid = f"p{rng.integers(0, 12)}"
+        if op == 0:   # join (sometimes as infrastructure) + attach
+            bf = Bitfield(mi.num_pieces)
+            for i in rng.integers(0, mi.num_pieces, size=3):
+                bf.set(int(i))
+            tracker.announce(mi, pid, uploaded=0, downloaded=0,
+                             event="started",
+                             is_origin=bool(rng.integers(0, 4) == 0))
+            tracker.attach_bitfield(mi, pid, bf)
+            bitfields[pid] = bf
+            alive[pid] = True
+        elif op == 1 and alive.get(pid):   # churn out
+            tracker.announce(mi, pid, uploaded=0, downloaded=0,
+                             event="stopped")
+            alive[pid] = False
+        elif op == 2 and alive.get(pid):   # in-place bitfield mutation
+            i = int(rng.integers(0, mi.num_pieces))
+            bf = bitfields[pid]
+            (bf.clear if i in bf else bf.set)(i)
+        elif op == 3 and pid in bitfields:  # rejoin / re-announce
+            tracker.announce(mi, pid, uploaded=0, downloaded=0,
+                             event="started")
+            alive[pid] = True
+        elif op == 4 and alive.get(pid):   # re-attach a fresh object
+            bf = Bitfield(mi.num_pieces)
+            bf.set(int(rng.integers(0, mi.num_pieces)))
+            tracker.attach_bitfield(mi, pid, bf)
+            bitfields[pid] = bf
+        if step % 7 == 0:
+            check()
+    check()
