@@ -1,0 +1,244 @@
+"""Adversarial resilience — Byzantine quarantine, tracker outages, partitions.
+
+The paper's swarm assumes honest peers and a healthy control plane; the
+adversarial tier drops both assumptions. ``AdversarySpec`` declares
+poisoners (corrupt every upload on the wire — their at-rest replicas stay
+good) and free-riders (zero-slot chokers that never serve); the
+quarantine (``core/scheduler.Quarantine``) bans a peer past a hash-fail
+threshold and evicts it from tracker handouts. ``tracker_fail``/
+``tracker_heal`` events black out announces — clients ride a cached peer
+list and re-announce with capped exponential backoff — and ``partition``
+events cut the netsim spine or isolate a pod set. Six claims, each
+derived from the committed ``benchmarks/scenarios/adversarial.json``:
+
+  (a) **poisoner sweep**: 5%/10%/25% poisoner fractions. Every client
+      completes, zero corrupt bytes land in finished pieces, every
+      poisoner ends banned; the poisoned-waste overhead is ledgered
+      against goodput and stays bounded.
+  (b) **headline blackout**: the acceptance row — 10% poisoners AND a
+      mid-run 30 s tracker blackout on one run. Same three guarantees.
+  (c) **blackout delta**: the same blackout with no adversary vs a
+      healthy baseline — the data plane keeps flowing while the control
+      plane is dark, so the completion-time delta is small and pinned.
+  (d) **free-riders**: declared leeches download fine but upload zero
+      bytes, and nobody stalls waiting on them.
+  (e) **partition**: a pod is cut from the spine mid-crowd and healed;
+      cross-partition flows abort, each side keeps trading inside, and
+      everyone completes after reconciliation.
+  (f) **byte engine**: poisoners + blackout over real verified bytes —
+      every stored replica hashes clean, all poisoners banned.
+
+All rows are deterministic (seeded RNGs, dedicated adversary RNG, crc32
+announce jitter) and pinned at ``--tolerance 0`` in CI via the committed
+``BENCH_adversarial.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+from repro.core import (
+    AdversarySpec, ArrivalSpec, EventSpec, ScenarioSpec, TopologySpec,
+)
+
+SCENARIO = Path(__file__).resolve().parent / "scenarios" / "adversarial.json"
+
+
+def _corrupt_replicas(sim) -> int:
+    """Stored pieces (peers + caches) that fail hash verification."""
+    mi = sim.metainfo
+    bad = 0
+    for pid, agent in sim.agents.items():
+        if pid in sim.origin_set.origins or agent.store is None:
+            continue
+        bad += sum(1 for i, d in agent.store.items()
+                   if not mi.verify_piece(i, d))
+    for cache in sim.caches.values():
+        bad += sum(1 for i, d in cache.store.items()
+                   if not mi.verify_piece(i, d))
+    return bad
+
+
+def _run_time(spec: ScenarioSpec):
+    compiled = spec.build("time")
+    result = compiled.run()
+    return compiled, result
+
+
+def _assert_clean(compiled, result, spec) -> dict:
+    """The three adversarial guarantees; returns the quarantine summary."""
+    sim = compiled.sim
+    out = next(iter(result.outcomes.values()))
+    assert out.completed == out.clients, (out.completed, out.clients)
+    assert _corrupt_replicas(sim) == 0, "corrupt bytes in a finished store"
+    summ = compiled.quarantines[sim.metainfo.name].summary()
+    assert tuple(summ["banned_now"]) == spec.resolve_poisoners(), summ
+    return summ
+
+
+def poison_sweep(report, spec: ScenarioSpec) -> None:
+    """(a) poisoner fractions 5/10/25%, no blackout."""
+    base = dataclasses.replace(spec, events=())
+    for frac in (0.05, 0.10, 0.25):
+        point = dataclasses.replace(
+            base,
+            adversary=dataclasses.replace(spec.adversary,
+                                          poisoner_frac=frac),
+        )
+        t0 = time.perf_counter()
+        compiled, result = _run_time(point)
+        wall = (time.perf_counter() - t0) * 1e6
+        summ = _assert_clean(compiled, result, point)
+        out = next(iter(result.outcomes.values()))
+        waste = summ["wasted_bytes"] / out.total_downloaded
+        # poisoners are cut off after ban_threshold strikes each, so the
+        # waste overhead stays a sliver of goodput even at 25% hostile
+        assert waste < 0.10, waste
+        report(
+            f"adversarial/poison/f{frac:.2f}", wall,
+            f"done={out.completed}/{out.clients} "
+            f"banned={len(summ['banned_now'])} "
+            f"wasted={summ['wasted_bytes'] / 1e6:.2f}MB "
+            f"overhead={waste * 100:.2f}% t={out.duration:.0f}s",
+        )
+
+
+def headline_blackout(report, spec: ScenarioSpec) -> None:
+    """(b) the acceptance row: 10% poisoners + mid-run tracker blackout."""
+    t0 = time.perf_counter()
+    compiled, result = _run_time(spec)
+    wall = (time.perf_counter() - t0) * 1e6
+    summ = _assert_clean(compiled, result, spec)
+    out = next(iter(result.outcomes.values()))
+    trk = compiled.sim.tracker
+    assert not trk.failed, "blackout never healed"
+    report(
+        "adversarial/blackout/poisoned", wall,
+        f"done={out.completed}/{out.clients} "
+        f"banned={len(summ['banned_now'])} "
+        f"wasted={summ['wasted_bytes'] / 1e6:.2f}MB "
+        f"dark=30s t={out.duration:.0f}s",
+    )
+
+
+def blackout_delta(report, spec: ScenarioSpec) -> None:
+    """(c) control-plane outage cost with an honest swarm."""
+    honest = dataclasses.replace(spec, adversary=None, events=())
+    dark = dataclasses.replace(spec, adversary=None)
+    t0 = time.perf_counter()
+    _, res_h = _run_time(honest)
+    _, res_d = _run_time(dark)
+    wall = (time.perf_counter() - t0) * 1e6
+    th = next(iter(res_h.outcomes.values())).duration
+    td = next(iter(res_d.outcomes.values())).duration
+    done = next(iter(res_d.outcomes.values()))
+    assert done.completed == done.clients, "blackout stalled the swarm"
+    # the data plane rides the cached peer list: the outage must cost
+    # well under its own 30 s window
+    assert td - th < 30.0, (th, td)
+    report(
+        "adversarial/blackout/delta", wall,
+        f"healthy={th:.0f}s dark={td:.0f}s delta={td - th:.1f}s "
+        f"window=30s",
+    )
+
+
+def free_riders(report, spec: ScenarioSpec) -> None:
+    """(d) declared leeches: complete fine, serve nothing."""
+    riders = ("peer0003", "peer0007")
+    point = dataclasses.replace(
+        spec, events=(),
+        adversary=AdversarySpec(poisoner_frac=0.0, free_riders=riders,
+                                ban_threshold=2, seed=5),
+    )
+    t0 = time.perf_counter()
+    compiled, result = _run_time(point)
+    wall = (time.perf_counter() - t0) * 1e6
+    sim = compiled.sim
+    out = next(iter(result.outcomes.values()))
+    assert out.completed == out.clients
+    served = sum(sim.agents[r].ledger.uploaded for r in riders)
+    assert served == 0.0, served
+    report(
+        "adversarial/free_riders/starved", wall,
+        f"done={out.completed}/{out.clients} riders={len(riders)} "
+        f"rider_uploaded={served:.0f}B t={out.duration:.0f}s",
+    )
+
+
+def partition_heal(report, spec: ScenarioSpec) -> None:
+    """(e) pod 1 cut from the spine mid-crowd, healed 14 s later."""
+    point = dataclasses.replace(
+        spec,
+        adversary=None,
+        topology=TopologySpec(num_pods=2, hosts_per_pod=10,
+                              host_up_bps=2e6, host_down_bps=4e6,
+                              spine_bps=float("inf"), same_pod_frac=0.8),
+        arrivals=(
+            dataclasses.replace(spec.arrivals[0], topology_hosts=True),
+        ),
+        events=(
+            EventSpec(kind="partition", at=8.0, target="pods:1"),
+            EventSpec(kind="partition_heal", at=22.0, target="pods:1"),
+        ),
+    )
+    t0 = time.perf_counter()
+    compiled, result = _run_time(point)
+    wall = (time.perf_counter() - t0) * 1e6
+    sim = compiled.sim
+    out = next(iter(result.outcomes.values()))
+    assert out.completed == out.clients, (out.completed, out.clients)
+    assert not sim.net.partitioned, "partition never healed"
+    assert _corrupt_replicas(sim) == 0
+    report(
+        "adversarial/partition/pod_cut", wall,
+        f"done={out.completed}/{out.clients} window=14s "
+        f"t={out.duration:.0f}s",
+    )
+
+
+def byte_poisoned_blackout(report, spec: ScenarioSpec) -> None:
+    """(f) byte engine: same adversary + blackout over real bytes."""
+    point = dataclasses.replace(
+        spec,
+        events=(
+            EventSpec(kind="tracker_fail", at=3),
+            EventSpec(kind="tracker_heal", at=8),
+        ),
+    )
+    t0 = time.perf_counter()
+    compiled = point.build("byte")
+    result = compiled.run()
+    wall = (time.perf_counter() - t0) * 1e6
+    swarm = compiled.sim
+    mi = swarm.metainfo
+    bad = sum(1 for pid, a in swarm.peers.items()
+              for p, d in (a.store or {}).items()
+              if not mi.verify_piece(p, d))
+    assert bad == 0, f"{bad} corrupt replicas"
+    summ = compiled.quarantines[mi.name].summary()
+    assert tuple(summ["banned_now"]) == point.resolve_poisoners(), summ
+    out = next(iter(result.outcomes.values()))
+    assert out.completed == out.clients
+    report(
+        "adversarial/byte/poisoned_blackout", wall,
+        f"done={out.completed}/{out.clients} t={result.sim_time:.0f}rounds "
+        f"banned={len(summ['banned_now'])} "
+        f"wasted={summ['wasted_bytes'] / 1e6:.2f}MB corrupt=0",
+    )
+
+
+def main(report, scenario=None):
+    spec = ScenarioSpec.load(scenario or SCENARIO)
+    poison_sweep(report, spec)
+    headline_blackout(report, spec)
+    blackout_delta(report, spec)
+    free_riders(report, spec)
+    partition_heal(report, spec)
+    byte_poisoned_blackout(report, spec)
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.0f},{d}"))

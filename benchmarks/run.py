@@ -47,6 +47,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from benchmarks import (  # noqa: E402
+    bench_adversarial,
     bench_cluster_coldstart,
     bench_durability,
     bench_eq1_ud_ratio,
@@ -74,6 +75,7 @@ SUITES = {
     "tail_latency": bench_tail_latency,
     "multi_torrent": bench_multi_torrent,
     "durability": bench_durability,
+    "adversarial": bench_adversarial,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

@@ -38,6 +38,7 @@ from .netsim import FluidNetwork, Flow, Link, Node
 from .peer import Ledger, PeerAgent
 from .repair import REPAIR_TIERS, RepairController, RepairSpec
 from .scenario import (
+    AdversarySpec,
     ArrivalSpec,
     CompiledScenario,
     ContentSpec,
@@ -51,9 +52,11 @@ from .scenario import (
     TorrentOutcome,
 )
 from .scheduler import (
+    AdversaryState,
     ClientView,
     FairShareLedger,
     OriginPolicy,
+    Quarantine,
     Request,
     TransferScheduler,
     jain_index,

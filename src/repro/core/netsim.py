@@ -112,6 +112,11 @@ class FluidNetwork:
         self.bytes_sent: dict[str, float] = {}
         self.bytes_received: dict[str, float] = {}
         self.events_processed = 0
+        # open partition: node name -> side id. Nodes on different sides
+        # are unreachable; nodes absent from the map sit on the default
+        # side. None == fully connected.
+        self._partition: Optional[dict[str, int]] = None
+        self._partition_default = 0
 
     # ------------------------------------------------------------- topology
     def add_node(self, name: str, up_bps: float, down_bps: float) -> Node:
@@ -136,6 +141,55 @@ class FluidNetwork:
         for flow in [f for f in self.flows.values() if f.src is node or f.dst is node]:
             self.abort_flow(flow)
 
+    # ------------------------------------------------------------- partitions
+    def set_partition(self, sides: dict[str, int], default: int = 0) -> None:
+        """Partition the network: nodes on different sides become mutually
+        unreachable. ``sides`` maps node names to side ids; unlisted nodes
+        sit on ``default``. Every in-flight cross-side flow aborts (the
+        callers' ``on_abort`` hooks drive their in-partition retries), and
+        :meth:`start_flow` refuses cross-side endpoints until
+        :meth:`clear_partition`. Only one partition may be open at a time.
+        """
+        if self._partition is not None:
+            raise RuntimeError("a partition is already open")
+        self._partition = dict(sides)
+        self._partition_default = int(default)
+        for flow in [
+            f for f in self.flows.values()
+            if not self.reachable(f.src, f.dst)
+        ]:
+            self.abort_flow(flow)
+
+    def clear_partition(self) -> None:
+        """Heal the partition (idempotent): all nodes reconnect."""
+        self._partition = None
+
+    @property
+    def partitioned(self) -> bool:
+        return self._partition is not None
+
+    def side_of(self, node: Node) -> int:
+        """The open partition's side id for ``node`` (default side when no
+        partition is open or the node is unlisted)."""
+        if self._partition is None:
+            return self._partition_default
+        return self._partition.get(node.name, self._partition_default)
+
+    def reachable(self, src: Node, dst: Node) -> bool:
+        """Can a flow run between these endpoints right now (partition
+        check only — liveness is the caller's ``failed`` check)."""
+        if self._partition is None:
+            return True
+        return self.side_of(src) == self.side_of(dst)
+
+    def reachable_names(self, a: str, b: str) -> bool:
+        """Name-keyed :meth:`reachable` (partition sides are name-keyed, so
+        no Node lookup is needed)."""
+        if self._partition is None:
+            return True
+        d = self._partition_default
+        return self._partition.get(a, d) == self._partition.get(b, d)
+
     # ------------------------------------------------------------- flows/timers
     def start_flow(
         self,
@@ -149,6 +203,8 @@ class FluidNetwork:
     ) -> Flow:
         if src.failed or dst.failed:
             raise RuntimeError("flow endpoints must be live")
+        if not self.reachable(src, dst):
+            raise RuntimeError("flow endpoints are partitioned")
         if size <= 0:
             raise ValueError("flow size must be positive")
         self._fid += 1

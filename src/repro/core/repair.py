@@ -61,6 +61,12 @@ class RepairSpec:
     ``target_replication - hysteresis``, but is then restored all the way
     to ``target_replication`` — so replication oscillating at the target
     boundary cannot thrash the scheduler.
+    ``prioritize`` orders the scan queue: ``"degraded"`` (default, the
+    PR 9 order — most-degraded first, then piece index) or ``"demand"`` —
+    pieces hot in live clients' ``needed`` masks first (ties broken by
+    degradation then index), so repair bandwidth lands where downloads
+    are actually waiting. The trigger set is identical either way; only
+    the order within one scan changes.
     """
 
     enabled: bool = True
@@ -68,6 +74,7 @@ class RepairSpec:
     scan_interval: float = 5.0
     budget_bps: float = float("inf")
     hysteresis: int = 0
+    prioritize: str = "degraded"
 
     def __post_init__(self) -> None:
         if self.target_replication < 1:
@@ -79,6 +86,11 @@ class RepairSpec:
         if not 0 <= self.hysteresis < self.target_replication:
             raise ValueError(
                 "hysteresis must satisfy 0 <= hysteresis < target_replication"
+            )
+        if self.prioritize not in ("degraded", "demand"):
+            raise ValueError(
+                "prioritize must be 'degraded' or 'demand' "
+                f"(got {self.prioritize!r})"
             )
 
     def to_dict(self) -> dict:
@@ -115,11 +127,16 @@ class RepairController:
         fetch: Callable[[int, float], Optional[str]],
         telemetry: TraceRecorder = NULL_RECORDER,
         torrent: Optional[str] = None,
+        demand: Optional[Callable[[], np.ndarray]] = None,
     ) -> None:
         self.spec = spec
         self.metainfo = metainfo
         self.availability = availability
         self.fetch = fetch
+        # piece -> live-client want count (``prioritize="demand"`` only);
+        # engines wire it from their needed masks, None falls back to the
+        # degradation order
+        self.demand = demand
         self.telemetry = telemetry
         self.torrent = torrent if torrent is not None else metainfo.name
         # (destination, piece) -> sim-time the re-seed was scheduled
@@ -168,6 +185,11 @@ class RepairController:
             return 0
         # most-degraded first, then piece index — deterministic
         order = degraded[np.argsort(eff[degraded], kind="stable")]
+        if spec.prioritize == "demand" and self.demand is not None:
+            # hottest pieces first; the stable re-sort keeps the
+            # (degradation, index) order within equal-demand ties
+            d = np.asarray(self.demand())
+            order = order[np.argsort(-d[order], kind="stable")]
         scheduled = 0
         for piece in order.tolist():
             size = self.metainfo.piece_size(piece)

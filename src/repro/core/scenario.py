@@ -56,8 +56,10 @@ from .metainfo import MetaInfo
 from .netsim import FluidNetwork
 from .repair import RepairController, RepairSpec
 from .scheduler import (
+    AdversaryState,
     FairShareLedger,
     OriginPolicy,
+    Quarantine,
     jain_index,
     spec_from_dict,
     spec_to_dict,
@@ -97,9 +99,53 @@ ARRIVAL_KINDS = ("flash", "staggered", "poisson")
 EVENT_KINDS = (
     "mirror_fail", "mirror_heal", "peer_churn", "corrupt_once",
     "churn_storm", "pod_fail",
+    "tracker_fail", "tracker_heal", "partition", "partition_heal",
 )
 # kinds that act on a population, not a named box/client: target must be empty
-UNTARGETED_EVENT_KINDS = ("churn_storm", "pod_fail")
+UNTARGETED_EVENT_KINDS = ("churn_storm", "pod_fail",
+                          "tracker_fail", "tracker_heal")
+# fail kind -> the heal kind that closes its window (S2 timeline checks).
+# mirror_fail/mirror_heal are deliberately NOT here: healing a mirror that
+# never failed is a documented no-op (same-tick ordering tests rely on it).
+PAIRED_EVENT_KINDS = {
+    "tracker_fail": "tracker_heal",
+    "partition": "partition_heal",
+}
+_HEAL_TO_FAIL = {heal: fail for fail, heal in PAIRED_EVENT_KINDS.items()}
+# adversarial-resilience kinds the fleet engine has no model for
+ADVERSARIAL_EVENT_KINDS = (
+    "tracker_fail", "tracker_heal", "partition", "partition_heal",
+)
+
+
+def _parse_partition_target(target: str, num_pods: int):
+    """Validate and parse a partition target: ``"spine"`` (every pod cut
+    from every other pod and from the core) or ``"pods:1,3"`` (the named
+    pod set isolated from the rest). Returns the isolated pod set, or
+    None for a spine cut."""
+    if target == "spine":
+        return None
+    if target.startswith("pods:"):
+        body = target[len("pods:"):]
+        try:
+            pods = {int(p) for p in body.split(",")} if body else set()
+        except ValueError:
+            pods = set()
+        if not pods:
+            raise ValueError(
+                f"partition target {target!r}: 'pods:' needs a comma-"
+                "separated pod list (e.g. 'pods:0,2')"
+            )
+        bad = sorted(p for p in pods if p < 0 or p >= num_pods)
+        if bad:
+            raise ValueError(
+                f"partition target {target!r} names undeclared pods "
+                f"{bad} (topology has {num_pods} pods)"
+            )
+        return pods
+    raise ValueError(
+        f"unknown partition target {target!r} (use 'spine' or 'pods:i,j')"
+    )
 PAYLOAD_MODES = ("size_only", "random")
 
 # --------------------------------------------------------------------------- content
@@ -389,8 +435,18 @@ class EventSpec:
       not named).
     * ``pod_fail`` — correlated loss of pod ``pod``: its cache dies with
       its contents and every client homed there departs (no target).
+    * ``tracker_fail`` / ``tracker_heal`` — control-plane outage window
+      (no target): announces stop landing; clients keep trading on cached
+      peer lists and re-announce with capped exponential backoff.
+    * ``partition`` / ``partition_heal`` — network partition window.
+      ``target`` is ``"spine"`` (every pod cut from every other pod and
+      from the mirror core) or ``"pods:1,3"`` (the named pod set isolated
+      from the rest); the heal's target must match the open partition's.
 
-    Two events with the same ``at`` fire in their listed order.
+    Two events with the same ``at`` fire in their listed order. Paired
+    kinds (``*_fail``/``*_heal``, ``partition``/``partition_heal``) must
+    form well-nested windows — ``ScenarioSpec`` rejects a heal with no
+    open window and a fail that re-opens one.
     """
 
     kind: str
@@ -439,6 +495,66 @@ class EventSpec:
 
     @classmethod
     def from_dict(cls, data: dict) -> "EventSpec":
+        return spec_from_dict(cls, data)
+
+
+# --------------------------------------------------------------------------- adversary
+
+
+@dataclasses.dataclass
+class AdversarySpec:
+    """Byzantine population declaration (object engines only).
+
+    ``poisoners`` names clients that corrupt every upload on the wire
+    (their at-rest replicas stay good — quarantine, not read-repair, is
+    the cure); ``poisoner_frac`` additionally drafts that fraction of the
+    client population by a deterministic stride over the sorted id list
+    (no RNG: the same spec always poisons the same clients).
+    ``poison_rate`` makes poisoning intermittent: each upload corrupts
+    with this probability, drawn from a dedicated RNG seeded with
+    ``seed`` (the engine RNG is untouched, preserving golden
+    bit-identity). ``free_riders`` names clients that download but never
+    serve. ``ban_threshold`` verify failures attributed to one source
+    ban it; ``parole_after`` > 0 re-admits a banned peer after that much
+    sim-time (one re-offense re-bans deterministically), 0 means bans
+    are permanent. ``enabled=False`` is the master off switch: the run
+    is bit-identical to an adversary-free build.
+    """
+
+    enabled: bool = True
+    poisoners: tuple = ()
+    poisoner_frac: float = 0.0
+    poison_rate: float = 1.0
+    free_riders: tuple = ()
+    ban_threshold: int = 3
+    parole_after: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.poisoners = tuple(self.poisoners)
+        self.free_riders = tuple(self.free_riders)
+        if not 0.0 <= self.poisoner_frac <= 1.0:
+            raise ValueError("poisoner_frac must be in [0, 1]")
+        if not 0.0 < self.poison_rate <= 1.0:
+            raise ValueError("poison_rate must be in (0, 1]")
+        if self.ban_threshold < 1:
+            raise ValueError("ban_threshold must be >= 1")
+        if self.parole_after < 0:
+            raise ValueError("parole_after must be >= 0")
+        dup = sorted(set(self.poisoners) & set(self.free_riders))
+        if dup:
+            raise ValueError(
+                f"clients cannot be both poisoner and free-rider: {dup}"
+            )
+
+    def to_dict(self) -> dict:
+        out = spec_to_dict(self)
+        out["poisoners"] = list(self.poisoners)
+        out["free_riders"] = list(self.free_riders)
+        return out
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "AdversarySpec":
         return spec_from_dict(cls, data)
 
 
@@ -549,6 +665,10 @@ class ScenarioSpec:
     repair: Optional[RepairSpec] = None
     # fleet-engine knobs (ignored by the object engines); None == defaults
     fleet: Optional[FleetSpec] = None
+    # Byzantine population (object engines only); None or enabled=False
+    # means every adversarial code path is inert and the run is
+    # bit-identical to an adversary-free build
+    adversary: Optional[AdversarySpec] = None
 
     # ------------------------------------------------------------- validation
     def __post_init__(self) -> None:
@@ -631,6 +751,15 @@ class ScenarioSpec:
                         f"pod_fail event targets undeclared pod {ev.pod} "
                         f"(topology has {self.topology.num_pods} pods)"
                     )
+            if ev.kind in ADVERSARIAL_EVENT_KINDS and self.content.multi:
+                raise ValueError(
+                    f"{ev.kind} events are single-torrent only for now"
+                )
+            if ev.kind in ("partition", "partition_heal"):
+                if self.topology is None:
+                    raise ValueError(f"{ev.kind} events need a topology")
+                _parse_partition_target(ev.target, self.topology.num_pods)
+        self._check_fault_windows()
         if self.content.multi:
             for group in self.arrivals:
                 if group.torrent is None:
@@ -638,6 +767,65 @@ class ScenarioSpec:
                         "multi-torrent scenarios: every arrival group must "
                         "name its torrent"
                     )
+        if self.adversary is not None and self.adversary.enabled:
+            if self.content.multi:
+                raise ValueError(
+                    "adversary tier is single-torrent only for now"
+                )
+            ids = self._peer_ids()
+            for role, names in (
+                ("poisoners", self.adversary.poisoners),
+                ("free_riders", self.adversary.free_riders),
+            ):
+                unknown = sorted(set(names) - ids)
+                if unknown:
+                    raise ValueError(
+                        f"adversary.{role} names unknown clients "
+                        f"{unknown} (no arrival group generates them)"
+                    )
+
+    def _check_fault_windows(self) -> None:
+        """Paired fault kinds must form well-nested windows: every heal
+        closes an open window for the same target, a fail never re-opens
+        one, and at most one partition is open at a time."""
+        timeline = sorted(
+            (
+                ev for ev in self.events
+                if ev.kind in PAIRED_EVENT_KINDS or ev.kind in _HEAL_TO_FAIL
+            ),
+            key=lambda e: e.at,
+        )
+        open_windows: set[tuple[str, str]] = set()
+        open_partition: Optional[str] = None
+        for ev in timeline:
+            if ev.kind in PAIRED_EVENT_KINDS:      # a fail kind
+                key = (ev.kind, ev.target)
+                if key in open_windows:
+                    raise ValueError(
+                        f"{ev.kind} at t={ev.at}: window for "
+                        f"{ev.target or 'tracker'!r} is already open "
+                        "(heal it before failing it again)"
+                    )
+                if ev.kind == "partition":
+                    if open_partition is not None:
+                        raise ValueError(
+                            f"partition at t={ev.at}: partition "
+                            f"{open_partition!r} is still open (only one "
+                            "may be open at a time)"
+                        )
+                    open_partition = ev.target
+                open_windows.add(key)
+            else:                                  # a heal kind
+                fail_kind = _HEAL_TO_FAIL[ev.kind]
+                key = (fail_kind, ev.target)
+                if key not in open_windows:
+                    raise ValueError(
+                        f"{ev.kind} at t={ev.at} has no matching open "
+                        f"{fail_kind} window for {ev.target or 'tracker'!r}"
+                    )
+                open_windows.discard(key)
+                if ev.kind == "partition_heal":
+                    open_partition = None
 
     def _check_torrent_ref(self, torrent: Optional[str], what: str) -> None:
         if torrent is None:
@@ -677,6 +865,22 @@ class ScenarioSpec:
                 return self._manifest(group.torrent).name
         raise ValueError(f"no arrival group generates peer {peer_id!r}")
 
+    def resolve_poisoners(self) -> tuple:
+        """The concrete poisoner id set: the explicit ``poisoners`` list
+        unioned with a deterministic evenly-strided sample of
+        ``poisoner_frac`` of the population (sorted ids, so the pick never
+        depends on any RNG)."""
+        adv = self.adversary
+        if adv is None or not adv.enabled:
+            return ()
+        out = set(adv.poisoners)
+        if adv.poisoner_frac > 0.0:
+            ids = sorted(self._peer_ids())
+            k = int(round(adv.poisoner_frac * len(ids)))
+            if k > 0:
+                out.update(ids[(i * len(ids)) // k] for i in range(k))
+        return tuple(sorted(out))
+
     # ------------------------------------------------------------- (de)serialise
     def to_dict(self) -> dict:
         return {
@@ -697,6 +901,9 @@ class ScenarioSpec:
             ),
             "repair": self.repair.to_dict() if self.repair else None,
             "fleet": self.fleet.to_dict() if self.fleet else None,
+            "adversary": (
+                self.adversary.to_dict() if self.adversary else None
+            ),
         }
 
     @classmethod
@@ -705,7 +912,7 @@ class ScenarioSpec:
             "name", "seed", "content", "fabric", "policy", "swarm",
             "topology", "arrivals", "events", "byte_upload_slots",
             "byte_origin_slots", "byte_max_rounds", "telemetry", "repair",
-            "fleet",
+            "fleet", "adversary",
         }
         unknown = sorted(set(data) - known)
         if unknown:
@@ -748,6 +955,9 @@ class ScenarioSpec:
         fleet = data.get("fleet")
         if fleet is not None:
             kwargs["fleet"] = FleetSpec.from_dict(fleet)
+        adv = data.get("adversary")
+        if adv is not None:
+            kwargs["adversary"] = AdversarySpec.from_dict(adv)
         return cls(**kwargs)
 
     def to_json(self, indent: int = 1) -> str:
@@ -881,11 +1091,27 @@ class ScenarioSpec:
                         recorder if recorder is not None else NULL_RECORDER
                     ),
                     torrent=name,
+                    demand=(
+                        _time_demand_source(sim)
+                        if self.repair.prioritize == "demand" else None
+                    ),
                 )
                 sim.repair = ctrl
                 _install_repair_timer(
                     sim, ctrl, shared_net, self.repair.scan_interval
                 )
+        if self.adversary is not None and self.adversary.enabled:
+            # validated single-torrent, so there is exactly one sim
+            sim = next(iter(sims.values()))
+            sim.adversary = AdversaryState(
+                poisoners=self.resolve_poisoners(),
+                poison_rate=self.adversary.poison_rate,
+                free_riders=self.adversary.free_riders,
+                seed=self.adversary.seed,
+            )
+            sim.quarantine = Quarantine(
+                self.adversary.ban_threshold, self.adversary.parole_after
+            )
         sampler = None
         if tel is not None and tel.enabled and tel.metrics:
             sampler = MetricsSampler(
@@ -985,7 +1211,23 @@ class ScenarioSpec:
                         recorder if recorder is not None else NULL_RECORDER
                     ),
                     torrent=name,
+                    demand=(
+                        _byte_demand_source(swarm)
+                        if self.repair.prioritize == "demand" else None
+                    ),
                 )
+        if self.adversary is not None and self.adversary.enabled:
+            # validated single-torrent, so there is exactly one swarm
+            swarm = next(iter(sims.values()))
+            swarm.adversary = AdversaryState(
+                poisoners=self.resolve_poisoners(),
+                poison_rate=self.adversary.poison_rate,
+                free_riders=self.adversary.free_riders,
+                seed=self.adversary.seed,
+            )
+            swarm.quarantine = Quarantine(
+                self.adversary.ban_threshold, self.adversary.parole_after
+            )
         sampler = None
         if tel is not None and tel.enabled and tel.metrics:
             sampler = MetricsSampler(
@@ -1016,11 +1258,21 @@ class ScenarioSpec:
                 "fleet engine does not support the repair tier yet (the "
                 "array model has no per-replica stores to re-seed)"
             )
+        if self.adversary is not None and self.adversary.enabled:
+            raise ValueError(
+                "fleet engine does not support the adversary tier yet (the "
+                "array model has no per-piece verification to fail)"
+            )
         for ev in self.events:
             if ev.kind == "corrupt_once":
                 raise ValueError(
                     "corrupt_once is object-engine only (the fleet engine "
                     "moves no real bytes to corrupt)"
+                )
+            if ev.kind in ADVERSARIAL_EVENT_KINDS:
+                raise ValueError(
+                    f"{ev.kind} events are object-engine only (the fleet "
+                    "engine has no tracker/partition model)"
                 )
             if ev.kind in UNTARGETED_EVENT_KINDS:
                 raise ValueError(
@@ -1110,6 +1362,37 @@ def _time_demand_pred(sim: WebSeedSwarmSim):
     return _live
 
 
+def _time_demand_source(sim: WebSeedSwarmSim):
+    """Per-piece live-demand vector for demand-prioritized repair: how many
+    arrived, still-downloading clients are missing each piece. Pure
+    observation (no RNG, no mutation)."""
+    def _demand() -> np.ndarray:
+        want = np.zeros(sim.metainfo.num_pieces, dtype=np.int64)
+        for a in sim.agents.values():
+            if a.is_origin or a.departed or a.complete:
+                continue
+            want += ~a.bitfield.as_array()
+        return want
+    return _demand
+
+
+def _byte_demand_source(swarm: LocalSwarm):
+    """Byte-engine twin of :func:`_time_demand_source` (partial-download
+    masks respected: a piece a peer never wanted is not demand)."""
+    def _demand() -> np.ndarray:
+        want = np.zeros(swarm.metainfo.num_pieces, dtype=np.int64)
+        for pid, a in swarm.peers.items():
+            if pid in swarm.departed or swarm._peer_done(pid):
+                continue
+            missing = ~a.bitfield.as_array()
+            mask = swarm.needed.get(pid)
+            if mask is not None:
+                missing = missing & mask
+            want += missing
+        return want
+    return _demand
+
+
 def _time_event_cb(sim: WebSeedSwarmSim, ev: EventSpec):
     def _fire(now: float) -> None:
         if ev.kind == "mirror_fail":
@@ -1122,6 +1405,14 @@ def _time_event_cb(sim: WebSeedSwarmSim, ev: EventSpec):
             sim.churn_storm(ev.count, ev.spread, ev.seed, now)
         elif ev.kind == "pod_fail":
             sim.fail_pod(ev.pod, now)
+        elif ev.kind == "tracker_fail":
+            sim.tracker_fail(now)
+        elif ev.kind == "tracker_heal":
+            sim.tracker_heal(now)
+        elif ev.kind == "partition":
+            sim.start_partition(ev.target, now)
+        elif ev.kind == "partition_heal":
+            sim.heal_partition(now)
         # faults change the replica map: restart the repair scan timer if
         # it had wound down on a quiescent swarm
         ensure = getattr(sim, "_repair_ensure", None)
@@ -1141,6 +1432,18 @@ def _install_repair_timer(sim, ctrl, net, interval: float) -> None:
     state = {"stopped": False}
 
     def _scan(now: float) -> None:
+        if sim.tracker.failed:
+            # dark tracker: the availability map is stale/unreachable, so
+            # don't scan — just keep the timer alive while the swarm can
+            # still make progress (tracker_heal restarts a wound-down one)
+            if sim._pending_arrivals > 0 or any(
+                not a.is_origin and not a.departed and not a.is_seed
+                for a in sim.agents.values()
+            ):
+                net.schedule(now + interval, _scan)
+            else:
+                state["stopped"] = True
+            return
         scheduled = ctrl.scan(now)
         active = (
             scheduled > 0
@@ -1311,6 +1614,15 @@ class CompiledScenario:
             if getattr(s, "repair", None) is not None
         }
 
+    @property
+    def quarantines(self):
+        """torrent name -> Quarantine (empty when the adversary tier is
+        off; the fleet engine never has one)."""
+        return {
+            n: s.quarantine for n, s in self.sims.items()
+            if getattr(s, "quarantine", None) is not None
+        }
+
     # ------------------------------------------------------------- run
     def run(self, until: float = float("inf")) -> ScenarioResult:
         if self.engine == "time":
@@ -1466,6 +1778,14 @@ class CompiledScenario:
                         swarm.heal_mirror(ev.target)
                     elif ev.kind == "pod_fail":
                         swarm.fail_pod(ev.pod)
+                    elif ev.kind == "tracker_fail":
+                        swarm.tracker_fail()
+                    elif ev.kind == "tracker_heal":
+                        swarm.tracker_heal()
+                    elif ev.kind == "partition":
+                        swarm.start_partition(ev.target)
+                    elif ev.kind == "partition_heal":
+                        swarm.heal_partition()
                 pending.remove(ev)
             moved = 0
             for swarm in self.sims.values():
@@ -1479,7 +1799,10 @@ class CompiledScenario:
             if self.sampler is not None and rounds % every == 0:
                 self.sampler.sample(float(rounds))
             idle = idle + 1 if moved == 0 else 0
-            if idle > max_idle:
+            if idle > max_idle and not pending:
+                # a swarm waiting out a fault window (dark tracker,
+                # partition) is not stalled while heal events remain;
+                # byte_max_rounds still bounds the run
                 raise RuntimeError(
                     "scenario stalled (byte engine: no eligible transfer)"
                 )

@@ -352,6 +352,114 @@ class FairShareLedger:
         return out
 
 
+# --------------------------------------------------------------------------- quarantine
+
+
+class Quarantine:
+    """Hash-fail quarantine: ban Byzantine peers, price the poisoned waste.
+
+    Engine-independent policy core of the adversarial-resilience tier.
+    Verify failures attributed to a serving *peer* (mirrors keep their own
+    verified-failover path) are counted here; a peer reaching
+    ``ban_threshold`` strikes is banned — engines then evict it from the
+    tracker's handout index, drop its mesh connections, and stop selecting
+    it as a source. ``parole_after`` (sim-seconds in the time engine,
+    rounds in the byte engine) re-admits a banned peer after a cooling-off
+    window; parolees return one strike below the threshold, so a single
+    re-offense deterministically re-bans. ``parole_after=0`` makes bans
+    permanent. Deterministic: no RNG, no wall clock, iteration-order free.
+    """
+
+    def __init__(self, ban_threshold: int = 3,
+                 parole_after: float = 0.0) -> None:
+        if ban_threshold < 1:
+            raise ValueError("ban_threshold must be >= 1")
+        if parole_after < 0:
+            raise ValueError("parole_after must be >= 0")
+        self.ban_threshold = int(ban_threshold)
+        self.parole_after = float(parole_after)
+        self.fails: dict[str, int] = {}      # peer -> strike count
+        self.banned: dict[str, float] = {}   # peer -> ban sim-time
+        self.wasted_bytes = 0.0              # poisoned bytes thrown away
+        self.bans = 0
+        self.paroles = 0
+
+    def record_failure(self, peer_id: str, nbytes: float,
+                       now: float) -> bool:
+        """One verify failure attributed to ``peer_id``; ledger the wasted
+        bytes. True iff this strike newly bans the peer — in-flight pieces
+        of an already-banned peer settle without re-banning."""
+        self.wasted_bytes += float(nbytes)
+        if peer_id in self.banned:
+            return False
+        n = self.fails.get(peer_id, 0) + 1
+        self.fails[peer_id] = n
+        if n >= self.ban_threshold:
+            self.banned[peer_id] = now
+            self.bans += 1
+            return True
+        return False
+
+    def is_banned(self, peer_id: str) -> bool:
+        return peer_id in self.banned
+
+    def due_parole(self, now: float) -> list[str]:
+        """Pop and return (sorted) the banned peers whose parole window has
+        elapsed; callers re-admit them engine-side (tracker re-insert,
+        reconnect). Parolees keep ``ban_threshold - 1`` strikes."""
+        if self.parole_after <= 0:
+            return []
+        due = sorted(
+            p for p, t0 in self.banned.items()
+            if now - t0 >= self.parole_after
+        )
+        for p in due:
+            del self.banned[p]
+            self.fails[p] = self.ban_threshold - 1
+            self.paroles += 1
+        return due
+
+    def summary(self) -> dict:
+        """The adversary ledger ``bench_adversarial`` pins at tolerance 0."""
+        return {
+            "bans": self.bans,
+            "paroles": self.paroles,
+            "banned_now": sorted(self.banned),
+            "wasted_bytes": self.wasted_bytes,
+        }
+
+
+class AdversaryState:
+    """Runtime identity of the scenario's Byzantine population.
+
+    Wired onto an engine by the scenario builder (None => no adversary,
+    every check short-circuits). ``poisoners`` corrupt the pieces they
+    serve over the peer protocol (every upload at ``poison_rate=1``, a
+    seeded-RNG fraction below that — the RNG is dedicated, so the engine's
+    own stream is untouched and runs without adversaries stay
+    bit-identical). ``free_riders`` never serve: the time engine gives
+    them a zero-slot choker, the byte engine skips them as trade sources.
+    """
+
+    def __init__(self, poisoners=(), poison_rate: float = 1.0,
+                 free_riders=(), seed: int = 0) -> None:
+        if not 0.0 < poison_rate <= 1.0:
+            raise ValueError("poison_rate must be in (0, 1]")
+        self.poisoners = frozenset(poisoners)
+        self.poison_rate = float(poison_rate)
+        self.free_riders = frozenset(free_riders)
+        self.rng = np.random.default_rng(seed)
+        self.poisoned_pieces = 0
+
+    def poisons(self, peer_id: str) -> bool:
+        """Does this upload by ``peer_id`` get corrupted in flight?"""
+        if peer_id not in self.poisoners:
+            return False
+        if self.poison_rate >= 1.0:
+            return True
+        return bool(self.rng.random() < self.poison_rate)
+
+
 # --------------------------------------------------------------------------- peer planning
 
 

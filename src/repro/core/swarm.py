@@ -16,6 +16,7 @@ Two engines share the same piece/choke/selection logic:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Iterable, Optional, Sequence
 
 import numpy as np
@@ -261,6 +262,15 @@ class SwarmSim:
         # builder (None => every repair code path is inert and the run is
         # bit-identical to a repair-free build)
         self.repair = None
+        # adversarial tier, also wired by the scenario builder: None for
+        # both means every Byzantine/quarantine code path is inert
+        self.adversary = None
+        self.quarantine = None
+        # tracker-outage state: clients whose announce went dark and are
+        # in the capped-exponential re-announce loop, plus departures whose
+        # ``stopped`` announce is queued for the heal
+        self._reannounce_pending: set[str] = set()
+        self._dark_departed: list[str] = []
         self.agents: dict[str, PeerAgent] = {}
         self._origin_payload = origin_payload
         self._tick_scheduled = False
@@ -298,6 +308,21 @@ class SwarmSim:
         store = None
         if self._origin_payload is not None:
             store = dict(self._origin_payload) if is_origin else {}
+        choker_cfg = ChokerConfig(
+            max_unchoked=self.cfg.max_unchoked,
+            optimistic_slots=self.cfg.optimistic_slots,
+            interval=self.cfg.choke_interval,
+        )
+        if (
+            not is_origin and self.adversary is not None
+            and peer_id in self.adversary.free_riders
+        ):
+            # free-riders take without giving: a zero-slot choker never
+            # unchokes anyone, so no neighbor can ever request from them
+            choker_cfg = ChokerConfig(
+                max_unchoked=0, optimistic_slots=0,
+                interval=self.cfg.choke_interval,
+            )
         agent = PeerAgent(
             peer_id,
             self.metainfo,
@@ -306,11 +331,7 @@ class SwarmSim:
             policy=self.cfg.policy,
             pipeline=self.cfg.pipeline,
             per_peer_requests=self.cfg.per_peer_requests,
-            choker_cfg=ChokerConfig(
-                max_unchoked=self.cfg.max_unchoked,
-                optimistic_slots=self.cfg.optimistic_slots,
-                interval=self.cfg.choke_interval,
-            ),
+            choker_cfg=choker_cfg,
             store=store,
         )
         self.agents[peer_id] = agent
@@ -345,13 +366,19 @@ class SwarmSim:
         agent.node = self.net.add_node(spec.peer_id, spec.up_bps, spec.down_bps)
         agent.arrived_at = now
         agent.seed_linger = spec.seed_linger  # type: ignore[attr-defined]
-        peer_list = self.tracker.announce(
-            self.metainfo, spec.peer_id, uploaded=0, downloaded=0,
-            event="started", now=now, want_peers=self.cfg.max_neighbors,
-        )
-        self.tracker.attach_bitfield(
-            self.metainfo, spec.peer_id, agent.bitfield
-        )
+        if self.tracker.failed:
+            # control plane dark: bootstrap from the engine's cached swarm
+            # membership and queue a backoff re-announce for the heal
+            peer_list = self._cached_peer_list(spec.peer_id)
+            self._mark_dark(spec.peer_id, now)
+        else:
+            peer_list = self.tracker.announce(
+                self.metainfo, spec.peer_id, uploaded=0, downloaded=0,
+                event="started", now=now, want_peers=self.cfg.max_neighbors,
+            )
+            self.tracker.attach_bitfield(
+                self.metainfo, spec.peer_id, agent.bitfield
+            )
         if self.telemetry.enabled:
             self.telemetry.emit(
                 "peer_join", t=now, torrent=self.metainfo.name,
@@ -370,8 +397,15 @@ class SwarmSim:
         self._launch(agent, now)
 
     def _filter_peer_list(self, agent: PeerAgent, peer_list: list[str]) -> list[str]:
-        """Hook for drivers to restrict tracker peer lists (identity here)."""
-        return peer_list
+        """Hook for drivers to restrict tracker peer lists. The base filter
+        drops peers on the far side of an open partition (identity when no
+        partition is open); subclasses layer locality on top."""
+        if not self.net.partitioned:
+            return peer_list
+        return [
+            p for p in peer_list
+            if self.net.reachable_names(agent.peer_id, p)
+        ]
 
     def _ensure_tick(self, now: float) -> None:
         if not self._tick_scheduled:
@@ -379,6 +413,9 @@ class SwarmSim:
             self.net.schedule(now + self.cfg.choke_interval, self._choke_tick)
 
     def _choke_tick(self, now: float) -> None:
+        if self.quarantine is not None:
+            for pid in self.quarantine.due_parole(now):
+                self._parole_peer(pid, now)
         self._rechoke_all(now)
         live_leech = any(
             not a.is_seed and not a.departed for a in self.agents.values()
@@ -415,6 +452,24 @@ class SwarmSim:
                 if newly:
                     self._launch(other, now)
 
+    def _serviceable_availability(self, agent: PeerAgent):
+        """Availability as seen through peers that will actually serve:
+        free-riding neighbors hold replicas nobody can fetch (a zero-slot
+        choker never unchokes), so their haves must not mask the HTTP
+        fallback — or a piece held only by a free-rider starves the whole
+        swarm. None (use the agent's own view) when no adversary is
+        declared, keeping adversary-free runs on the untouched code path."""
+        if self.adversary is None or not self.adversary.free_riders:
+            return None
+        avail = agent.availability.copy()
+        for pid in self.adversary.free_riders:
+            if pid == agent.peer_id or pid not in agent.neighbors:
+                continue
+            rider = self.agents.get(pid)
+            if rider is not None:
+                avail -= rider.bitfield.as_array().astype(avail.dtype)
+        return np.maximum(avail, 0)
+
     def _launch(self, agent: PeerAgent, now: float) -> None:
         if agent.departed or agent.node is None:
             return
@@ -422,6 +477,8 @@ class SwarmSim:
             src = self.agents[req.src]
             if src.node is None or src.node.failed:
                 continue
+            if not self.net.reachable_names(req.src, agent.peer_id):
+                continue  # cross-partition request: retry inside the side
             agent.in_flight.setdefault(req.piece, req.src)
             size = self.metainfo.piece_size(req.piece)
             self.net.start_flow(
@@ -450,9 +507,27 @@ class SwarmSim:
             self.cfg.corruption_prob > 0
             and self.rng.random() < self.cfg.corruption_prob
         )
-        if corrupt and data is not None:
+        # Byzantine poisoning: the serving peer corrupts the bytes on the
+        # wire (its at-rest replica stays good — quarantine, not
+        # read-repair, is the cure for a poisoner)
+        poisoned = (
+            not corrupt and self.adversary is not None
+            and src is not None and not src.is_origin
+            and self.adversary.poisons(src_id)
+        )
+        if poisoned:
+            self.adversary.poisoned_pieces += 1
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "piece_poisoned", t=now, torrent=self.metainfo.name,
+                    client=dst_id, origin=src_id, piece=piece,
+                    nbytes=float(flow.size),
+                )
+        if (corrupt or poisoned) and data is not None:
             data = bytes([data[0] ^ 0xFF]) + data[1:]  # verification will catch it
-        accepted = dst.accept_piece(piece, src_id, data, now, corrupt=corrupt)
+        accepted = dst.accept_piece(
+            piece, src_id, data, now, corrupt=corrupt or poisoned
+        )
         self.scheduler.on_piece_done(
             dst_id, piece, accepted=accepted,
             latency=(now - flow.start_time) if accepted else None,
@@ -464,7 +539,7 @@ class SwarmSim:
                 self.repair.note_done(dst_id, piece, tier, float(flow.size),
                                       now)
             elif (
-                not corrupt and dst.last_reject_verify
+                not corrupt and not poisoned and dst.last_reject_verify
                 and src is not None and not src.is_origin
             ):
                 # read-repair: the data was bad at rest (no in-flight
@@ -488,6 +563,15 @@ class SwarmSim:
                     client=dst_id, origin=src_id, piece=piece,
                     info="verify" if dst.last_reject_verify else "duplicate",
                 )
+        if (
+            self.quarantine is not None and not accepted
+            and dst.last_reject_verify
+            and src is not None and not src.is_origin
+        ):
+            # verify failure attributed to the serving source: strike it,
+            # and ban once it crosses the threshold
+            if self.quarantine.record_failure(src_id, float(flow.size), now):
+                self._ban_peer(src_id, now)
         if src is not None and not src.departed:
             src.record_served(piece, dst_id, now)
             self._announce_counters(src, now)
@@ -518,11 +602,15 @@ class SwarmSim:
                 self._launch(other, now)
         if dst.complete and dst.completed_at is None:
             dst.completed_at = now
-            self.tracker.announce(
-                self.metainfo, dst_id,
-                uploaded=dst.ledger.uploaded, downloaded=dst.ledger.downloaded,
-                event="completed", now=now,
-            )
+            if self.tracker.failed:
+                self._mark_dark(dst_id, now)
+            else:
+                self.tracker.announce(
+                    self.metainfo, dst_id,
+                    uploaded=dst.ledger.uploaded,
+                    downloaded=dst.ledger.downloaded,
+                    event="completed", now=now,
+                )
             if self.telemetry.enabled:
                 self.telemetry.emit(
                     "peer_complete", t=now, torrent=self.metainfo.name,
@@ -558,6 +646,8 @@ class SwarmSim:
         self._launch(dst, now)
 
     def _announce_counters(self, agent: PeerAgent, now: float) -> None:
+        if self.tracker.failed:
+            return  # counters refresh on the next successful announce
         self.tracker.announce(
             self.metainfo, agent.peer_id,
             uploaded=agent.ledger.uploaded, downloaded=agent.ledger.downloaded,
@@ -575,11 +665,17 @@ class SwarmSim:
                 info="post_complete" if agent.completed_at is not None
                 else "mid_download",
             )
-        self.tracker.announce(
-            self.metainfo, agent.peer_id,
-            uploaded=agent.ledger.uploaded, downloaded=agent.ledger.downloaded,
-            event="stopped", now=now,
-        )
+        if self.tracker.failed:
+            # the stopped announce can't land: queue it for the heal so the
+            # tracker's membership reconciles once the control plane is back
+            self._dark_departed.append(agent.peer_id)
+        else:
+            self.tracker.announce(
+                self.metainfo, agent.peer_id,
+                uploaded=agent.ledger.uploaded,
+                downloaded=agent.ledger.downloaded,
+                event="stopped", now=now,
+            )
         if agent.node is not None:
             self.net.fail_node(agent.node)
         for pid in list(agent.neighbors):
@@ -627,6 +723,253 @@ class SwarmSim:
                 )
         return victims
 
+    # ------------------------------------------------------------- quarantine
+    def _ban_peer(self, peer_id: str, now: float) -> None:
+        """Quarantine a Byzantine peer: the tracker stops handing it out
+        (and its replicas stop counting), its mesh links tear down, and its
+        remaining upload flows abort — but its node stays up. A banned peer
+        may keep *downloading* through the HTTP tier: it is quarantined as
+        a source, not executed."""
+        self.tracker.ban_peer(self.metainfo, peer_id)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_banned", t=now, torrent=self.metainfo.name,
+                client=peer_id,
+                value=float(self.quarantine.fails.get(peer_id, 0)),
+            )
+        agent = self.agents.get(peer_id)
+        if agent is None or agent.departed:
+            return
+        # tear down the mesh FIRST, then abort its in-flight uploads: the
+        # abort handlers relaunch the victims immediately, and they must
+        # not find the banned peer still in their neighbor lists. Its own
+        # downloads settle normally — late verify failures on them are
+        # attributed to *their* source, not re-counted against this peer
+        for pid in list(agent.neighbors):
+            other = self.agents.get(pid)
+            if other is not None:
+                other.disconnect(peer_id)
+            agent.disconnect(pid)
+        for flow in list(self.net.flows.values()):
+            if flow.tag[0] == peer_id:
+                self.net.abort_flow(flow)
+        self._launch(agent, now)   # keep its download going via HTTP
+
+    def _parole_peer(self, peer_id: str, now: float) -> None:
+        """Timed parole: re-admit a banned peer — tracker re-insert plus a
+        fresh announce to rejoin the mesh. It re-enters one strike short of
+        the threshold, so a single re-offense deterministically re-bans."""
+        self.tracker.parole_peer(self.metainfo, peer_id)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_parole", t=now, torrent=self.metainfo.name,
+                client=peer_id,
+            )
+        agent = self.agents.get(peer_id)
+        if agent is not None and not agent.departed:
+            self._reconnect(agent, now)
+
+    def _reconnect(self, agent: PeerAgent, now: float) -> None:
+        """Fresh ``started`` announce + connect to the handed-out peers
+        (parole re-admission, tracker recovery, partition heal). Falls back
+        to the dark-tracker retry loop when the control plane is down."""
+        if self.tracker.failed:
+            self._mark_dark(agent.peer_id, now)
+            return
+        peer_list = self.tracker.announce(
+            self.metainfo, agent.peer_id,
+            uploaded=agent.ledger.uploaded,
+            downloaded=agent.ledger.downloaded,
+            event="started", now=now, want_peers=self.cfg.max_neighbors,
+        )
+        self.tracker.attach_bitfield(
+            self.metainfo, agent.peer_id, agent.bitfield
+        )
+        for other_id in self._filter_peer_list(agent, peer_list):
+            if other_id in agent.neighbors:
+                continue
+            other = self.agents.get(other_id)
+            if other is None or other.departed:
+                continue
+            if len(agent.neighbors) >= self.cfg.max_neighbors:
+                break
+            agent.connect(other_id, other.bitfield)
+            other.connect(agent.peer_id, agent.bitfield)
+        self._rechoke_all(now)
+        self._ensure_tick(now)
+        self._launch(agent, now)
+
+    # ------------------------------------------------------------- tracker outages
+    # re-announce backoff: the delay doubles per failed attempt up to the
+    # cap; the per-client jitter is a crc32 hash fraction (deterministic,
+    # no engine RNG) so the fleet never thunders back in lockstep
+    TRACKER_RETRY_BASE = 5.0
+    TRACKER_RETRY_CAP = 60.0
+
+    def _retry_delay(self, peer_id: str, attempt: int) -> float:
+        base = min(self.TRACKER_RETRY_BASE * (2.0 ** attempt),
+                   self.TRACKER_RETRY_CAP)
+        jitter = base * 0.5 * (
+            (zlib.crc32(peer_id.encode()) % 1000) / 1000.0
+        )
+        return base + jitter
+
+    def tracker_fail(self, now: float) -> None:
+        """Control-plane outage: announces stop landing. Clients keep
+        trading on their current mesh (the data plane is untouched),
+        arrivals bootstrap from the engine's cached peer list, and every
+        client that misses an announce enters the capped-exponential
+        re-announce loop."""
+        self.tracker.failed = True
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "tracker_fail", t=now, torrent=self.metainfo.name,
+                info="tracker",
+            )
+
+    def tracker_heal(self, now: float) -> None:
+        """Control plane back: flush the ``stopped`` announces that went
+        dark; live clients re-register through their backoff retries."""
+        self.tracker.failed = False
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "tracker_heal", t=now, torrent=self.metainfo.name,
+                info="tracker",
+            )
+        for pid in self._dark_departed:
+            agent = self.agents.get(pid)
+            self.tracker.announce(
+                self.metainfo, pid,
+                uploaded=agent.ledger.uploaded if agent else 0.0,
+                downloaded=agent.ledger.downloaded if agent else 0.0,
+                event="stopped", now=now,
+            )
+        self._dark_departed.clear()
+
+    def _cached_peer_list(self, peer_id: str) -> list[str]:
+        """Peer-list fallback while the tracker is dark: the last known
+        live swarm membership (sorted, capped), minus banned peers."""
+        q = self.quarantine
+        out = [
+            pid for pid in sorted(self.agents)
+            if pid != peer_id
+            and not self.agents[pid].departed
+            and not self.agents[pid].is_origin
+            and (q is None or not q.is_banned(pid))
+        ]
+        return out[: self.cfg.max_neighbors]
+
+    def _mark_dark(self, peer_id: str, now: float) -> None:
+        """This client missed an announce during a tracker outage: it will
+        re-announce with capped exponential backoff until one lands."""
+        if peer_id in self._reannounce_pending:
+            return
+        self._reannounce_pending.add(peer_id)
+        self.net.schedule(
+            now + self._retry_delay(peer_id, 0),
+            lambda t, p=peer_id: self._reannounce_fire(p, t, 0),
+        )
+
+    def _reannounce_fire(self, peer_id: str, now: float,
+                         attempt: int) -> None:
+        agent = self.agents.get(peer_id)
+        if agent is None or agent.departed:
+            self._reannounce_pending.discard(peer_id)
+            return
+        if self.tracker.failed:
+            nxt = attempt + 1
+            if self.telemetry.enabled:
+                self.telemetry.emit(
+                    "retry", t=now, torrent=self.metainfo.name,
+                    client=peer_id,
+                    value=self._retry_delay(peer_id, nxt), info="tracker",
+                )
+            self.net.schedule(
+                now + self._retry_delay(peer_id, nxt),
+                lambda t, p=peer_id, k=nxt: self._reannounce_fire(p, t, k),
+            )
+            return
+        self._reannounce_pending.discard(peer_id)
+        self._reconnect(agent, now)
+
+    # ------------------------------------------------------------- partitions
+    def _reachable_names_from(
+        self, src: str, names: list[str]
+    ) -> list[str]:
+        """Filter a name list down to the endpoints ``src`` can reach
+        (identity when no partition is open)."""
+        if not self.net.partitioned:
+            return names
+        return [n for n in names if self.net.reachable_names(src, n)]
+
+    def _partition_sides(self, target: str) -> tuple[dict[str, int], int]:
+        """name -> side map for a partition target. ``"spine"`` cuts every
+        pod from every other pod and from the core (mirrors and unmapped
+        nodes); ``"pods:1,3"`` isolates the named pod set — internally
+        connected — from the rest of the fabric."""
+        if target == "spine":
+            sides = {}
+            for node in self.net.nodes:
+                pod = self._pod(node.name)
+                if pod is not None:
+                    sides[node.name] = pod
+            return sides, -1
+        if target.startswith("pods:"):
+            body = target[len("pods:"):]
+            pods = {int(p) for p in body.split(",") if p != ""}
+            sides = {}
+            for node in self.net.nodes:
+                pod = self._pod(node.name)
+                if pod is not None and pod in pods:
+                    sides[node.name] = 1
+            return sides, 0
+        raise ValueError(f"unknown partition target {target!r}")
+
+    def start_partition(self, target: str, now: float) -> None:
+        """Data-plane partition: cut the spine or isolate a pod set. The
+        cross-side mesh tears down first, then every in-flight cross-side
+        flow aborts (victims retry inside their side), and origin/mirror
+        selection filters to reachable endpoints until
+        :meth:`heal_partition`."""
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "partition", t=now, torrent=self.metainfo.name, info=target,
+            )
+        sides, default = self._partition_sides(target)
+        # prune the mesh before cutting the network, so the abort handlers'
+        # relaunches only ever see same-side neighbors
+        for pid, agent in self.agents.items():
+            if agent.departed:
+                continue
+            for oid in list(agent.neighbors):
+                if sides.get(pid, default) != sides.get(oid, default):
+                    agent.disconnect(oid)
+                    other = self.agents.get(oid)
+                    if other is not None and pid in other.neighbors:
+                        other.disconnect(pid)
+        self.net.set_partition(sides, default=default)
+        self._rechoke_all(now)
+        for pid in sorted(self.agents):
+            agent = self.agents[pid]
+            if not agent.departed and not agent.is_origin \
+                    and not agent.complete:
+                self._launch(agent, now)
+
+    def heal_partition(self, now: float) -> None:
+        """Partition heals: clear the cut and reconnect every live
+        incomplete client through a fresh announce, so the sides reconcile
+        (repair scans re-balance replicas on the next pass)."""
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "partition_heal", t=now, torrent=self.metainfo.name,
+            )
+        self.net.clear_partition()
+        for pid in sorted(self.agents):
+            agent = self.agents[pid]
+            if agent.departed or agent.is_origin or agent.complete:
+                continue
+            self._reconnect(agent, now)
+
     # ------------------------------------------------------------- repair
     def repair_fetch(self, piece: int, now: float) -> "Optional[str]":
         """Repair-controller hook: start one re-seed transfer of ``piece``.
@@ -642,10 +985,13 @@ class SwarmSim:
     def _repair_dst(self, piece: int):
         """Lexicographically first live non-origin client that lacks
         ``piece`` and has no transfer of it in flight (deterministic)."""
+        q = self.quarantine
         for pid in sorted(self.agents):
             a = self.agents[pid]
             if a.is_origin or a.departed or a.node is None:
                 continue
+            if q is not None and q.is_banned(pid):
+                continue  # a banned replica wouldn't count anyway
             if piece in a.bitfield or piece in a.in_flight:
                 continue
             return a
@@ -658,6 +1004,10 @@ class SwarmSim:
             src = self.agents[sid]
             if sid == dst.peer_id or src.departed or src.node is None \
                     or src.node.failed:
+                continue
+            if not self.net.reachable_names(sid, dst.peer_id):
+                continue
+            if self.quarantine is not None and self.quarantine.is_banned(sid):
                 continue
             if piece not in src.bitfield:
                 continue
@@ -804,6 +1154,17 @@ class LocalSwarm:
         # builder; None => all repair paths inert)
         self.repair = None
         self._repair_settle: list[tuple[str, int, str, float]] = []
+        # adversarial tier (wired by the scenario builder; every code path
+        # below is inert while these stay None/empty)
+        self.adversary = None
+        self.quarantine = None
+        self.banned: set[str] = set()
+        # control-plane outage: the repair control loop pauses while dark;
+        # the full-mesh data plane keeps trading
+        self.tracker_dark = False
+        # open partition: name -> side id (None => no partition)
+        self._partition: Optional[dict[str, int]] = None
+        self._partition_default = 0
         if mirrors is not None and webseed is None:
             raise ValueError("mirrors requires a webseed OriginPolicy")
         if pod_caches and webseed is None:
@@ -960,6 +1321,131 @@ class LocalSwarm:
             self.fail_peer(pid)
         return victims
 
+    # ------------------------------------------------------------- quarantine
+    def _ban_peer(self, pid: str) -> None:
+        """Quarantine a Byzantine peer: its mesh links tear down (it stops
+        serving and trading peer-side), its replicas stop counting, and it
+        finishes its own download through the HTTP tier."""
+        if pid in self.banned:
+            return
+        self.banned.add(pid)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_banned", t=float(self.rounds),
+                torrent=self.metainfo.name, client=pid,
+                value=float(self.quarantine.fails.get(pid, 0))
+                if self.quarantine is not None else None,
+            )
+        me = self.peers[pid]
+        if self._pod_have is not None:
+            pod = self.pod_of.get(pid)
+            if pod is not None and pod in self._pod_have:
+                self._pod_have[pod] -= me.bitfield.as_array()
+        everyone = {**self.peers, "origin": self.origin}
+        for oid, other in everyone.items():
+            if oid != pid and pid in other.neighbors:
+                other.disconnect(pid)
+        for oid in list(me.neighbors):
+            me.disconnect(oid)
+
+    def _parole_peer(self, pid: str) -> None:
+        """Timed parole: reconnect a banned peer to the mesh; its replicas
+        count again. It re-enters one strike short of the threshold, so a
+        single re-offense deterministically re-bans."""
+        if pid not in self.banned:
+            return
+        self.banned.discard(pid)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "peer_parole", t=float(self.rounds),
+                torrent=self.metainfo.name, client=pid,
+            )
+        me = self.peers[pid]
+        if self._pod_have is not None:
+            pod = self.pod_of.get(pid)
+            if pod is not None and pod in self._pod_have:
+                self._pod_have[pod] += me.bitfield.as_array()
+        origin_in_mesh = (
+            self.webseed is None or self.webseed.serve_peer_protocol
+        )
+        everyone = dict(self.peers)
+        if origin_in_mesh:
+            everyone["origin"] = self.origin
+        for oid, other in everyone.items():
+            if oid == pid or oid in self.departed or oid in self.banned:
+                continue
+            me.connect(oid, other.bitfield)
+            other.connect(pid, me.bitfield)
+
+    # ------------------------------------------------------------- tracker outages
+    def tracker_fail(self) -> None:
+        """Byte-domain control-plane outage: the repair control loop (the
+        availability consumer) pauses; the full-mesh data plane — already
+        bootstrapped — keeps trading."""
+        self.tracker_dark = True
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "tracker_fail", t=float(self.rounds),
+                torrent=self.metainfo.name, info="tracker",
+            )
+
+    def tracker_heal(self) -> None:
+        self.tracker_dark = False
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "tracker_heal", t=float(self.rounds),
+                torrent=self.metainfo.name, info="tracker",
+            )
+
+    # ------------------------------------------------------------- partitions
+    def _partition_sides(self, target: str) -> tuple[dict[str, int], int]:
+        """name -> side map mirroring the time engine's semantics:
+        ``"spine"`` puts every pod on its own side with mirrors on the core
+        side; ``"pods:1,3"`` isolates the named pod set from the rest."""
+        if target == "spine":
+            sides = {
+                n: p for n, p in self.pod_of.items() if p is not None
+            }
+            return sides, -1
+        if target.startswith("pods:"):
+            body = target[len("pods:"):]
+            pods = {int(p) for p in body.split(",") if p != ""}
+            sides = {
+                n: 1 for n, p in self.pod_of.items()
+                if p is not None and p in pods
+            }
+            return sides, 0
+        raise ValueError(f"unknown partition target {target!r}")
+
+    def _same_side(self, a: str, b: str) -> bool:
+        if self._partition is None:
+            return True
+        d = self._partition_default
+        return self._partition.get(a, d) == self._partition.get(b, d)
+
+    def start_partition(self, target: str) -> None:
+        """Open a partition: cross-side trades, range reads, and cache
+        fills are refused until :meth:`heal_partition`. Round-based rounds
+        have no in-flight window, so there is nothing to abort — the side
+        filters take effect on the next trade attempt."""
+        if self._partition is not None:
+            raise RuntimeError("a partition is already open")
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "partition", t=float(self.rounds),
+                torrent=self.metainfo.name, info=target,
+            )
+        self._partition, self._partition_default = \
+            self._partition_sides(target)
+
+    def heal_partition(self) -> None:
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "partition_heal", t=float(self.rounds),
+                torrent=self.metainfo.name,
+            )
+        self._partition = None
+
     # ------------------------------------------------------------- repair
     def repair_availability(self) -> np.ndarray:
         """Live replica count per piece: the live origin tier (mirrors, or
@@ -971,7 +1457,7 @@ class LocalSwarm:
         )
         out = np.full(self.metainfo.num_pieces, base, dtype=np.int64)
         for pid, a in self.peers.items():
-            if pid not in self.departed:
+            if pid not in self.departed and pid not in self.banned:
                 out += a.bitfield.as_array()
         return out
 
@@ -985,7 +1471,8 @@ class LocalSwarm:
         the controller registers the schedule."""
         dst = None
         for pid in sorted(self.peers):
-            if pid in self.departed or piece in self.peers[pid].bitfield:
+            if pid in self.departed or pid in self.banned \
+                    or piece in self.peers[pid].bitfield:
                 continue
             dst = pid
             break
@@ -998,13 +1485,15 @@ class LocalSwarm:
         data, tier, src_name = None, None, None
         if self.origin_set is not None:
             for name in self.origin_set.ranked():
+                if not self._same_side(dst, name):
+                    continue
                 d = self.origin_set.origins[name].read_piece(piece)
                 self.origin.record_served(piece, dst, t)
                 self._count_cross_pod(name, dst, size)
                 if d is not None and self.metainfo.verify_piece(piece, d):
                     data, tier, src_name = d, "origin", name
                     break
-        else:
+        elif self._same_side(dst, "origin"):
             d = self.origin.read_piece(piece)
             if d is not None and self.metainfo.verify_piece(piece, d):
                 data, tier, src_name = d, "origin", "origin"
@@ -1020,7 +1509,9 @@ class LocalSwarm:
                     data, tier, src_name = d, "pod_cache", cache.name
         if data is None:
             for sid in sorted(self.peers):
-                if sid == dst or sid in self.departed:
+                if sid == dst or sid in self.departed \
+                        or sid in self.banned \
+                        or not self._same_side(dst, sid):
                     continue
                 src = self.peers[sid]
                 if piece not in src.bitfield:
@@ -1054,8 +1545,8 @@ class LocalSwarm:
         """One controller scan at a round boundary. Byte-domain re-seeds
         complete within the scan, so the queued settlements flush as soon
         as the controller has registered them; returns pieces repaired."""
-        if self.repair is None:
-            return 0
+        if self.repair is None or self.tracker_dark:
+            return 0  # dark tracker: no availability map to scan against
         self.repair.scan(float(self.rounds))
         settled = len(self._repair_settle)
         for dst, piece, tier, size in self._repair_settle:
@@ -1116,8 +1607,8 @@ class LocalSwarm:
 
     def _note_gain(self, pid: str, piece: int) -> None:
         """Keep the pod-local availability counters fresh on piece intake."""
-        if self._pod_have is None:
-            return
+        if self._pod_have is None or pid in self.banned:
+            return  # a banned peer's gains count again at parole
         pod = self.pod_of.get(pid)
         if pod is not None and pod in self._pod_have:
             self._pod_have[pod][piece] += 1
@@ -1139,6 +1630,8 @@ class LocalSwarm:
         size = self.metainfo.piece_size(piece)
         tel = self.telemetry
         for name in self.origin_set.ranked():
+            if not self._same_side(cache.name, name):
+                continue  # the mirror tier is across the partition
             if name in cache.bad_mirrors.get(piece, ()):
                 continue
             mirror = self.origin_set.origins[name]
@@ -1177,6 +1670,28 @@ class LocalSwarm:
             del cache.bad_mirrors[piece]
         return False
 
+    def _serviceable_availability(self, me: PeerAgent, base):
+        """Free-riders hold replicas nobody can trade for: subtract their
+        haves from the fallback's availability view so the pieces they
+        monopolize stay HTTP-eligible (the time engine does the same
+        through :meth:`SwarmSim._serviceable_availability`). ``base`` is
+        the pod-local view when a cache tier is up, else None (the agent's
+        own view); returned unchanged when no adversary is declared."""
+        if self.adversary is None or not self.adversary.free_riders:
+            return base
+        avail = (base if base is not None else me.availability).copy()
+        my_pod = self.pod_of.get(me.peer_id)
+        for rid in self.adversary.free_riders:
+            if (rid == me.peer_id or rid in self.departed
+                    or rid in self.banned):
+                continue
+            if base is not None and self.pod_of.get(rid) != my_pod:
+                continue  # pod-local view only counts same-pod holders
+            rider = self.peers.get(rid)
+            if rider is not None:
+                avail -= rider.bitfield.as_array().astype(avail.dtype)
+        return np.maximum(avail, 0)
+
     def _http_fetch(self, me: PeerAgent, pid: str) -> Optional[int]:
         """One verified range read from the origin fabric; returns the
         piece on success, None when nothing is eligible or every endpoint's
@@ -1193,8 +1708,13 @@ class LocalSwarm:
             (a for a in self.scheduler.next_actions(ClientView(
                 agent=me, peer_path=False, http_slots=1, cache=cache,
                 mask=self.needed.get(pid),
-                availability=(
-                    self._local_availability(me) if self.pod_caches else None
+                availability=self._serviceable_availability(
+                    me,
+                    # a banned peer is cut from the pod mesh: its fallback
+                    # eligibility keys off its own (empty) neighborhood, or
+                    # it could never finish
+                    self._local_availability(me)
+                    if self.pod_caches and pid not in self.banned else None,
                 ),
                 round_based=True,
             )) if a.kind == "http"),
@@ -1206,6 +1726,12 @@ class LocalSwarm:
         size = self.metainfo.piece_size(piece)
         tel = self.telemetry
         for origin in req.targets:
+            if (
+                self._partition is not None
+                and not isinstance(origin, PodCacheOrigin)
+                and not self._same_side(pid, origin.name)
+            ):
+                continue  # mirror across the partition: unreachable
             if isinstance(origin, PodCacheOrigin):
                 if not self._fill_cache(origin, piece):
                     continue
@@ -1236,7 +1762,10 @@ class LocalSwarm:
                 )
                 # the hedge duplicate is origin service too: it must clear
                 # the cross-torrent gate or the request runs unhedged
-                if hedge is not None and self.scheduler.fair_allow(
+                if hedge is not None and (
+                    self._partition is None
+                    or self._same_side(pid, hedge.name)
+                ) and self.scheduler.fair_allow(
                     hedge.name, size
                 ):
                     return self._http_fetch_hedged(
@@ -1345,6 +1874,9 @@ class LocalSwarm:
         self.rounds += 1
         for pid in self._deferred_departures.pop(self.rounds, []):
             self.fail_peer(pid)
+        if self.quarantine is not None:
+            for pid in self.quarantine.due_parole(float(self.rounds)):
+                self._parole_peer(pid)
         budget = {pid: self.upload_slots for pid in self.peers}
         budget["origin"] = self.origin_slots
         http_budget = self.webseed.max_concurrent if self.webseed else 0
@@ -1383,6 +1915,18 @@ class LocalSwarm:
                     sources.sort(
                         key=lambda kv: self.pod_of.get(kv[0]) != my_pod
                     )
+                if self.adversary is not None and self.adversary.free_riders:
+                    # free-riders never serve (the byte engine has no
+                    # choker, so the exclusion is the leverage mechanism)
+                    sources = [
+                        (oid, nb) for oid, nb in sources
+                        if oid not in self.adversary.free_riders
+                    ]
+                if self._partition is not None:
+                    sources = [
+                        (oid, nb) for oid, nb in sources
+                        if self._same_side(pid, oid)
+                    ]
                 got = None
                 for oid, nb in sources:
                     piece = self.scheduler.select_peer_piece(
@@ -1394,6 +1938,24 @@ class LocalSwarm:
                     data = src.read_piece(piece)
                     if data is None:
                         continue
+                    # Byzantine poisoning: the serving peer corrupts the
+                    # bytes on the wire; its at-rest replica stays good
+                    poisoned = (
+                        self.adversary is not None and oid != "origin"
+                        and self.adversary.poisons(oid)
+                    )
+                    if poisoned:
+                        data = bytes([data[0] ^ 0xFF]) + data[1:]
+                        self.adversary.poisoned_pieces += 1
+                        if self.telemetry.enabled:
+                            self.telemetry.emit(
+                                "piece_poisoned", t=float(self.rounds),
+                                torrent=self.metainfo.name, client=pid,
+                                origin=oid, piece=piece,
+                                nbytes=float(
+                                    self.metainfo.piece_size(piece)
+                                ),
+                            )
                     if self.telemetry.enabled:
                         self.telemetry.emit(
                             "request_issued", t=float(self.rounds),
@@ -1420,7 +1982,7 @@ class LocalSwarm:
                                 info="peer",
                             )
                     else:
-                        if self.repair is not None \
+                        if self.repair is not None and not poisoned \
                                 and me.last_reject_verify and oid != "origin":
                             # read-repair: the peer's at-rest replica is
                             # poisoned — evict it before it spreads
@@ -1443,6 +2005,17 @@ class LocalSwarm:
                                 info="verify" if me.last_reject_verify
                                 else "duplicate",
                             )
+                        if self.quarantine is not None \
+                                and me.last_reject_verify \
+                                and oid != "origin":
+                            # verify failure attributed to the source:
+                            # strike it, ban past the threshold
+                            if self.quarantine.record_failure(
+                                oid,
+                                float(self.metainfo.piece_size(piece)),
+                                float(self.rounds),
+                            ):
+                                self._ban_peer(oid)
                     break
                 if got is None and self.web_origin is not None and http_budget > 0:
                     got = self._http_fetch(me, pid)

@@ -68,6 +68,13 @@ TRACE_EVENT_KINDS: tuple[str, ...] = (
     "repair_scheduled",   # the repair controller queued a re-seed of a piece
     "repair_done",        # a scheduled re-seed landed (info: serving tier)
     "repair_evict",       # read-repair evicted a corrupt replica (info: holder)
+    "piece_poisoned",     # a Byzantine peer served a corrupted piece
+    "peer_banned",        # quarantine banned a peer past the hash-fail threshold
+    "peer_parole",        # a banned peer's timed parole elapsed; it rejoined
+    "tracker_fail",       # the tracker went dark (control plane down)
+    "tracker_heal",       # the tracker came back; clients re-announce
+    "partition",          # the network partitioned (info: target spec)
+    "partition_heal",     # the partition healed; sides reconcile
 )
 
 # Kinds that constitute the engine-independent "skeleton" of a download:
@@ -442,6 +449,17 @@ class TraceChecker:
       ``peer_join`` (clients without one, e.g. pod caches, are exempt).
     - **I7 repair causality** — every ``repair_done`` has a prior
       ``repair_scheduled`` for the same (torrent, client, piece).
+    - **I8 banned-peer silence** — after a ``peer_banned`` for peer P and
+      until a ``peer_parole`` for P, no ``piece_done`` or
+      ``request_issued`` may name P as its serving origin (quarantined
+      peers receive no handouts and serve no bytes).
+    - **I9 paired fault windows** — ``tracker_heal`` requires an open
+      ``tracker_fail`` window for the same target, ``partition_heal`` an
+      open ``partition``; re-opening an already-open window is a violation.
+    - **I10 partition isolation** — while a partition is open, no
+      ``piece_done`` may cross it. Requires ``pod_of`` (entity name ->
+      pod index; unlisted entities, e.g. mirrors, count as the spineside
+      core). Skipped when ``pod_of`` is not supplied.
     """
 
     def __init__(self, trace: "TraceRecorder | Iterable[TraceEvent]") -> None:
@@ -449,7 +467,8 @@ class TraceChecker:
         self.events: list[TraceEvent] = list(events)
 
     def check(self, *, hedge_cancelled_bytes: Optional[float] = None,
-              rel_tol: float = 1e-6) -> list[str]:
+              rel_tol: float = 1e-6,
+              pod_of: Optional[dict[str, int]] = None) -> list[str]:
         """Return a list of violation strings (empty == trace is clean)."""
         problems: list[str] = []
         dead: dict[str, float] = {}
@@ -459,7 +478,20 @@ class TraceChecker:
         fired: set[tuple] = set()
         fair_last: dict[tuple, float] = {}
         repair_sched: set[tuple] = set()
+        banned: dict[str, float] = {}
+        tracker_dark: dict[str, float] = {}
+        partition_open: Optional[str] = None
         cancelled_total = 0.0
+
+        def _side(entity: Optional[str], target: str) -> int:
+            """Which partition side ``entity`` is on under ``target``
+            (``"spine"`` or ``"pods:i,j"``). Unlisted entities are the
+            core (side -1 for spine cuts, side 0 for pod isolation)."""
+            pod = (pod_of or {}).get(entity or "", -1)
+            if target == "spine":
+                return pod
+            isolated = {int(p) for p in target.split(":", 1)[1].split(",")}
+            return 1 if pod in isolated else 0
 
         for i, ev in enumerate(self.events):
             where = f"event[{i}] t={ev.t:g} {ev.kind}"
@@ -476,6 +508,39 @@ class TraceChecker:
                 dead.pop(ev.origin, None)
             elif ev.kind == "peer_join":
                 join_t.setdefault(ckey, ev.t)
+            elif ev.kind == "peer_banned" and ev.client is not None:
+                banned[ev.client] = ev.t
+            elif ev.kind == "peer_parole" and ev.client is not None:
+                banned.pop(ev.client, None)
+            elif ev.kind == "tracker_fail":
+                tkey = ev.info or "tracker"
+                if tkey in tracker_dark:
+                    problems.append(
+                        f"{where}: tracker_fail for {tkey!r} while already "
+                        f"dark since t={tracker_dark[tkey]:g}"
+                    )
+                tracker_dark[tkey] = ev.t
+            elif ev.kind == "tracker_heal":
+                tkey = ev.info or "tracker"
+                if tkey not in tracker_dark:
+                    problems.append(
+                        f"{where}: tracker_heal for {tkey!r} without an "
+                        "open tracker_fail window"
+                    )
+                tracker_dark.pop(tkey, None)
+            elif ev.kind == "partition":
+                if partition_open is not None:
+                    problems.append(
+                        f"{where}: partition while one is already open "
+                        f"({partition_open!r})"
+                    )
+                partition_open = ev.info or "spine"
+            elif ev.kind == "partition_heal":
+                if partition_open is None:
+                    problems.append(
+                        f"{where}: partition_heal without an open partition"
+                    )
+                partition_open = None
 
             if ev.kind in ("request_issued", "hedge_fired", "piece_done",
                            "cache_fill") and ev.origin in dead:
@@ -483,6 +548,22 @@ class TraceChecker:
                     f"{where}: traffic to dead mirror {ev.origin!r} "
                     f"(failed at t={dead[ev.origin]:g}, piece={ev.piece})"
                 )
+            if ev.kind in ("request_issued", "piece_done") \
+                    and ev.origin in banned:
+                problems.append(
+                    f"{where}: traffic served by banned peer {ev.origin!r} "
+                    f"(banned at t={banned[ev.origin]:g}, piece={ev.piece})"
+                )
+            if partition_open is not None and pod_of is not None \
+                    and ev.kind == "piece_done" and ev.origin is not None:
+                cs = _side(ev.client, partition_open)
+                os_ = _side(ev.origin, partition_open)
+                if cs != os_:
+                    problems.append(
+                        f"{where}: cross-partition bytes "
+                        f"({ev.origin!r} side {os_} -> {ev.client!r} "
+                        f"side {cs}, partition {partition_open!r})"
+                    )
 
             key = (ev.torrent, ev.client, ev.piece)
             if ev.kind == "request_issued":

@@ -33,6 +33,7 @@ class PeerRecord:
     is_origin: bool = False
     is_web_seed: bool = False    # exposes an HTTP byte-range endpoint
     peer_protocol: bool = True   # False => never handed out in peer lists
+    banned: bool = False         # quarantined: no handouts, no availability
     http_uploaded: float = 0.0   # payload bytes served via HTTP range requests
     hedge_cancelled: float = 0.0  # bytes this endpoint spent on losing hedges
     tier: str = "peer"           # egress tier: "origin" | "pod_cache" | "peer"
@@ -99,6 +100,10 @@ class Tracker:
         self.rng = rng or np.random.default_rng(0)
         self.topology = topology
         self.same_pod_frac = same_pod_frac
+        # control-plane outage flag (tracker_fail/tracker_heal events):
+        # engines stop announcing while dark and fall back to cached peer
+        # lists; the tracker itself keeps its state frozen
+        self.failed = False
         self._swarms: dict[bytes, dict[str, PeerRecord]] = {}
         # infohash -> peer_id -> live Bitfield view (availability accounting)
         self._bitfields: dict[bytes, dict[str, object]] = {}
@@ -202,7 +207,7 @@ class Tracker:
             # original insertion-order slot, so handouts after a heal are
             # identical to the old whole-swarm filter's
             rec.left = False
-            if rec.peer_protocol and peer_id not in pos:
+            if rec.peer_protocol and not rec.banned and peer_id not in pos:
                 k = bisect.bisect_left(
                     order, seqno[peer_id], key=lambda q: seqno[q]
                 )
@@ -230,6 +235,49 @@ class Tracker:
         if p >= 0:
             return [order[i if i < p else i + 1] for i in idx]
         return [order[i] for i in idx]
+
+    # ------------------------------------------------------------- quarantine
+    def ban_peer(self, metainfo: MetaInfo, peer_id: str) -> None:
+        """Quarantine ``peer_id``: evict it from the handout index (same
+        splice as a ``stopped`` announce) and from availability accounting.
+        The record itself stays — its counters keep ledgering, and ``left``
+        is untouched so the engine keeps deciding session liveness."""
+        swarm = self._swarm(metainfo)
+        rec = swarm.get(peer_id)
+        if rec is None or rec.banned:
+            return
+        rec.banned = True
+        ih = metainfo.info_hash
+        pos = self._pos[ih]
+        order = self._order[ih]
+        k = pos.pop(peer_id, None)
+        if k is not None:
+            order.pop(k)
+            for pid in order[k:]:
+                pos[pid] -= 1
+        self._uncount(ih, peer_id)
+
+    def parole_peer(self, metainfo: MetaInfo, peer_id: str) -> None:
+        """Lift a quarantine: re-insert the peer into the handout index at
+        its original insertion-order slot (same bisect as a ``started``
+        re-announce) and let the next availability sync re-count it."""
+        swarm = self._swarm(metainfo)
+        rec = swarm.get(peer_id)
+        if rec is None or not rec.banned:
+            return
+        rec.banned = False
+        ih = metainfo.info_hash
+        pos = self._pos[ih]
+        order = self._order[ih]
+        seqno = self._seqno[ih]
+        if rec.peer_protocol and not rec.left and peer_id not in pos:
+            k = bisect.bisect_left(
+                order, seqno[peer_id], key=lambda q: seqno[q]
+            )
+            order.insert(k, peer_id)
+            for pid in order[k:]:
+                pos[pid] = k
+                k += 1
 
     # ------------------------------------------------------------- availability
     def attach_bitfield(
@@ -274,7 +322,7 @@ class Tracker:
         counted = self._counted[ih]
         for peer_id, bf in self._bitfields.get(ih, {}).items():
             rec = swarm.get(peer_id)
-            live = rec is not None and not rec.left
+            live = rec is not None and not rec.left and not rec.banned
             entry = counted.get(peer_id)
             if not live:
                 if entry is not None:
@@ -318,7 +366,7 @@ class Tracker:
         out = np.zeros(metainfo.num_pieces, dtype=np.int64)
         for peer_id, bf in self._bitfields.get(metainfo.info_hash, {}).items():
             rec = swarm.get(peer_id)
-            if rec is None or rec.left:
+            if rec is None or rec.left or rec.banned:
                 continue
             if not include_origins and (rec.is_origin or rec.is_web_seed):
                 continue

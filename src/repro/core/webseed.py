@@ -476,6 +476,29 @@ class WebSeedSwarmSim(SwarmSim):
         self._cache_by_name: dict[str, PodCacheOrigin] = {}
         self.origin_id: Optional[str] = None      # primary mirror (back-compat)
         self._http_outstanding: dict[str, int] = {}
+        # mirrors healed while the tracker was dark: their re-register
+        # announce is queued for the tracker heal
+        self._dark_healed_mirrors: list[str] = []
+
+    # ------------------------------------------------------------- tracker outages
+    def tracker_heal(self, now: float) -> None:
+        super().tracker_heal(now)
+        for name in self._dark_healed_mirrors:
+            if name not in self.origin_set.origins:
+                continue
+            agent = self.agents.get(name)
+            if agent is None or agent.departed:
+                continue  # failed again while dark; its fail was queued too
+            mirror = self.origin_set.origins[name]
+            self.tracker.announce(
+                self.metainfo, name,
+                uploaded=agent.ledger.uploaded,
+                downloaded=0.0, event="started", now=now,
+                is_origin=True, is_web_seed=True,
+                http_uploaded=mirror.http_uploaded,
+                hedge_cancelled=mirror.hedge_cancelled,
+            )
+        self._dark_healed_mirrors.clear()
 
     @property
     def web_origin(self) -> Optional[WebSeedOrigin]:
@@ -605,6 +628,10 @@ class WebSeedSwarmSim(SwarmSim):
             agent.departed = False
             if agent.node is not None:
                 agent.node.failed = False
+        if self.tracker.failed:
+            # the re-register announce can't land: queue it for the heal
+            self._dark_healed_mirrors.append(name)
+            return
         mirror = self.origin_set.origins[name]
         self.tracker.announce(
             self.metainfo, name,
@@ -627,12 +654,15 @@ class WebSeedSwarmSim(SwarmSim):
             cache.have[:] = False
             if cache.store is not None:
                 cache.store.clear()
-            self.tracker.announce(
-                self.metainfo, cache.name, uploaded=0.0,
-                downloaded=cache.fill_downloaded, event="stopped", now=now,
-                http_uploaded=cache.http_uploaded, tier="pod_cache",
-                pod=pod,
-            )
+            if self.tracker.failed:
+                self._dark_departed.append(cache.name)
+            else:
+                self.tracker.announce(
+                    self.metainfo, cache.name, uploaded=0.0,
+                    downloaded=cache.fill_downloaded, event="stopped",
+                    now=now, http_uploaded=cache.http_uploaded,
+                    tier="pod_cache", pod=pod,
+                )
         victims = sorted(
             pid for pid, a in self.agents.items()
             if not a.is_origin and not a.departed and self._pod(pid) == pod
@@ -656,7 +686,10 @@ class WebSeedSwarmSim(SwarmSim):
             return None
         targets: list[WebSeedOrigin] = list(self.scheduler.ranked_origins(
             dst.peer_id,
-            names=self.tracker.mirror_list(self.metainfo, dst.peer_id),
+            names=self._reachable_names_from(
+                dst.peer_id,
+                self.tracker.mirror_list(self.metainfo, dst.peer_id),
+            ),
             live=self._origin_live,
         ))
         cache = self._live_cache(dst)
@@ -673,6 +706,7 @@ class WebSeedSwarmSim(SwarmSim):
         """With a cache tier, the peer mesh goes pod-local: the cache is the
         pod's doorway to the rest of the fabric, so cross-pod bytes are fill
         traffic only (attach caches before peers arrive)."""
+        peer_list = super()._filter_peer_list(agent, peer_list)
         if not self.caches:
             return peer_list
         pod = self._pod(agent.peer_id)
@@ -706,7 +740,10 @@ class WebSeedSwarmSim(SwarmSim):
         # the tracker discovery scan its ranking would never consult
         names = None
         if cache is None or self.policy.cache_spillover:
-            names = self.tracker.mirror_list(self.metainfo, agent.peer_id)
+            names = self._reachable_names_from(
+                agent.peer_id,
+                self.tracker.mirror_list(self.metainfo, agent.peer_id),
+            )
         return ClientView(
             agent=agent,
             peer_path=False,
@@ -714,6 +751,7 @@ class WebSeedSwarmSim(SwarmSim):
             cache=cache,
             mirror_names=names,
             origin_live=self._origin_live,
+            availability=self._serviceable_availability(agent),
         )
 
     def _launch_http(self, agent: PeerAgent, now: float) -> None:
@@ -875,9 +913,11 @@ class WebSeedSwarmSim(SwarmSim):
             dst = self.agents.get(agent.peer_id)
             if (
                 dst is None or dst.departed or src_node.failed
+                or not self.net.reachable_names(src_node.name, agent.peer_id)
                 or dst.in_flight.get(piece) != expect
             ):
-                # endpoint vanished during the latency window
+                # endpoint vanished (or was partitioned away) during the
+                # latency window
                 dst = self._finish_http_request(origin, agent.peer_id, piece)
                 self.scheduler.hedge_loser(agent.peer_id, piece, origin.name)
                 if dst is not None and dst.in_flight.get(piece) == src_tag:
@@ -923,7 +963,8 @@ class WebSeedSwarmSim(SwarmSim):
                 or dst.in_flight.get(piece) != primary_tag
             ):
                 return                       # primary already resolved
-            if not self._origin_live(hedge.name):
+            if not self._origin_live(hedge.name) \
+                    or not self.net.reachable_names(dst.peer_id, hedge.name):
                 return
             if not self.scheduler.try_admit(
                 hedge, self.metainfo.piece_size(piece)
@@ -980,7 +1021,10 @@ class WebSeedSwarmSim(SwarmSim):
             (o.name, self.agents[o.name])
             for o in self.scheduler.ranked_origins(
                 cache.name,
-                names=self.tracker.mirror_list(self.metainfo, cache.name),
+                names=self._reachable_names_from(
+                    cache.name,
+                    self.tracker.mirror_list(self.metainfo, cache.name),
+                ),
                 live=self._origin_live,
             )
         ]
@@ -1013,7 +1057,8 @@ class WebSeedSwarmSim(SwarmSim):
                     mirror.release()
                     cache.fill_from.pop(piece, None)
                     return
-                if magent.node.failed:
+                if magent.node.failed \
+                        or not self.net.reachable_names(name, cache.name):
                     mirror.release()
                     cache.fill_from.pop(piece, None)
                     if self.telemetry.enabled:
@@ -1158,6 +1203,8 @@ class WebSeedSwarmSim(SwarmSim):
         return cache if cache is not None else self.origin_set.origins[name]
 
     def _announce_mirror(self, name: str, now: float) -> None:
+        if self.tracker.failed:
+            return
         magent = self.agents.get(name)
         mirror = self.origin_set.origins[name]
         self.tracker.announce(
@@ -1169,6 +1216,8 @@ class WebSeedSwarmSim(SwarmSim):
         )
 
     def _announce_cache(self, cache: PodCacheOrigin, now: float) -> None:
+        if self.tracker.failed:
+            return
         self.tracker.announce(
             self.metainfo, cache.name, uploaded=0.0,
             downloaded=cache.fill_downloaded, event="update", now=now,

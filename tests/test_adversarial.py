@@ -1,0 +1,478 @@
+"""Adversarial resilience: quarantine, tracker outages, partitions.
+
+Covers the policy core (Quarantine strike/ban/parole edges), the tracker
+index surgery (ban splice + parole re-insert bit-identity), the spec
+layer (AdversarySpec round-trip, S2 timeline validation), the telemetry
+invariants (I8 banned silence, I9 paired windows, I10 partition
+isolation), and end-to-end runs on both object engines.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdversarySpec,
+    ArrivalSpec,
+    ContentSpec,
+    EventSpec,
+    FabricSpec,
+    ManifestSpec,
+    MetaInfo,
+    MirrorSpec,
+    OriginPolicy,
+    Quarantine,
+    RepairSpec,
+    ScenarioSpec,
+    SwarmConfig,
+    TelemetrySpec,
+    TopologySpec,
+    Tracker,
+    TraceChecker,
+    TraceEvent,
+)
+
+
+def adv_spec(**over) -> ScenarioSpec:
+    base = dict(
+        content=ContentSpec(manifests=(
+            ManifestSpec("ds", 1 << 21, 1 << 17, payload="random"),
+        )),
+        fabric=FabricSpec(mirrors=(MirrorSpec("origin", up_bps=8e6),)),
+        arrivals=(ArrivalSpec(kind="flash", n=6, up_bps=2e6, down_bps=4e6),),
+        policy=OriginPolicy(swarm_fraction=1.0, origin_up_bps=8e6),
+        swarm=SwarmConfig(max_neighbors=8),
+        seed=3,
+    )
+    base.update(over)
+    return ScenarioSpec(**base)
+
+
+def corrupt_stores(sim) -> int:
+    mi = sim.metainfo
+    return sum(
+        1
+        for pid, a in sim.agents.items()
+        if pid not in sim.origin_set.origins and a.store is not None
+        for i, d in a.store.items()
+        if not mi.verify_piece(i, d)
+    )
+
+
+# ------------------------------------------------------------- policy core
+
+
+def test_quarantine_strikes_ban_at_threshold():
+    q = Quarantine(ban_threshold=3)
+    assert not q.record_failure("p", 100.0, now=1.0)
+    assert not q.record_failure("p", 100.0, now=2.0)
+    assert q.record_failure("p", 100.0, now=3.0)   # third strike bans
+    assert q.is_banned("p")
+    assert q.bans == 1
+    assert q.wasted_bytes == 300.0
+
+
+def test_quarantine_inflight_settles_without_reban():
+    """A piece already on the wire when the ban lands still fails verify —
+    counted as waste, but not a second ban."""
+    q = Quarantine(ban_threshold=1)
+    assert q.record_failure("p", 64.0, now=1.0)
+    assert not q.record_failure("p", 64.0, now=1.0)  # settling flow
+    assert q.bans == 1
+    assert q.wasted_bytes == 128.0
+
+
+def test_quarantine_parole_one_strike_short():
+    q = Quarantine(ban_threshold=2, parole_after=10.0)
+    q.record_failure("p", 1.0, now=0.0)
+    assert q.record_failure("p", 1.0, now=1.0)
+    assert q.due_parole(5.0) == []          # window not elapsed
+    assert q.due_parole(11.0) == ["p"]
+    assert not q.is_banned("p")
+    assert q.paroles == 1
+    # parolee re-enters at threshold-1: one re-offense re-bans
+    assert q.record_failure("p", 1.0, now=12.0)
+    assert q.is_banned("p")
+    assert q.bans == 2
+
+
+def test_quarantine_permanent_ban_without_parole():
+    q = Quarantine(ban_threshold=1, parole_after=0.0)
+    q.record_failure("p", 1.0, now=0.0)
+    assert q.due_parole(1e9) == []
+    assert q.is_banned("p")
+
+
+# ------------------------------------------------------------- tracker index
+
+
+def _tracker_with_peers(seed: int, n: int = 30):
+    mi = MetaInfo.from_bytes(b"z" * 4096, 1024)
+    tr = Tracker(rng=np.random.default_rng(seed))
+    tr.register(mi)
+    for i in range(n):
+        tr.announce(mi, f"p{i:02d}", uploaded=0, downloaded=0,
+                    event="started")
+    return mi, tr
+
+
+def test_ban_then_parole_restores_handout_bit_identity():
+    """Ban splices the O(sample) index, parole bisect-re-inserts at the
+    original seqno slot: after the round trip every handout must be
+    bit-identical to a never-banned tracker with the same RNG."""
+    mi_a, tr_a = _tracker_with_peers(seed=5)
+    mi_b, tr_b = _tracker_with_peers(seed=5)
+    tr_b.ban_peer(mi_b, "p07")
+    tr_b.parole_peer(mi_b, "p07")
+    for i in range(30):
+        pid = f"p{i:02d}"
+        a = tr_a.announce(mi_a, pid, uploaded=0, downloaded=0,
+                          want_peers=10)
+        b = tr_b.announce(mi_b, pid, uploaded=0, downloaded=0,
+                          want_peers=10)
+        assert a == b, pid
+
+
+def test_banned_peer_excluded_from_handouts_and_availability():
+    mi, tr = _tracker_with_peers(seed=7, n=12)
+    from repro.core import Bitfield
+    bf = Bitfield(mi.num_pieces)
+    for i in range(mi.num_pieces):
+        bf.set(i)
+    tr.attach_bitfield(mi, "p03", bf)
+    before = tr.availability_map(mi).copy()
+    tr.ban_peer(mi, "p03")
+    after = tr.availability_map(mi)
+    assert (before - after == 1).all()       # its replicas stopped counting
+    for i in range(12):
+        pid = f"p{i:02d}"
+        if pid == "p03":
+            continue
+        got = tr.announce(mi, pid, uploaded=0, downloaded=0, want_peers=11)
+        assert "p03" not in got
+    # an update announce must NOT re-insert the banned peer
+    tr.announce(mi, "p03", uploaded=0, downloaded=0, event="update")
+    assert "p03" not in tr.announce(mi, "p00", uploaded=0, downloaded=0,
+                                    want_peers=11)
+
+
+# ------------------------------------------------------------- spec layer
+
+
+def test_adversary_spec_round_trip():
+    spec = adv_spec(
+        adversary=AdversarySpec(poisoners=("peer0001",),
+                                poisoner_frac=0.2, poison_rate=0.5,
+                                free_riders=("peer0002",),
+                                ban_threshold=4, parole_after=30.0, seed=9),
+        events=(EventSpec(kind="tracker_fail", at=5.0),
+                EventSpec(kind="tracker_heal", at=9.0)),
+    )
+    again = ScenarioSpec.from_json(spec.to_json())
+    assert again == spec
+
+
+def test_adversary_validation_rejects():
+    with pytest.raises(ValueError, match="both poisoner and free-rider"):
+        AdversarySpec(poisoners=("a",), free_riders=("a",))
+    with pytest.raises(ValueError, match="poisoner_frac"):
+        AdversarySpec(poisoner_frac=1.5)
+    with pytest.raises(ValueError, match="poison_rate"):
+        AdversarySpec(poison_rate=0.0)
+    with pytest.raises(ValueError, match="ban_threshold"):
+        AdversarySpec(ban_threshold=0)
+    with pytest.raises(ValueError, match="unknown clients"):
+        adv_spec(adversary=AdversarySpec(poisoners=("nobody",)))
+
+
+def test_resolve_poisoners_stride_is_deterministic():
+    spec = adv_spec(
+        arrivals=(ArrivalSpec(kind="flash", n=10, up_bps=2e6,
+                              down_bps=4e6),),
+        adversary=AdversarySpec(poisoner_frac=0.2,
+                                poisoners=("peer0003",)),
+    )
+    # evenly-strided 2 of 10 union the explicit name, sorted
+    assert spec.resolve_poisoners() == ("peer0000", "peer0003", "peer0005")
+    assert adv_spec().resolve_poisoners() == ()
+    off = adv_spec(adversary=AdversarySpec(enabled=False,
+                                           poisoner_frac=1.0))
+    assert off.resolve_poisoners() == ()
+
+
+def test_timeline_validation_heal_before_fail():
+    with pytest.raises(ValueError, match="no matching open"):
+        adv_spec(events=(EventSpec(kind="tracker_heal", at=5.0),))
+    with pytest.raises(ValueError, match="already open"):
+        adv_spec(events=(EventSpec(kind="tracker_fail", at=1.0),
+                         EventSpec(kind="tracker_fail", at=2.0)))
+    # fail -> heal -> fail -> heal is fine
+    adv_spec(events=(EventSpec(kind="tracker_fail", at=1.0),
+                     EventSpec(kind="tracker_heal", at=2.0),
+                     EventSpec(kind="tracker_fail", at=3.0),
+                     EventSpec(kind="tracker_heal", at=4.0)))
+
+
+def test_timeline_validation_partitions():
+    topo = TopologySpec(num_pods=2, hosts_per_pod=4, host_up_bps=2e6,
+                        host_down_bps=4e6, spine_bps=float("inf"))
+    def part(events):
+        return adv_spec(
+            topology=topo,
+            arrivals=(ArrivalSpec(kind="flash", n=6, up_bps=2e6,
+                                  down_bps=4e6, topology_hosts=True),),
+            events=events,
+        )
+    with pytest.raises(ValueError, match="need a topology"):
+        adv_spec(events=(EventSpec(kind="partition", at=1.0,
+                                   target="spine"),))
+    with pytest.raises(ValueError, match="undeclared pods"):
+        part((EventSpec(kind="partition", at=1.0, target="pods:5"),))
+    with pytest.raises(ValueError, match="unknown partition target"):
+        part((EventSpec(kind="partition", at=1.0, target="everything"),))
+    with pytest.raises(ValueError, match="still open"):
+        part((EventSpec(kind="partition", at=1.0, target="pods:0"),
+              EventSpec(kind="partition", at=2.0, target="pods:1")))
+    part((EventSpec(kind="partition", at=1.0, target="pods:1"),
+          EventSpec(kind="partition_heal", at=2.0, target="pods:1"),
+          EventSpec(kind="partition", at=3.0, target="spine"),
+          EventSpec(kind="partition_heal", at=4.0, target="spine")))
+
+
+def test_fleet_engine_rejects_adversarial_tier():
+    spec = adv_spec(adversary=AdversarySpec(poisoner_frac=0.2))
+    with pytest.raises(ValueError, match="adversary tier"):
+        spec.build("fleet")
+    dark = adv_spec(events=(EventSpec(kind="tracker_fail", at=1.0),
+                            EventSpec(kind="tracker_heal", at=2.0)))
+    with pytest.raises(ValueError, match="object-engine only"):
+        dark.build("fleet")
+
+
+# ------------------------------------------------------------- checker
+
+
+def test_checker_flags_banned_peer_traffic():
+    events = [
+        TraceEvent(0.0, "peer_join", torrent="t", client="bad"),
+        TraceEvent(0.0, "peer_join", torrent="t", client="v"),
+        TraceEvent(1.0, "request_issued", torrent="t", client="v",
+                   origin="bad", piece=0),
+        TraceEvent(1.5, "piece_done", torrent="t", client="v",
+                   origin="bad", piece=0),
+        TraceEvent(2.0, "peer_banned", torrent="t", client="bad"),
+        TraceEvent(3.0, "request_issued", torrent="t", client="v",
+                   origin="bad", piece=1),
+    ]
+    out = TraceChecker(events).check()
+    assert len(out) == 1 and "banned peer 'bad'" in out[0]
+    # parole lifts the silence requirement
+    events += [TraceEvent(4.0, "peer_parole", torrent="t", client="bad"),
+               TraceEvent(5.0, "request_issued", torrent="t", client="v",
+                          origin="bad", piece=2)]
+    assert TraceChecker(events).check() == out
+
+
+def test_checker_paired_windows():
+    bad = [TraceEvent(1.0, "tracker_heal", info="tracker")]
+    assert any("tracker_heal" in p for p in TraceChecker(bad).check())
+    double = [TraceEvent(1.0, "partition", info="spine"),
+              TraceEvent(2.0, "partition", info="spine")]
+    assert any("already open" in p for p in TraceChecker(double).check())
+    ok = [TraceEvent(1.0, "tracker_fail", info="tracker"),
+          TraceEvent(2.0, "tracker_heal", info="tracker"),
+          TraceEvent(3.0, "partition", info="pods:1"),
+          TraceEvent(4.0, "partition_heal", info="pods:1")]
+    assert TraceChecker(ok).check() == []
+
+
+def test_checker_partition_isolation_needs_pod_of():
+    events = [
+        TraceEvent(0.0, "peer_join", torrent="t", client="a"),
+        TraceEvent(0.0, "peer_join", torrent="t", client="b"),
+        TraceEvent(0.5, "request_issued", torrent="t", client="a",
+                   origin="b", piece=0),
+        TraceEvent(1.0, "partition", info="pods:1"),
+        TraceEvent(2.0, "piece_done", torrent="t", client="a",
+                   origin="b", piece=0),
+        TraceEvent(3.0, "partition_heal", info="pods:1"),
+    ]
+    pod_of = {"a": 0, "b": 1}
+    out = TraceChecker(events).check(pod_of=pod_of)
+    assert len(out) == 1 and "cross-partition" in out[0]
+    assert TraceChecker(events).check() == []   # skipped without pod_of
+
+
+# ------------------------------------------------------------- end to end
+
+
+def test_time_engine_poisoners_banned_everyone_completes():
+    spec = adv_spec(
+        adversary=AdversarySpec(poisoners=("peer0001",), ban_threshold=1),
+        telemetry=TelemetrySpec(enabled=True),
+    )
+    out = spec.build("time")
+    res = out.run()
+    assert next(iter(res.outcomes.values())).completed == 6
+    q = out.quarantines["ds"]
+    assert q.is_banned("peer0001") and q.bans == 1
+    assert corrupt_stores(out.sim) == 0
+    assert TraceChecker(out.recorder).check() == []
+
+
+def test_byte_engine_poisoners_banned_everyone_completes():
+    spec = adv_spec(
+        adversary=AdversarySpec(poisoners=("peer0001",), ban_threshold=1),
+    )
+    out = spec.build("byte")
+    res = out.run()
+    assert next(iter(res.outcomes.values())).completed == 6
+    q = out.quarantines["ds"]
+    assert q.is_banned("peer0001")
+    swarm = out.sim
+    mi = swarm.metainfo
+    bad = sum(1 for a in swarm.peers.values()
+              for p, d in (a.store or {}).items()
+              if not mi.verify_piece(p, d))
+    assert bad == 0
+    # the poisoner's own at-rest replicas are good (wire-level corruption)
+    assert all(mi.verify_piece(p, d)
+               for p, d in swarm.peers["peer0001"].store.items())
+
+
+def test_parole_and_reoffense_rebans():
+    # byte engine: parole windows are measured in rounds, so the timed
+    # parole -> re-offense -> re-ban cycle is fully deterministic here
+    spec = adv_spec(
+        adversary=AdversarySpec(poisoners=("peer0001",), ban_threshold=1,
+                                parole_after=2.0),
+    )
+    out = spec.build("byte")
+    res = out.run()
+    assert next(iter(res.outcomes.values())).completed == 6
+    q = out.quarantines["ds"]
+    assert q.paroles >= 1
+    assert q.bans >= 2          # re-offended straight back into the ban
+    assert q.is_banned("peer0001")
+    mi = out.sim.metainfo
+    bad = sum(1 for a in out.sim.peers.values()
+              for p, d in (a.store or {}).items()
+              if not mi.verify_piece(p, d))
+    assert bad == 0
+
+
+def test_free_riders_complete_but_serve_nothing():
+    spec = adv_spec(
+        adversary=AdversarySpec(free_riders=("peer0002",)),
+    )
+    for engine in ("time", "byte"):
+        out = spec.build(engine)
+        res = out.run()
+        assert next(iter(res.outcomes.values())).completed == 6, engine
+        agents = out.sim.agents if engine == "time" else out.sim.peers
+        assert agents["peer0002"].ledger.uploaded == 0.0, engine
+
+
+def test_tracker_outage_mid_run_completes():
+    spec = adv_spec(
+        arrivals=(ArrivalSpec(kind="staggered", n=6, up_bps=2e6,
+                              down_bps=4e6, interval=1.0),),
+        events=(EventSpec(kind="tracker_fail", at=2.0),
+                EventSpec(kind="tracker_heal", at=12.0)),
+        telemetry=TelemetrySpec(enabled=True),
+    )
+    out = spec.build("time")
+    res = out.run()
+    assert next(iter(res.outcomes.values())).completed == 6
+    assert not out.sim.tracker.failed
+    kinds = [e.kind for e in out.recorder.events]
+    assert "tracker_fail" in kinds and "tracker_heal" in kinds
+    assert TraceChecker(out.recorder).check() == []
+    out2 = spec.build("byte")
+    res2 = out2.run()
+    assert next(iter(res2.outcomes.values())).completed == 6
+
+
+def test_partition_and_heal_completes_both_engines():
+    spec = adv_spec(
+        topology=TopologySpec(num_pods=2, hosts_per_pod=4,
+                              host_up_bps=2e6, host_down_bps=4e6,
+                              spine_bps=float("inf"), same_pod_frac=0.8),
+        arrivals=(ArrivalSpec(kind="flash", n=8, up_bps=2e6, down_bps=4e6,
+                              topology_hosts=True),),
+        events=(EventSpec(kind="partition", at=2.0, target="pods:1"),
+                EventSpec(kind="partition_heal", at=10.0, target="pods:1")),
+        telemetry=TelemetrySpec(enabled=True),
+    )
+    out = spec.build("time")
+    res = out.run()
+    assert next(iter(res.outcomes.values())).completed == 8
+    assert not out.sim.net.partitioned
+    topo = spec.topology.build()
+    pod_of = {h.name: topo.addr_of(h.name).pod for h in topo.hosts()}
+    assert TraceChecker(out.recorder).check(pod_of=pod_of) == []
+    out2 = spec.build("byte")
+    res2 = out2.run()
+    assert next(iter(res2.outcomes.values())).completed == 8
+
+
+def test_adversary_disabled_is_bit_identical_to_none():
+    spec_off = adv_spec(adversary=AdversarySpec(enabled=False,
+                                                poisoner_frac=0.5))
+    spec_none = adv_spec()
+    for engine in ("time", "byte"):
+        a = spec_off.build(engine).run()
+        b = spec_none.build(engine).run()
+        oa = next(iter(a.outcomes.values()))
+        ob = next(iter(b.outcomes.values()))
+        assert oa.duration == ob.duration, engine
+        assert oa.origin_uploaded == ob.origin_uploaded, engine
+
+
+def test_demand_prioritized_repair_orders_hot_pieces_first():
+    from repro.core import RepairController
+    mi = MetaInfo.from_bytes(bytes(8 * 1 << 17), 1 << 17)   # 8 pieces
+    avail = np.array([1, 1, 1, 1, 5, 5, 5, 5], dtype=np.int64)
+    demand = np.array([0, 9, 2, 5, 0, 0, 0, 0], dtype=np.int64)
+    fetched = []
+
+    def fetch(piece, now):
+        fetched.append(piece)
+        return "dst"
+
+    ctrl = RepairController(
+        RepairSpec(target_replication=3, budget_bps=1e12,
+                   prioritize="demand"),
+        mi, availability=lambda: avail, fetch=fetch,
+        demand=lambda: demand,
+    )
+    ctrl.scan(0.0)
+    # degraded pieces 0..3, hottest demand first (9, 5, 2, 0)
+    assert fetched[0] == 1 and fetched[1] == 1   # two re-seeds to target
+    first_of = {p: fetched.index(p) for p in set(fetched)}
+    assert first_of[1] < first_of[3] < first_of[2] < first_of[0]
+
+
+def test_repair_spec_prioritize_round_trip_and_validation():
+    spec = RepairSpec(prioritize="demand")
+    assert RepairSpec.from_dict(spec.to_dict()) == spec
+    with pytest.raises(ValueError, match="prioritize"):
+        RepairSpec(prioritize="hotness")
+
+
+def test_demand_prioritized_repair_end_to_end():
+    spec = adv_spec(
+        topology=TopologySpec(num_pods=2, hosts_per_pod=4,
+                              host_up_bps=2e6, host_down_bps=4e6,
+                              spine_bps=float("inf")),
+        arrivals=(ArrivalSpec(kind="flash", n=8, up_bps=2e6, down_bps=4e6,
+                              topology_hosts=True),),
+        events=(EventSpec(kind="pod_fail", at=4.0, pod=1),),
+        repair=RepairSpec(target_replication=3, scan_interval=2.0,
+                          budget_bps=8e6, prioritize="demand"),
+    )
+    out = spec.build("time")
+    out.run()
+    ctrl = out.repairs["ds"]
+    assert ctrl.summary()["repairs_done"] > 0
